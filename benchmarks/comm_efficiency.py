@@ -1,0 +1,42 @@
+"""Communication-efficiency ledger: the paper's title claim, in bytes.
+
+Selection (GreedyFed) and compression (quant8/topk) are orthogonal ways to
+cut client<->PS traffic; this benchmark measures accuracy x total upload
+bytes for each and for the combination, on the same data/seeds.
+
+    PYTHONPATH=src python -m benchmarks.comm_efficiency
+
+(opt-in: not part of the default `benchmarks.run` table sweep)
+"""
+from __future__ import annotations
+
+from benchmarks.fl_common import run_algo
+
+SETTINGS = [
+    ("fedavg", "identity"),
+    ("fedavg", "quant8"),
+    ("fedavg", "quant8_topk"),
+    ("greedyfed", "identity"),
+    ("greedyfed", "quant8"),
+    ("greedyfed_dropout", "quant8"),
+]
+
+
+def run(*, seeds=(0,), full=False):
+    print("\n# communication efficiency "
+          "(algo,codec,acc,upload_MB,download_MB,acc_per_upload_GB)")
+    rows = []
+    for algo, codec in SETTINGS:
+        out = run_algo(algo, seeds=seeds, full=full, upload_codec=codec,
+                       privacy_sigma=0.05)  # heterogeneous regime
+        up = out.get("upload_bytes", 0) / 2**20
+        down = out.get("download_bytes", 0) / 2**20
+        eff = out["acc_mean"] / max(up / 1024, 1e-9)
+        print(f"{algo},{codec},{out['acc_mean']:.4f},{up:.1f},{down:.1f},"
+              f"{eff:.2f}")
+        rows.append((algo, codec, out["acc_mean"], up, down))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,104 @@
+"""Shared FL-benchmark machinery for the paper's tables.
+
+Scaled-down protocol (CPU container): N=30 clients, M=3, T=40 rounds,
+synthetic datasets (see data/synth.py), seeds configurable.  Full-paper
+settings (N=300, T=400) are reachable with --full; relative orderings are
+the validation target (EXPERIMENTS.md §Paper-validation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.data.synth import make_dataset
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_centralized, run_federated
+
+ALGOS = ["greedyfed", "greedyfed_dropout", "ucb", "s_fedavg", "fedavg",
+         "fedprox", "power_of_choice"]  # greedyfed_dropout = beyond-paper
+                                        # SV-feedback dropout (Sec. VI)
+
+QUICK = dict(
+    n_clients=40, m=4, rounds=35, n_train=4000, n_val=500, n_test=800,
+    eval_every=7,
+    client=ClientConfig(epochs=3, batches_per_epoch=3, batch_size=32),
+)
+FULL = dict(
+    n_clients=300, m=3, rounds=400, n_train=12000, n_val=5000, n_test=5000,
+    eval_every=50,
+    client=ClientConfig(epochs=5, batches_per_epoch=5, batch_size=32),
+)
+# synthetic-task hardness calibrated so quick-mode accuracies land mid-range
+# (~0.6-0.9) where algorithm orderings are measurable, not saturated
+DIFFICULTY = 3.0
+
+
+def run_algo(algo: str, *, dataset="mnist", seeds=(0, 1), full=False,
+             **overrides) -> dict:
+    import jax
+    # hundreds of (algo x setting x seed) configs each compile their own
+    # client_update/eval executables; without this the accumulated jit cache
+    # exhausts host memory mid-sweep (LLVM "Cannot allocate memory")
+    jax.clear_caches()
+
+    base = dict(FULL if full else QUICK)
+    client = base.pop("client")
+    base.update(overrides)   # sweep/caller settings win over the defaults
+    if algo == "fedprox":
+        client = client._replace(prox_mu=0.1)  # ClientConfig is a NamedTuple
+    accs, walls, evals = [], [], []
+    for seed in seeds:
+        cfg = FLConfig(dataset=dataset, selector=algo, seed=seed,
+                       client=client, **base)
+        data = make_dataset(dataset, n_train=cfg.n_train, n_val=cfg.n_val,
+                            n_test=cfg.n_test, seed=seed,
+                            difficulty=DIFFICULTY)
+        if algo == "centralized":
+            res = run_centralized(cfg, data=data)
+        else:
+            res = run_federated(cfg, data=data)
+        accs.append(res.final_acc)
+        walls.append(res.wall_time_s)
+        evals.append(res.shapley_evals)
+    return {
+        "algo": algo,
+        "acc_mean": float(np.mean(accs)),
+        "acc_std": float(np.std(accs)),
+        "wall_s": float(np.mean(walls)),
+        "shapley_evals": float(np.mean(evals)),
+        "curves": res.test_acc,
+        "upload_bytes": getattr(res, "upload_bytes", 0),
+        "download_bytes": getattr(res, "download_bytes", 0),
+    }
+
+
+def sweep(setting_name: str, values, algos=None, *, dataset="mnist",
+          seeds=(0, 1), full=False, **fixed):
+    """Run a table: one column per value of `setting_name`."""
+    algos = algos or ALGOS
+    rows = []
+    for algo in algos + ["centralized"]:
+        row = {"algo": algo}
+        for v in values:
+            t0 = time.time()
+            out = run_algo(algo, dataset=dataset, seeds=seeds, full=full,
+                           **fixed, **{setting_name: v})
+            row[str(v)] = (out["acc_mean"], out["acc_std"])
+            row.setdefault("wall_s", 0.0)
+            row["wall_s"] += time.time() - t0
+        rows.append(row)
+    return rows
+
+
+def print_table(title: str, rows, values) -> None:
+    print(f"\n# {title}")
+    header = "algo," + ",".join(f"{v}_mean,{v}_std" for v in map(str, values))
+    print(header)
+    for row in rows:
+        cells = [row["algo"]]
+        for v in map(str, values):
+            m, s = row[v]
+            cells += [f"{100*m:.2f}", f"{100*s:.2f}"]
+        print(",".join(cells))

@@ -1,0 +1,81 @@
+"""Micro-benchmarks: us_per_call for the Shapley hot-path implementations.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled TPU code), so wall-times are reported for
+the jit'd pure-jnp paths; the kernel's *per-call utility-eval savings*
+(serial GTG vs batched GTG) is the derived metric that transfers to TPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import tree_stack
+from repro.core.shapley import gtg_shapley
+from repro.core.shapley_batched import gtg_shapley_batched
+from repro.kernels.ce_loss.ref import ce_loss_ref
+from repro.kernels.weighted_avg.ref import weighted_avg_ref
+
+
+def _time(fn, *args, reps=20) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[str]:
+    key = jax.random.key(0)
+    rows = []
+
+    # weighted averaging: per-subset vs batched (R subsets amortised)
+    m, d, r = 10, 1 << 20, 64
+    stacked = jax.random.normal(key, (m, d))
+    weights = jax.random.dirichlet(key, jnp.ones(m), (r,))
+    one = jax.jit(lambda s, w: jnp.einsum("m,md->d", w, s))
+    batched = jax.jit(weighted_avg_ref)
+    t_one = _time(one, stacked, weights[0])
+    t_batch = _time(batched, stacked, weights)
+    rows.append(f"weighted_avg_single_8MB,{t_one:.1f},R=1")
+    rows.append(f"weighted_avg_batched_8MB,{t_batch:.1f},"
+                f"amortised_x{r * t_one / t_batch:.1f}_over_{r}_subsets")
+
+    # fused CE utility
+    lg = jax.random.normal(key, (512, 8192))
+    lb = jax.random.randint(key, (512,), 0, 8192)
+    t_ce = _time(jax.jit(lambda a, b: jnp.mean(ce_loss_ref(a, b))), lg, lb)
+    rows.append(f"ce_loss_512x8192,{t_ce:.1f},utility_eval")
+
+    # GTG serial vs batched (utility-evals per round)
+    m = 8
+    clients = [{"w": jax.random.normal(jax.random.key(i), (256,))}
+               for i in range(m)]
+    stacked = tree_stack(clients)
+    n_k = jnp.arange(1.0, m + 1.0)
+    w_prev = {"w": jnp.zeros(256)}
+    tgt = jax.random.normal(key, (256,))
+    util = lambda p: -jnp.sum((p["w"] - tgt) ** 2)
+
+    t0 = time.perf_counter()
+    _, st = gtg_shapley(stacked, n_k, w_prev, util, key, max_iters=50)
+    jax.block_until_ready(st.v0)
+    t_serial = (time.perf_counter() - t0) * 1e6
+    rows.append(f"gtg_serial_M8,{t_serial:.1f},evals={int(st.utility_evals)}")
+
+    t0 = time.perf_counter()
+    _, st2 = gtg_shapley_batched(stacked, n_k, w_prev, util,
+                                 jax.vmap(util), key, n_perms=50,
+                                 use_kernel=False)
+    jax.block_until_ready(st2.v0)
+    t_b = (time.perf_counter() - t0) * 1e6
+    rows.append(f"gtg_batched_M8,{t_b:.1f},evals={int(st2.utility_evals)}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,52 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline markdown table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+DRYRUN = os.path.join(HERE, "..", "experiments", "dryrun")
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful-FLOP ratio | temp GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "skipped":
+            if mesh == "single":
+                lines.append(f"| {r['tag'].split('__')[0]} | "
+                             f"{r['tag'].split('__')[1]} | — | — | — | "
+                             f"skipped: {r['reason']} | — | — |")
+            continue
+        if not r["tag"].endswith("__" + mesh) or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        mem = r["memory"].get("temp_size_in_bytes", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3g} | "
+            f"{rf['memory_s']:.3g} | {rf['collective_s']:.3g} | "
+            f"{rf['dominant'].replace('_s','')} | "
+            f"{rf['useful_flops_ratio']:.2f} | {mem:.1f} |")
+    return "\n".join(lines)
+
+
+def run():
+    recs = load_records()
+    print(markdown_table(recs, "single"))
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,15 @@
+"""Paper Table I: accuracy under Dirichlet(alpha) data heterogeneity."""
+from benchmarks.fl_common import print_table, sweep
+
+VALUES = [1e-4, 0.1, 100.0]
+
+
+def run(*, full=False, seeds=(0, 1), dataset="mnist"):
+    rows = sweep("dirichlet_alpha", VALUES, dataset=dataset, seeds=seeds,
+                 full=full)
+    print_table("Table I — data heterogeneity (alpha)", rows, VALUES)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,16 @@
+"""Paper Table II: accuracy under communication-round budgets T."""
+from benchmarks.fl_common import print_table, sweep
+
+VALUES = [15, 25, 40]
+VALUES_FULL = [150, 250, 350]
+
+
+def run(*, full=False, seeds=(0, 1), dataset="mnist"):
+    vals = VALUES_FULL if full else VALUES
+    rows = sweep("rounds", vals, dataset=dataset, seeds=seeds, full=full)
+    print_table("Table II — timing constraints (T)", rows, vals)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

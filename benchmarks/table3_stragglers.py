@@ -1,0 +1,16 @@
+"""Paper Table III: accuracy with straggler fraction x (partial E_k epochs)."""
+from benchmarks.fl_common import print_table, sweep
+
+VALUES = [0.0, 0.5, 0.9]
+
+
+def run(*, full=False, seeds=(0, 1), dataset="mnist"):
+    rows = sweep("straggler_frac", VALUES, dataset=dataset, seeds=seeds,
+                 full=full)
+    print_table("Table III — systems heterogeneity (straggler fraction)",
+                rows, VALUES)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,15 @@
+"""Paper Table IV: accuracy with per-client privacy noise sigma_k."""
+from benchmarks.fl_common import print_table, sweep
+
+VALUES = [0.0, 0.05, 0.1]
+
+
+def run(*, full=False, seeds=(0, 1), dataset="mnist"):
+    rows = sweep("privacy_sigma", VALUES, dataset=dataset, seeds=seeds,
+                 full=full)
+    print_table("Table IV — privacy heterogeneity (sigma)", rows, VALUES)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

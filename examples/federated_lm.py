@@ -1,0 +1,147 @@
+"""End-to-end driver: federated fine-tuning of a transformer LM with
+GreedyFed client selection — the paper's technique applied to the assigned
+architecture pool.
+
+    PYTHONPATH=src python examples/federated_lm.py [--arch tinyllama_1_1b]
+        [--rounds 30] [--d-model 256] [--layers 4]
+
+N simulated clients each hold a private synthetic token stream with a
+client-specific skew (distinct "dialects" = heterogeneity).  Each round the
+server selects M clients (GreedyFed), every selected client runs E local
+AdamW steps from the server model, the server aggregates (ModelAverage),
+values contributions with GTG-Shapley on a held-out validation stream, and
+updates cumulative SVs.  Defaults give a ~5M-param model for CPU; at
+--d-model 1024 --layers 8 the same script is the ~100M-scale driver.
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.aggregation import normalized_weights, tree_stack, weighted_average
+from repro.core.selection import SelectionContext, make_selector
+from repro.core.shapley import gtg_shapley
+from repro.models.lm import model as M
+
+
+def make_client_streams(key, n_clients, vocab, length, n_dialects=4):
+    """Synthetic heterogeneous corpora: bigram chains per dialect."""
+    keys = jax.random.split(key, n_dialects)
+    # dialect d prefers tokens in its own band -> learnable structure
+    streams = []
+    qualities = []
+    for c in range(n_clients):
+        d = c % n_dialects
+        band = vocab // n_dialects
+        lo = d * band
+        k = jax.random.fold_in(keys[d], c)
+        # low-id clients get cleaner (more predictable) streams
+        noise = 0.1 + 0.8 * (c / n_clients)
+        clean = lo + jnp.arange(length) % band
+        rand = jax.random.randint(k, (length,), 0, vocab)
+        mask = jax.random.bernoulli(k, noise, (length,))
+        streams.append(jnp.where(mask, rand, clean).astype(jnp.int32))
+        qualities.append(1.0 - noise)
+    return jnp.stack(streams), np.asarray(qualities)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--select", type=int, default=3)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--selector", default="greedyfed")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(n_layers=args.layers,
+                                        d_model=args.d_model)
+    cfg = dataclasses.replace(cfg, vocab=1024, dtype="float32")
+    key = jax.random.key(0)
+    params = M.init_params(cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"# federated LM: {cfg.name} ({n_params/1e6:.1f}M params), "
+          f"N={args.clients} M={args.select} T={args.rounds}")
+
+    streams, quality = make_client_streams(key, args.clients, cfg.vocab,
+                                           8192)
+    val_stream = streams[0][:2048]  # server-side validation stream
+
+    opt_init, train_step = M.make_train_step(cfg)
+    train_step = jax.jit(train_step)
+
+    def sample_batch(stream, k):
+        starts = jax.random.randint(k, (args.batch,), 0,
+                                    stream.shape[0] - args.seq - 1)
+        idx = starts[:, None] + jnp.arange(args.seq)
+        return {"tokens": stream[idx]}
+
+    @jax.jit
+    def client_update(p, stream, k):
+        opt = opt_init(p)
+        def body(i, carry):
+            p, opt, k = carry
+            k, kb = jax.random.split(k)
+            p, opt, _ = train_step(p, opt, sample_batch(stream, kb))
+            return (p, opt, k)
+        p, _, _ = jax.lax.fori_loop(0, args.local_steps, body, (p, opt, k))
+        return p
+
+    val_batch = {"tokens": val_stream[: (2048 // args.seq) * args.seq]
+                 .reshape(-1, args.seq)}
+
+    def utility_fn(p):
+        return -M.loss_fn(cfg, p, val_batch)
+
+    selector = make_selector(args.selector, args.clients, args.select, seed=0)
+    state = selector.init_state()
+    ctx = SelectionContext(data_fractions=jnp.ones(args.clients) / args.clients)
+    n_k = jnp.ones(args.select)
+
+    t0 = time.time()
+    print("round,val_loss,selected")
+    for t in range(args.rounds):
+        key, ks, kr = jax.random.split(key, 3)
+        sel, state = selector.select(state, ks, ctx)
+        updates = [client_update(params, streams[int(c)],
+                                 jax.random.fold_in(kr, int(c)))
+                   for c in sel]
+        stacked = tree_stack(updates)
+        sv_round = None
+        if selector.uses_shapley:
+            sv_round, _ = gtg_shapley(stacked, n_k, params, utility_fn,
+                                      jax.random.fold_in(kr, 999),
+                                      max_iters=20)
+        params = weighted_average(stacked, normalized_weights(n_k))
+        state = selector.update(state, np.asarray(sel), sv_round=sv_round)
+        if t % 5 == 0 or t == args.rounds - 1:
+            vl = float(-utility_fn(params))
+            print(f"{t},{vl:.4f},{list(map(int, sel))}")
+
+    sv = np.asarray(state.valuation.sv)
+    rank = sv.argsort()[::-1]
+    print(f"# wall {time.time()-t0:.0f}s")
+    print(f"# client quality (true):   {np.round(quality, 2).tolist()}")
+    print(f"# SV ranking (discovered): {rank.tolist()}")
+    # GreedyFed should discover that low-noise clients contribute most
+    top_half = set(rank[: args.clients // 2].tolist())
+    true_top = set(quality.argsort()[::-1][: args.clients // 2].tolist())
+    overlap = len(top_half & true_top) / max(len(true_top), 1)
+    print(f"# top-half overlap between SV ranking and true quality: "
+          f"{overlap:.2f}")
+
+
+if __name__ == "__main__":
+    main()

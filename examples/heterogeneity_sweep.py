@@ -1,0 +1,45 @@
+"""Robustness demo: GreedyFed vs baselines under stragglers + privacy noise.
+
+    PYTHONPATH=src python examples/heterogeneity_sweep.py
+
+Reproduces the Table III/IV phenomenon at laptop scale: with 50% stragglers
+AND per-client privacy noise, Shapley-guided selection degrades least,
+because noisy/partial contributors earn low cumulative SV and stop being
+selected after the round-robin phase.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.data.synth import make_dataset
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_federated
+
+
+def main() -> None:
+    data = make_dataset("mnist", n_train=2500, n_val=300, n_test=500,
+                        difficulty=3.0, seed=1)
+    common = dict(
+        dataset="mnist", n_clients=20, m=3, rounds=25, dirichlet_alpha=1e-4,
+        seed=1, n_train=2500, n_val=300, n_test=500, eval_every=25,
+        client=ClientConfig(epochs=3, batches_per_epoch=3, batch_size=32),
+    )
+
+    print("setting           | greedyfed | ucb   | fedavg")
+    for name, knobs in [
+        ("clean", {}),
+        ("stragglers x=0.5", {"straggler_frac": 0.5}),
+        ("noise sigma=0.1", {"privacy_sigma": 0.1}),
+        ("both", {"straggler_frac": 0.5, "privacy_sigma": 0.1}),
+    ]:
+        accs = {}
+        for sel in ("greedyfed", "ucb", "fedavg"):
+            res = run_federated(FLConfig(selector=sel, **common, **knobs),
+                                data=data)
+            accs[sel] = res.final_acc
+        print(f"{name:17s} | {accs['greedyfed']:9.3f} | {accs['ucb']:.3f} "
+              f"| {accs['fedavg']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

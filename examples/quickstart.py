@@ -1,0 +1,53 @@
+"""Quickstart: GreedyFed vs FedAvg on synthetic MNIST under heterogeneity.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs two small federated trainings (N=20 clients, Dirichlet alpha=1e-4,
+T=25 rounds) and prints the accuracy-vs-round comparison — the Fig. 1
+phenomenon at laptop scale: after the round-robin valuation phase,
+GreedyFed's greedy Shapley selection pulls ahead of uniform sampling.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.data.synth import make_dataset
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_federated
+
+
+def main() -> None:
+    # difficulty 3.0 + per-client privacy noise: the regime where biased
+    # selection matters (EXPERIMENTS.md §Paper-validation); easier settings
+    # saturate and every strategy ties
+    common = dict(
+        dataset="mnist", n_clients=20, m=3, rounds=25,
+        dirichlet_alpha=1e-4, privacy_sigma=0.05, seed=0,
+        n_train=2500, n_val=300, n_test=500, eval_every=5,
+        client=ClientConfig(epochs=3, batches_per_epoch=3, batch_size=32),
+    )
+    data = make_dataset("mnist", n_train=2500, n_val=300, n_test=500,
+                        difficulty=3.0, seed=0)
+
+    results = {}
+    for selector in ("greedyfed", "fedavg"):
+        print(f"== training with {selector} ==")
+        res = run_federated(FLConfig(selector=selector, **common), data=data)
+        results[selector] = res
+        print(f"   final acc {res.final_acc:.3f} "
+              f"(wall {res.wall_time_s:.0f}s, "
+              f"shapley evals {res.shapley_evals})")
+
+    print("\nround | greedyfed | fedavg")
+    for (r1, a1), (_, a2) in zip(results["greedyfed"].test_acc,
+                                 results["fedavg"].test_acc):
+        print(f"{r1:5d} | {a1:9.3f} | {a2:6.3f}")
+
+    gf = results["greedyfed"]
+    top = gf.sv_final.argsort()[-3:][::-1]
+    print(f"\nGreedyFed's top-3 clients by cumulative Shapley value: {top}")
+    print(f"their selection counts: {gf.selection_counts[top]}")
+
+
+if __name__ == "__main__":
+    main()

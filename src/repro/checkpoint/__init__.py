@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import save_pytree, load_pytree, save_server_state, load_server_state
+
+__all__ = ["save_pytree", "load_pytree", "save_server_state", "load_server_state"]

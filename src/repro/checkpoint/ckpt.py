@@ -1,0 +1,81 @@
+"""Checkpointing: pytree <-> npz with a structure manifest.
+
+Round-resumable FL server state = (model params, valuation state, round idx,
+rng key).  No orbax offline, so we serialise leaves to .npz and the treedef
+to a JSON path-spec; load reconstructs and validates structure.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    treedef = jax.tree.structure(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    with open(_manifest_path(path), "w") as f:
+        json.dump({"treedef": str(treedef), "keys": sorted(flat)}, f)
+
+
+def _manifest_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".manifest.json"
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Load into the structure of `like` (shape/dtype validated)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten_with_paths(like)
+    if sorted(npz.files) != sorted(flat_like):
+        raise ValueError(
+            f"checkpoint structure mismatch: {sorted(npz.files)[:5]}... vs "
+            f"{sorted(flat_like)[:5]}...")
+    leaves_like, treedef = jax.tree.flatten(like)
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    keys = [_SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+            for p in paths]
+    new_leaves = []
+    for key, ref in zip(keys, leaves_like):
+        arr = npz[key]
+        if arr.shape != ref.shape:
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {ref.shape}")
+        new_leaves.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+def save_server_state(path: str, *, params: PyTree, sv: np.ndarray,
+                      counts: np.ndarray, round_idx: int, seed: int) -> None:
+    save_pytree(path, {"params": params})
+    meta = {"round": int(round_idx), "seed": int(seed)}
+    np.savez(path[:-4] + ".meta.npz" if path.endswith(".npz") else path + ".meta.npz",
+             sv=np.asarray(sv), counts=np.asarray(counts))
+    with open((path[:-4] if path.endswith(".npz") else path) + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_server_state(path: str, params_like: PyTree) -> dict:
+    params = load_pytree(path, {"params": params_like})["params"]
+    base = path[:-4] if path.endswith(".npz") else path
+    meta_arr = np.load(base + ".meta.npz")
+    with open(base + ".meta.json") as f:
+        meta = json.load(f)
+    return {"params": params, "sv": meta_arr["sv"], "counts": meta_arr["counts"],
+            "round": meta["round"], "seed": meta["seed"]}

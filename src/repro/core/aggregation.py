@@ -1,0 +1,95 @@
+"""Weighted model aggregation — the ModelAverage subroutine of GreedyFed.
+
+The Shapley hot-spot: GTG-Shapley (Alg. 2) evaluates O(T_mc * M^2) subset
+averages per communication round.  We therefore keep the M selected clients'
+updates *stacked* along a leading client axis (one pytree whose leaves have
+shape (M, *param_shape)) and express every subset average as a masked
+weighted reduction over that axis.  This fuses into a single multiply-reduce
+per leaf (and, on TPU, into the `kernels/weighted_avg` Pallas kernel).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_stack(trees: list[PyTree]) -> PyTree:
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(stacked: PyTree, n: int) -> list[PyTree]:
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
+
+
+def normalized_weights(n_k: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """lambda_k proportional to n_k over the masked subset, summing to 1.
+
+    n_k: (M,) client dataset sizes.  mask: (M,) {0,1} subset indicator.
+    Empty subsets return all-zero weights (caller handles via utility of w^t).
+    """
+    n_k = jnp.asarray(n_k, jnp.float32)
+    if mask is not None:
+        n_k = n_k * mask.astype(jnp.float32)
+    total = jnp.sum(n_k)
+    return jnp.where(total > 0, n_k / jnp.maximum(total, 1e-12), jnp.zeros_like(n_k))
+
+
+def weighted_average(stacked: PyTree, weights: jax.Array) -> PyTree:
+    """ModelAverage(n_k, w_k): sum_k weights[k] * leaf[k] for every leaf.
+
+    `weights` must already be normalised (see `normalized_weights`).
+    """
+    def _avg(leaf: jax.Array) -> jax.Array:
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * w, axis=0)
+
+    return jax.tree.map(_avg, stacked)
+
+
+def subset_average(stacked: PyTree, n_k: jax.Array, mask: jax.Array) -> PyTree:
+    """ModelAverage restricted to the subset indicated by `mask` (M,) in {0,1}."""
+    return weighted_average(stacked, normalized_weights(n_k, mask))
+
+
+def model_average(models: list[PyTree], n_k) -> PyTree:
+    """Convenience non-stacked entry point (server aggregation, Alg. 1 line 9)."""
+    return weighted_average(tree_stack(models), normalized_weights(jnp.asarray(n_k)))
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    parts = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return functools.reduce(jnp.add, parts)
+
+
+def tree_sq_norm(a: PyTree) -> jax.Array:
+    return tree_dot(a, a)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_size(a: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(a))

@@ -1,0 +1,256 @@
+"""Client selection strategies.
+
+Common interface (python-level orchestration; inner math is jnp):
+
+    strategy = GreedyFedSelector(n_clients=N, m=M)
+    sel, state = strategy.select(state, key, round_t, ctx)
+    state = strategy.update(state, sel, sv_round=..., ...)
+
+`ctx` is a SelectionContext carrying everything any strategy may need
+(data fractions, local losses of the current global model, ...) so the
+server loop is strategy-agnostic.
+
+Implemented strategies (paper Section IV baselines + ours):
+  * RandomSelector           — FedAvg / FedProx uniform sampling
+  * PowerOfChoiceSelector    — [7]: query d candidates, pick M highest-loss,
+                               d decaying exponentially (rate 0.9)
+  * SFedAvgSelector          — [13]: softmax sampling over EMA value vector
+  * UCBSelector              — [12]: RR init, then top-M of SV + UCB bonus
+  * GreedyFedSelector        — ours (Alg. 1): RR init, then top-M cumulative SV
+  * CentralizedSelector      — degenerate upper bound (server holds all data)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.valuation import ValuationState, init_valuation, update_valuation
+
+
+class SelectionContext(NamedTuple):
+    data_fractions: jax.Array                 # (N,) q_k
+    local_losses: Optional[jax.Array] = None  # (N,) loss of w^t on each client's data (Power-of-Choice)
+
+
+class SelectorState(NamedTuple):
+    valuation: ValuationState
+    round: int
+    rr_order: np.ndarray      # random round-robin order fixed at init
+    extra: dict
+
+
+@dataclasses.dataclass
+class SelectorBase:
+    n_clients: int
+    m: int
+    seed: int = 0
+
+    name = "base"
+    uses_shapley = False
+    uses_local_losses = False
+
+    def init_state(self) -> SelectorState:
+        rng = np.random.default_rng(self.seed)
+        return SelectorState(
+            valuation=init_valuation(self.n_clients),
+            round=0,
+            rr_order=rng.permutation(self.n_clients),
+            extra={},
+        )
+
+    # -- helpers ---------------------------------------------------------
+    def _rr_rounds(self) -> int:
+        return int(np.ceil(self.n_clients / self.m))
+
+    def _rr_select(self, state: SelectorState) -> np.ndarray:
+        """Alg. 1 lines 2-3: round-robin in a fixed random order."""
+        start = state.round * self.m
+        idx = [(start + i) % self.n_clients for i in range(self.m)]
+        return state.rr_order[idx]
+
+    def select(self, state: SelectorState, key: jax.Array,
+               ctx: SelectionContext) -> tuple[np.ndarray, SelectorState]:
+        raise NotImplementedError
+
+    def update(self, state: SelectorState, selected: np.ndarray,
+               sv_round: Optional[jax.Array] = None) -> SelectorState:
+        """Post-round bookkeeping; default just counts selections."""
+        val = state.valuation
+        if sv_round is not None:
+            val = update_valuation(val, jnp.asarray(selected), sv_round,
+                                   mode=self.sv_mode(), alpha=self.sv_alpha())
+        else:
+            val = ValuationState(
+                sv=val.sv,
+                counts=val.counts.at[jnp.asarray(selected)].add(1),
+                initialised=val.initialised.at[jnp.asarray(selected)].set(True),
+            )
+        return state._replace(valuation=val, round=state.round + 1)
+
+    def sv_mode(self) -> str:
+        return "mean"
+
+    def sv_alpha(self) -> float:
+        return 0.5
+
+
+@dataclasses.dataclass
+class RandomSelector(SelectorBase):
+    """FedAvg / FedProx: uniform random sampling without replacement."""
+    name = "random"
+
+    def select(self, state, key, ctx):
+        sel = jax.random.choice(key, self.n_clients, (self.m,), replace=False)
+        return np.asarray(sel), state
+
+
+@dataclasses.dataclass
+class PowerOfChoiceSelector(SelectorBase):
+    """[7]: sample d candidates (prob ∝ q_k), pick the M with highest local loss.
+
+    d starts at d0 (default N) and decays by `decay` each round toward M.
+    """
+    decay: float = 0.9
+    d0: Optional[int] = None
+
+    name = "power_of_choice"
+    uses_local_losses = True
+
+    def select(self, state, key, ctx):
+        assert ctx.local_losses is not None, "Power-of-Choice needs local losses"
+        d0 = self.d0 if self.d0 is not None else self.n_clients
+        d = max(self.m, int(round(d0 * (self.decay ** state.round))))
+        probs = np.asarray(ctx.data_fractions, np.float64)
+        probs = probs / probs.sum()
+        cand = jax.random.choice(key, self.n_clients, (d,), replace=False,
+                                 p=jnp.asarray(probs))
+        cand = np.asarray(cand)
+        losses = np.asarray(ctx.local_losses)[cand]
+        top = cand[np.argsort(-losses)[: self.m]]
+        return top, state
+
+
+@dataclasses.dataclass
+class SFedAvgSelector(SelectorBase):
+    """[13]: selection probabilities = softmax over EMA'd cumulative SV."""
+    beta: float = 0.5          # EMA on value vector
+    temperature: float = 1.0
+
+    name = "s_fedavg"
+    uses_shapley = True
+
+    def sv_mode(self) -> str:
+        return "exponential"
+
+    def sv_alpha(self) -> float:
+        return self.beta
+
+    def select(self, state, key, ctx):
+        sv = np.asarray(state.valuation.sv, np.float64)
+        # unvalued clients get the mean value -> near-uniform early exploration
+        init = np.asarray(state.valuation.initialised)
+        if init.any():
+            sv = np.where(init, sv, sv[init].mean())
+        z = (sv - sv.max()) / max(self.temperature, 1e-8)
+        p = np.exp(z)
+        p /= p.sum()
+        sel = jax.random.choice(key, self.n_clients, (self.m,), replace=False,
+                                p=jnp.asarray(p))
+        return np.asarray(sel), state
+
+
+@dataclasses.dataclass
+class UCBSelector(SelectorBase):
+    """[12]: RR initialisation, then top-M of SV_k + c*sqrt(ln t / N_k)."""
+    c: float = 0.1
+
+    name = "ucb"
+    uses_shapley = True
+
+    def select(self, state, key, ctx):
+        if state.round < self._rr_rounds():
+            return self._rr_select(state), state
+        sv = np.asarray(state.valuation.sv, np.float64)
+        counts = np.maximum(np.asarray(state.valuation.counts, np.float64), 1.0)
+        t = max(state.round, 2)
+        ucb = sv + self.c * np.sqrt(np.log(t) / counts)
+        return np.argsort(-ucb)[: self.m], state
+
+
+@dataclasses.dataclass
+class GreedyFedSelector(SelectorBase):
+    """Ours (Alg. 1): RR initialisation, then purely-greedy top-M cumulative SV."""
+    averaging: str = "mean"     # "mean" | "exponential"
+    alpha: float = 0.5          # exponential-averaging parameter
+
+    name = "greedyfed"
+    uses_shapley = True
+
+    def sv_mode(self) -> str:
+        return self.averaging
+
+    def sv_alpha(self) -> float:
+        return self.alpha
+
+    def select(self, state, key, ctx):
+        if state.round < self._rr_rounds():
+            return self._rr_select(state), state
+        sv = np.asarray(state.valuation.sv, np.float64)
+        return np.argsort(-sv)[: self.m], state
+
+
+@dataclasses.dataclass
+class GreedyFedDropoutSelector(GreedyFedSelector):
+    """Beyond-paper (the paper's own Section VI future work): after the RR
+    phase the server *feeds Shapley values back* and clients in the bottom
+    `drop_frac` of cumulative SV drop out of the protocol entirely — they
+    are never polled again, cutting standing communication/coordination
+    overhead with (empirically, see benchmarks) no accuracy cost, since
+    greedy selection would not have picked them anyway.
+
+    `dropped_fraction(state)` reports the communication saving.
+    """
+    drop_frac: float = 0.5
+
+    name = "greedyfed_dropout"
+
+    def select(self, state, key, ctx):
+        if state.round < self._rr_rounds():
+            return self._rr_select(state), state
+        if "active" not in state.extra:
+            sv = np.asarray(state.valuation.sv, np.float64)
+            n_keep = max(self.m, int(round((1.0 - self.drop_frac)
+                                           * self.n_clients)))
+            active = np.sort(np.argsort(-sv)[:n_keep])
+            state = state._replace(extra={**state.extra, "active": active})
+        active = state.extra["active"]
+        sv = np.asarray(state.valuation.sv, np.float64)[active]
+        return active[np.argsort(-sv)[: self.m]], state
+
+    def dropped_fraction(self, state) -> float:
+        if "active" not in state.extra:
+            return 0.0
+        return 1.0 - len(state.extra["active"]) / self.n_clients
+
+
+SELECTORS = {
+    "fedavg": RandomSelector,
+    "fedprox": RandomSelector,       # prox term lives in the client update
+    "power_of_choice": PowerOfChoiceSelector,
+    "s_fedavg": SFedAvgSelector,
+    "ucb": UCBSelector,
+    "greedyfed": GreedyFedSelector,
+    "greedyfed_dropout": GreedyFedDropoutSelector,  # beyond-paper (Sec. VI)
+}
+
+
+def make_selector(name: str, n_clients: int, m: int, seed: int = 0, **kw) -> SelectorBase:
+    try:
+        cls = SELECTORS[name]
+    except KeyError:
+        raise ValueError(f"unknown selector {name!r}; options: {sorted(SELECTORS)}")
+    return cls(n_clients=n_clients, m=m, seed=seed, **kw)

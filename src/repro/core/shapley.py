@@ -1,0 +1,186 @@
+"""GTG-Shapley (Alg. 2) — server-side fast Shapley-Value approximation.
+
+Monte-Carlo permutation sampling with two truncations:
+  * between-round: if |U(w^{t+1}) - U(w^t)| < eps, all SVs are zero this round;
+  * within-round: while scanning a permutation, once |v_M - v_j| < eps the
+    remaining marginal contributions are taken as zero (v carried forward).
+
+The implementation is a `lax.while_loop` (outer MC iterations, with the
+GTG default convergence criterion: relative change of the SV estimate)
+around a `lax.scan` over the M starting clients, around a `lax.scan` over
+permutation positions whose body uses `lax.cond` — so within-round
+truncation genuinely skips the utility evaluation at runtime (cond executes
+a single branch when not vmapped), matching the paper's tractability claim.
+
+Utility U(S) = utility_fn(ModelAverage over subset S), with the empty subset
+mapped to the previous server model w^t (v_0).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import subset_average
+
+PyTree = Any
+UtilityFn = Callable[[PyTree], jax.Array]  # pytree params -> scalar utility
+
+
+class ShapleyStats(NamedTuple):
+    iterations: jax.Array      # MC rounds actually executed
+    utility_evals: jax.Array   # number of non-truncated utility evaluations
+    v0: jax.Array              # U(w^t)
+    vM: jax.Array              # U(w^{t+1})
+    truncated_round: jax.Array  # bool: between-round truncation fired
+
+
+def _permutation_batch(key: jax.Array, m: int) -> jax.Array:
+    """(M, M) int32: row k is a permutation of [M] with first element k."""
+    def one(k, subkey):
+        others = jnp.delete(jnp.arange(m), k, assume_unique_indices=True)
+        rest = jax.random.permutation(subkey, others)
+        return jnp.concatenate([jnp.array([k]), rest])
+
+    keys = jax.random.split(key, m)
+    return jax.vmap(one)(jnp.arange(m), keys)
+
+
+@partial(jax.jit, static_argnames=("utility_fn", "max_iters"))
+def gtg_shapley(
+    stacked_updates: PyTree,
+    n_k: jax.Array,
+    w_prev: PyTree,
+    utility_fn: UtilityFn,
+    key: jax.Array,
+    *,
+    eps: float = 1e-4,
+    max_iters: int | None = None,
+    convergence_tol: float = 0.05,
+    convergence_rounds: int = 3,
+) -> tuple[jax.Array, ShapleyStats]:
+    """Approximate SV of each of the M stacked client updates.
+
+    stacked_updates: pytree with leaves (M, *shape) — client models w_k^{t+1}.
+    n_k: (M,) dataset sizes for ModelAverage weights.
+    Returns (sv: (M,) float32, stats).
+    """
+    m = n_k.shape[0]
+    if max_iters is None:
+        max_iters = 50 * m  # paper: T = 50 * |S|
+
+    w_full = subset_average(stacked_updates, n_k, jnp.ones((m,)))
+    v0 = utility_fn(w_prev)
+    v_m = utility_fn(w_full)
+
+    def subset_utility(mask: jax.Array) -> jax.Array:
+        return utility_fn(subset_average(stacked_updates, n_k, mask))
+
+    def perm_walk(perm: jax.Array):
+        """Scan one permutation; return per-client marginal contributions."""
+
+        def step(carry, j):
+            v_j, mask, n_evals = carry
+            mask = mask.at[perm[j]].set(1.0)
+            truncate = jnp.abs(v_m - v_j) < eps
+
+            v_next = jax.lax.cond(
+                truncate,
+                lambda: v_j,                      # within-round truncation
+                lambda: subset_utility(mask),
+            )
+            n_evals = n_evals + jnp.where(truncate, 0, 1)
+            marginal = v_next - v_j
+            return (v_next, mask, n_evals), (perm[j], marginal)
+
+        init = (v0, jnp.zeros((m,)), jnp.array(0, jnp.int32))
+        (_, _, n_evals), (idx, marg) = jax.lax.scan(step, init, jnp.arange(m))
+        # scatter marginals back to client slots
+        contrib = jnp.zeros((m,)).at[idx].add(marg)
+        return contrib, n_evals
+
+    def mc_round(carry):
+        sv_sum, count, tau, key, _, n_evals, sv_prev, stall = carry
+        key, sub = jax.random.split(key)
+        perms = _permutation_batch(sub, m)
+
+        def body(acc, perm):
+            contrib, ne = perm_walk(perm)
+            return (acc[0] + contrib, acc[1] + ne), None
+
+        (round_contrib, round_evals), _ = jax.lax.scan(
+            body, (jnp.zeros((m,)), jnp.array(0, jnp.int32)), perms
+        )
+        sv_sum = sv_sum + round_contrib
+        count = count + m  # each round contributes one marginal per client per perm
+        tau = tau + 1
+        sv_now = sv_sum / jnp.maximum(count, 1)
+        denom = jnp.maximum(jnp.max(jnp.abs(sv_now)), eps)
+        rel_change = jnp.max(jnp.abs(sv_now - sv_prev)) / denom
+        stall = jnp.where(rel_change < convergence_tol, stall + 1, 0)
+        converged = stall >= convergence_rounds
+        return (sv_sum, count, tau, key, converged, n_evals + round_evals, sv_now, stall)
+
+    def cond(carry):
+        _, _, tau, _, converged, _, _, _ = carry
+        return jnp.logical_and(tau < max_iters, jnp.logical_not(converged))
+
+    init = (
+        jnp.zeros((m,)), jnp.zeros((m,), jnp.int32), jnp.array(0, jnp.int32),
+        key, jnp.array(False), jnp.array(0, jnp.int32), jnp.zeros((m,)),
+        jnp.array(0, jnp.int32),
+    )
+
+    def run_mc():
+        sv_sum, count, tau, _, _, n_evals, _, _ = jax.lax.while_loop(cond, mc_round, init)
+        sv = sv_sum / jnp.maximum(count, 1)
+        return sv, tau, n_evals
+
+    def skip_mc():  # between-round truncation
+        return jnp.zeros((m,)), jnp.array(0, jnp.int32), jnp.array(0, jnp.int32)
+
+    between_trunc = jnp.abs(v_m - v0) < eps
+    sv, tau, n_evals = jax.lax.cond(between_trunc, skip_mc, run_mc)
+
+    stats = ShapleyStats(
+        iterations=tau, utility_evals=n_evals + 2, v0=v0, vM=v_m,
+        truncated_round=between_trunc,
+    )
+    return sv, stats
+
+
+def exact_shapley(
+    stacked_updates: PyTree,
+    n_k: jax.Array,
+    w_prev: PyTree,
+    utility_fn: UtilityFn,
+) -> jax.Array:
+    """Brute-force SV over all 2^M subsets (test oracle; M <= ~10)."""
+    m = int(n_k.shape[0])
+
+    def u_of_mask(mask_tuple):
+        mask = jnp.asarray(mask_tuple, jnp.float32)
+        if not any(mask_tuple):
+            return float(utility_fn(w_prev))
+        return float(utility_fn(subset_average(stacked_updates, n_k, mask)))
+
+    cache: dict[tuple, float] = {}
+    def u(mask_tuple):
+        if mask_tuple not in cache:
+            cache[mask_tuple] = u_of_mask(mask_tuple)
+        return cache[mask_tuple]
+
+    sv = [0.0] * m
+    for k in range(m):
+        others = [i for i in range(m) if i != k]
+        for r in range(m):
+            for subset in itertools.combinations(others, r):
+                base = tuple(1 if i in subset else 0 for i in range(m))
+                with_k = tuple(1 if (i in subset or i == k) else 0 for i in range(m))
+                weight = 1.0 / (m * math.comb(m - 1, r))
+                sv[k] += weight * (u(with_k) - u(base))
+    return jnp.asarray(sv)

@@ -1,0 +1,54 @@
+"""Cumulative Shapley-Value tracking (Alg. 1, lines 11-12).
+
+Two variants from the paper:
+  * mean:        SV_k <- ((N_k - 1) SV_k + SV_k^(t)) / N_k
+  * exponential: SV_k <- alpha * SV_k + (1 - alpha) * SV_k^(t)
+where N_k counts how many times client k has been selected, and updates only
+apply to clients in S_t (mean over rounds where the client participated —
+the S-FedAvg/UCB convention the paper borrows).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ValuationState(NamedTuple):
+    sv: jax.Array        # (N,) cumulative Shapley value per client
+    counts: jax.Array    # (N,) number of times each client was selected
+    initialised: jax.Array  # (N,) bool — has the client ever been valued
+
+
+def init_valuation(n_clients: int) -> ValuationState:
+    return ValuationState(
+        sv=jnp.zeros((n_clients,), jnp.float32),
+        counts=jnp.zeros((n_clients,), jnp.int32),
+        initialised=jnp.zeros((n_clients,), bool),
+    )
+
+
+def update_valuation(
+    state: ValuationState,
+    selected: jax.Array,      # (M,) int client indices of S_t
+    sv_round: jax.Array,      # (M,) SV_k^(t) from GTG-Shapley
+    *,
+    mode: str = "mean",       # "mean" | "exponential"
+    alpha: float = 0.5,
+) -> ValuationState:
+    counts = state.counts.at[selected].add(1)
+    if mode == "mean":
+        n_sel = counts[selected].astype(jnp.float32)
+        new_vals = ((n_sel - 1.0) * state.sv[selected] + sv_round) / n_sel
+    elif mode == "exponential":
+        first = ~state.initialised[selected]
+        ema = alpha * state.sv[selected] + (1.0 - alpha) * sv_round
+        new_vals = jnp.where(first, sv_round, ema)
+    else:
+        raise ValueError(f"unknown valuation mode: {mode!r}")
+    return ValuationState(
+        sv=state.sv.at[selected].set(new_vals),
+        counts=counts,
+        initialised=state.initialised.at[selected].set(True),
+    )

@@ -1,0 +1,3 @@
+from repro.data.synth import SynthDataset, make_dataset
+
+__all__ = ["SynthDataset", "make_dataset"]

@@ -1,0 +1,9 @@
+from repro.federated.partition import dirichlet_partition, power_law_fractions
+from repro.federated.client import ClientConfig, client_update, local_loss
+from repro.federated.server import FLConfig, run_federated, FLResult
+
+__all__ = [
+    "dirichlet_partition", "power_law_fractions",
+    "ClientConfig", "client_update", "local_loss",
+    "FLConfig", "run_federated", "FLResult",
+]

@@ -1,0 +1,94 @@
+"""ClientUpdate (Alg. 1 line 7) — local training at a selected client.
+
+Faithful to the paper's hyperparameters: E epochs x B minibatches per epoch
+of SGD with momentum (eta=0.01, gamma=0.5), plus the three heterogeneity
+mechanisms of Section IV:
+  * FedProx: + mu/2 ||w - w^t||^2 proximal term in the local loss;
+  * stragglers: client k only completes E_k ~ U{1..E} epochs;
+  * privacy: N(0, sigma_k^2) noise added to the uploaded parameters.
+
+All clients share one jitted step function: client datasets are padded to a
+common capacity and minibatches are sampled by index into the valid prefix,
+so XLA compiles the local update exactly once per (model, capacity).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import tree_sub, tree_sq_norm
+from repro.models.mlp_cnn import ClassifierModel
+from repro.optim.sgd import sgd_init, sgd_step
+
+PyTree = Any
+
+
+class ClientConfig(NamedTuple):
+    epochs: int = 5            # E
+    batches_per_epoch: int = 5 # B
+    batch_size: int = 32
+    lr: float = 0.01           # eta
+    momentum: float = 0.5      # gamma
+    prox_mu: float = 0.0       # FedProx mu (0 => FedAvg-style update)
+
+
+@partial(jax.jit, static_argnames=("model", "cfg"))
+def client_update(
+    model: ClassifierModel,
+    cfg: ClientConfig,
+    params0: PyTree,
+    x: jax.Array,           # (capacity, ...) padded client data
+    y: jax.Array,           # (capacity,)
+    n_valid: jax.Array,     # scalar int: true client dataset size
+    epochs_k: jax.Array,    # scalar int: E_k (<= E for stragglers)
+    sigma_k: jax.Array,     # scalar float: privacy noise std
+    key: jax.Array,
+) -> PyTree:
+    """Run E_k * B SGD-momentum steps from params0; return noisy w_k^{t+1}."""
+    total_steps = cfg.epochs * cfg.batches_per_epoch
+    idx_key, noise_key = jax.random.split(key)
+    # minibatch indices into the valid prefix, sampled with replacement
+    idx = jax.random.randint(idx_key, (total_steps, cfg.batch_size), 0,
+                             jnp.maximum(n_valid, 1))
+
+    def local_loss_fn(p, xb, yb):
+        loss = model.loss(p, xb, yb)
+        if cfg.prox_mu > 0.0:
+            loss = loss + 0.5 * cfg.prox_mu * tree_sq_norm(tree_sub(p, params0))
+        return loss
+
+    def step(i, carry):
+        p, opt = carry
+        xb, yb = x[idx[i]], y[idx[i]]
+        grads = jax.grad(local_loss_fn)(p, xb, yb)
+        p, opt = sgd_step(grads, opt, p, lr=cfg.lr, momentum=cfg.momentum)
+        return (p, opt)
+
+    # stragglers run only E_k of E epochs -> dynamic trip count
+    n_steps = epochs_k * cfg.batches_per_epoch
+    params, _ = jax.lax.fori_loop(0, n_steps, step, (params0, sgd_init(params0)))
+
+    # privacy heterogeneity: obfuscate the uploaded model
+    leaves, treedef = jax.tree.flatten(params)
+    nkeys = jax.random.split(noise_key, len(leaves))
+    noisy = [l + sigma_k * jax.random.normal(k, l.shape, l.dtype)
+             for l, k in zip(leaves, nkeys)]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+@partial(jax.jit, static_argnames=("model",))
+def local_loss(model: ClassifierModel, params: PyTree, x: jax.Array,
+               y: jax.Array, n_valid: jax.Array) -> jax.Array:
+    """Masked mean loss of `params` on a client's (padded) data.
+
+    Used by Power-of-Choice to rank candidate clients.
+    """
+    logits = model.apply(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    per = logz - gold
+    mask = (jnp.arange(x.shape[0]) < n_valid).astype(jnp.float32)
+    return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,147 @@
+"""Client-upload compression codecs — the paper's Related-Work contrast.
+
+GreedyFed reduces communication by selecting FEWER/BETTER clients; the
+orthogonal line of work ([2],[3] in the paper) compresses each upload.
+Implementing both lets benchmarks/comm_efficiency.py put the paper's claim
+in bytes: rounds-to-accuracy x bytes-per-round for selection vs compression
+vs both.
+
+Codecs are pytree -> (payload, aux) encoders with exact byte accounting and
+a decode that reconstructs the (lossy) update:
+
+  * identity        — float32 baseline
+  * quant8          — per-leaf symmetric int8 quantisation (4x)
+  * topk            — magnitude top-k sparsification with int32 indices
+                      ([3], Stich et al.), k as a fraction of each leaf
+  * quant8_topk     — both (sparsify then quantise values)
+
+All codecs are unbiased-ish lossy maps applied to the *delta* w_k - w^t
+(deltas compress far better than raw weights), matching standard practice.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import tree_add, tree_sub
+
+PyTree = Any
+
+
+class Encoded(NamedTuple):
+    payload: PyTree      # codec-specific representation
+    nbytes: int          # exact wire size of the payload
+
+
+def _leaf_bytes(x: jax.Array) -> int:
+    return int(x.size) * x.dtype.itemsize
+
+
+# ----------------------------------------------------------- identity ------
+def identity_encode(delta: PyTree) -> Encoded:
+    return Encoded(delta, sum(_leaf_bytes(l) for l in jax.tree.leaves(delta)))
+
+
+def identity_decode(enc: Encoded) -> PyTree:
+    return enc.payload
+
+
+# ------------------------------------------------------------- quant8 ------
+def quant8_encode(delta: PyTree) -> Encoded:
+    def enc(leaf):
+        scale = jnp.maximum(jnp.max(jnp.abs(leaf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(leaf / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}
+
+    payload = jax.tree.map(enc, delta, is_leaf=lambda x: isinstance(x, jax.Array))
+    nbytes = sum(int(l["q"].size) + 4
+                 for l in jax.tree.leaves(payload,
+                                          is_leaf=lambda x: isinstance(x, dict)
+                                          and "q" in x))
+    return Encoded(payload, nbytes)
+
+
+def quant8_decode(enc: Encoded) -> PyTree:
+    def dec(l):
+        return l["q"].astype(jnp.float32) * l["scale"]
+
+    return jax.tree.map(dec, enc.payload,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+# --------------------------------------------------------------- topk ------
+def topk_encode(delta: PyTree, frac: float = 0.1) -> Encoded:
+    def enc(leaf):
+        flat = leaf.reshape(-1)
+        k = max(1, int(flat.size * frac))
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return {"idx": idx.astype(jnp.int32), "val": flat[idx],
+                "shape": leaf.shape}
+
+    payload = jax.tree.map(enc, delta, is_leaf=lambda x: isinstance(x, jax.Array))
+    nbytes = sum(int(l["idx"].size) * 4 + _leaf_bytes(l["val"])
+                 for l in jax.tree.leaves(
+                     payload, is_leaf=lambda x: isinstance(x, dict)
+                     and "idx" in x))
+    return Encoded(payload, nbytes)
+
+
+def topk_decode(enc: Encoded) -> PyTree:
+    def dec(l):
+        flat = jnp.zeros(int(jnp.prod(jnp.asarray(l["shape"]))),
+                         l["val"].dtype)
+        return flat.at[l["idx"]].set(l["val"]).reshape(l["shape"])
+
+    return jax.tree.map(dec, enc.payload,
+                        is_leaf=lambda x: isinstance(x, dict) and "idx" in x)
+
+
+# ----------------------------------------------------------- combined ------
+def quant8_topk_encode(delta: PyTree, frac: float = 0.1) -> Encoded:
+    sparse = topk_encode(delta, frac)
+
+    def q(l):
+        scale = jnp.maximum(jnp.max(jnp.abs(l["val"])), 1e-12) / 127.0
+        return {**l, "val": jnp.clip(jnp.round(l["val"] / scale), -127, 127
+                                     ).astype(jnp.int8), "scale": scale}
+
+    payload = jax.tree.map(q, sparse.payload,
+                           is_leaf=lambda x: isinstance(x, dict) and "idx" in x)
+    nbytes = sum(int(l["idx"].size) * (4 + 1) + 4
+                 for l in jax.tree.leaves(
+                     payload, is_leaf=lambda x: isinstance(x, dict)
+                     and "idx" in x))
+    return Encoded(payload, nbytes)
+
+
+def quant8_topk_decode(enc: Encoded) -> PyTree:
+    def dec(l):
+        vals = l["val"].astype(jnp.float32) * l["scale"]
+        flat = jnp.zeros(int(jnp.prod(jnp.asarray(l["shape"]))), jnp.float32)
+        return flat.at[l["idx"]].set(vals).reshape(l["shape"])
+
+    return jax.tree.map(dec, enc.payload,
+                        is_leaf=lambda x: isinstance(x, dict) and "idx" in x)
+
+
+CODECS = {
+    "identity": (identity_encode, identity_decode),
+    "quant8": (quant8_encode, quant8_decode),
+    "topk": (partial(topk_encode, frac=0.1), topk_decode),
+    "quant8_topk": (partial(quant8_topk_encode, frac=0.1), quant8_topk_decode),
+}
+
+
+def compress_update(codec: str, w_new: PyTree, w_ref: PyTree
+                    ) -> tuple[PyTree, int]:
+    """Encode w_new relative to w_ref; return (reconstructed w_new, bytes).
+
+    The server applies the lossy reconstruction — exactly what it would
+    receive over the wire.
+    """
+    enc_fn, dec_fn = CODECS[codec]
+    enc = enc_fn(tree_sub(w_new, w_ref))
+    return tree_add(w_ref, dec_fn(enc)), enc.nbytes

@@ -1,0 +1,260 @@
+"""The federated server loop — GreedyFed Alg. 1 plus all baselines.
+
+One function, `run_federated`, drives T communication rounds:
+  select clients -> ClientUpdate at each -> ModelAverage -> GTG-Shapley
+  -> cumulative-SV update -> next round.
+Strategy behaviour is fully encapsulated in the selector object, so FedAvg /
+FedProx / Power-of-Choice / S-FedAvg / UCB / GreedyFed all share this loop
+(the paper's experimental protocol).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import normalized_weights, tree_stack, weighted_average
+from repro.core.selection import SelectionContext, make_selector
+from repro.core.shapley import gtg_shapley
+from repro.data.synth import SynthDataset, make_dataset
+from repro.federated.client import ClientConfig, client_update, local_loss
+from repro.federated.compression import compress_update
+from repro.federated.partition import dirichlet_partition, power_law_fractions
+from repro.models.mlp_cnn import ClassifierModel, make_classifier
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    dataset: str = "mnist"
+    n_clients: int = 50          # N
+    m: int = 5                   # M: clients selected per round
+    rounds: int = 50             # T: communication budget
+    selector: str = "greedyfed"
+    selector_kwargs: dict = field(default_factory=dict)
+    client: ClientConfig = ClientConfig()
+    # heterogeneity knobs (paper Section IV)
+    dirichlet_alpha: float = 1e-4
+    straggler_frac: float = 0.0  # x
+    privacy_sigma: float = 0.0   # sigma
+    # GTG-Shapley
+    shapley_eps: float = 1e-4
+    shapley_max_iters: Optional[int] = None   # default 50*M
+    shapley_impl: str = "serial"  # "serial" (Alg. 2, truncation) |
+                                  # "batched" (TPU-native, DESIGN.md §8)
+    sv_averaging: str = "mean"   # "mean" | "exponential"
+    sv_alpha: float = 0.5
+    # upload compression (paper Related-Work contrast; see
+    # federated/compression.py): applied to the client->PS delta
+    upload_codec: str = "identity"
+    # bookkeeping
+    eval_every: int = 5
+    seed: int = 0
+    n_train: int = 6000
+    n_val: int = 500
+    n_test: int = 1000
+
+
+class FLResult(NamedTuple):
+    config: FLConfig
+    test_acc: list            # [(round, acc)]
+    val_loss: list            # [(round, loss)]
+    final_acc: float
+    sv_final: np.ndarray      # (N,)
+    selection_counts: np.ndarray
+    selections: list          # [np.ndarray (M,)] per round
+    shapley_evals: int        # total utility evaluations spent
+    wall_time_s: float
+    params: PyTree
+    upload_bytes: int = 0     # total client->PS traffic over the run
+    download_bytes: int = 0   # total PS->client traffic (model broadcasts)
+
+
+def _pad_clients(x, y, parts):
+    cap = max(int(p.size) for p in parts)
+    xs = np.zeros((len(parts), cap) + x.shape[1:], np.float32)
+    ys = np.zeros((len(parts), cap), np.int32)
+    nv = np.zeros((len(parts),), np.int32)
+    for i, p in enumerate(parts):
+        xs[i, : p.size] = x[p]
+        ys[i, : p.size] = y[p]
+        nv[i] = p.size
+    return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(nv)
+
+
+def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
+                  model: Optional[ClassifierModel] = None) -> FLResult:
+    t_start = time.time()
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.key(cfg.seed)
+
+    if data is None:
+        data = make_dataset(cfg.dataset, n_train=cfg.n_train, n_val=cfg.n_val,
+                            n_test=cfg.n_test, seed=cfg.seed)
+    if model is None:
+        model = make_classifier(cfg.dataset)
+
+    # ---- partition data across clients (Dirichlet x power-law) ----------
+    fractions = power_law_fractions(cfg.n_clients, rng)
+    parts = dirichlet_partition(data.y_train, cfg.n_clients,
+                                cfg.dirichlet_alpha, rng, fractions)
+    xs, ys, n_valid = _pad_clients(data.x_train, data.y_train, parts)
+    n_k_all = n_valid.astype(jnp.float32)
+
+    # ---- heterogeneity assignments --------------------------------------
+    n_stragglers = int(round(cfg.straggler_frac * cfg.n_clients))
+    straggler_ids = set(rng.choice(cfg.n_clients, n_stragglers, replace=False).tolist())
+    noise_perm = rng.permutation(cfg.n_clients)  # sigma_k = rank * sigma / N
+    sigma_k_all = np.zeros(cfg.n_clients, np.float32)
+    for rank, k in enumerate(noise_perm):
+        sigma_k_all[k] = rank * cfg.privacy_sigma / cfg.n_clients
+
+    # ---- model / selector / shapley setup --------------------------------
+    key, init_key = jax.random.split(key)
+    params = model.init(init_key)
+    selector = make_selector(cfg.selector, cfg.n_clients, cfg.m,
+                             seed=cfg.seed, **cfg.selector_kwargs)
+    if cfg.selector == "greedyfed":
+        selector.averaging = cfg.sv_averaging
+        selector.alpha = cfg.sv_alpha
+    state = selector.init_state()
+
+    x_val, y_val = jnp.asarray(data.x_val), jnp.asarray(data.y_val)
+
+    def utility_fn(p):  # U(w) = -L(w; D_val)
+        return -model.loss(p, x_val, y_val)
+
+    batched_utility_fn = None
+    if cfg.shapley_impl == "batched":
+        from repro.core.shapley_batched import make_batched_mlp_utility
+        batched_utility_fn = make_batched_mlp_utility(model, x_val, y_val)
+
+    needs_sv = selector.uses_shapley
+    max_iters = cfg.shapley_max_iters or 50 * cfg.m
+
+    all_losses_fn = jax.jit(jax.vmap(
+        lambda p, x, y, n: local_loss(model, p, x, y, n),
+        in_axes=(None, 0, 0, 0)))
+
+    eval_acc = jax.jit(model.accuracy)
+    x_test, y_test = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+
+    ctx_base = SelectionContext(data_fractions=jnp.asarray(fractions))
+
+    test_acc, val_loss_hist, selections = [], [], []
+    total_evals = 0
+    model_bytes = sum(int(x.size) * x.dtype.itemsize
+                      for x in jax.tree.leaves(params))
+    upload_bytes = download_bytes = 0
+
+    for t in range(cfg.rounds):
+        key, sel_key, round_key = jax.random.split(key, 3)
+
+        ctx = ctx_base
+        if selector.uses_local_losses:
+            ctx = ctx._replace(local_losses=all_losses_fn(params, xs, ys, n_valid))
+
+        sel, state = selector.select(state, sel_key, ctx)
+        sel = np.asarray(sel, np.int64)
+        selections.append(sel)
+
+        # ---- ClientUpdate at each selected client -----------------------
+        ckeys = jax.random.split(round_key, len(sel) + 1)
+        updates = []
+        for i, k_id in enumerate(sel):
+            if int(k_id) in straggler_ids:
+                ek = int(rng.integers(1, cfg.client.epochs + 1))
+            else:
+                ek = cfg.client.epochs
+            upd = client_update(
+                model, cfg.client, params, xs[k_id], ys[k_id], n_valid[k_id],
+                jnp.asarray(ek), jnp.asarray(sigma_k_all[k_id]), ckeys[i])
+            if cfg.upload_codec != "identity":
+                upd, nbytes = compress_update(cfg.upload_codec, upd, params)
+            else:
+                nbytes = model_bytes
+            upload_bytes += nbytes
+            updates.append(upd)
+        download_bytes += model_bytes * len(sel)  # w^t broadcast
+
+        stacked = tree_stack(updates)
+        n_k_sel = n_k_all[jnp.asarray(sel)]
+
+        # ---- GTG-Shapley at the PS (Alg. 2 / batched variant) ------------
+        sv_round = None
+        if needs_sv:
+            if cfg.shapley_impl == "batched":
+                from repro.core.shapley_batched import gtg_shapley_batched
+                sv_round, stats = gtg_shapley_batched(
+                    stacked, n_k_sel, params, utility_fn,
+                    batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
+                    n_perms=max_iters)
+            else:
+                sv_round, stats = gtg_shapley(
+                    stacked, n_k_sel, params, utility_fn, ckeys[-1],
+                    eps=cfg.shapley_eps, max_iters=max_iters)
+            total_evals += int(stats.utility_evals)
+
+        # ---- ModelAverage (Alg. 1 line 9) --------------------------------
+        params = weighted_average(stacked, normalized_weights(n_k_sel))
+
+        state = selector.update(state, sel, sv_round=sv_round)
+
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            acc = float(eval_acc(params, x_test, y_test))
+            vl = float(-utility_fn(params))
+            test_acc.append((t + 1, acc))
+            val_loss_hist.append((t + 1, vl))
+
+    counts = np.asarray(state.valuation.counts)
+    return FLResult(
+        config=cfg,
+        test_acc=test_acc,
+        val_loss=val_loss_hist,
+        final_acc=test_acc[-1][1] if test_acc else float("nan"),
+        sv_final=np.asarray(state.valuation.sv),
+        selection_counts=counts,
+        selections=selections,
+        shapley_evals=total_evals,
+        wall_time_s=time.time() - t_start,
+        params=params,
+        upload_bytes=upload_bytes,
+        download_bytes=download_bytes,
+    )
+
+
+def run_centralized(cfg: FLConfig, data: Optional[SynthDataset] = None,
+                    model: Optional[ClassifierModel] = None) -> FLResult:
+    """Upper bound: the server trains on the pooled data, same step budget."""
+    if data is None:
+        data = make_dataset(cfg.dataset, n_train=cfg.n_train, n_val=cfg.n_val,
+                            n_test=cfg.n_test, seed=cfg.seed)
+    if model is None:
+        model = make_classifier(cfg.dataset)
+    key = jax.random.key(cfg.seed)
+    key, init_key = jax.random.split(key)
+    params = model.init(init_key)
+
+    x = jnp.asarray(data.x_train)
+    y = jnp.asarray(data.y_train)
+    n = jnp.asarray(x.shape[0])
+    t_start = time.time()
+    test_acc = []
+    eval_acc = jax.jit(model.accuracy)
+    x_test, y_test = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    for t in range(cfg.rounds):
+        key, k = jax.random.split(key)
+        params = client_update(model, cfg.client, params, x, y, n,
+                               jnp.asarray(cfg.client.epochs),
+                               jnp.asarray(0.0), k)
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            test_acc.append((t + 1, float(eval_acc(params, x_test, y_test))))
+    return FLResult(cfg, test_acc, [], test_acc[-1][1], np.zeros(cfg.n_clients),
+                    np.zeros(cfg.n_clients, np.int32), [], 0,
+                    time.time() - t_start, params)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused softmax cross-entropy (the GTG utility eval).
+
+U(S) = -L(w_S; D_val) is evaluated once per Monte-Carlo subset — the second
+hot-spot of Alg. 2.  The fused kernel computes per-row CE without ever
+materialising the (rows, vocab) softmax in HBM: the vocab axis is tiled into
+VMEM blocks and reduced online (running max + rescaled sum — the same
+recurrence as flash attention), while the gold-label logit is picked up by a
+masked reduction in the same pass.
+
+Layout:
+    logits (R, V) bf16/f32, labels (R,) int32 -> per-row loss (R,) f32
+Grid: (V // BLOCK_V,) — each step streams an (R, BLOCK_V) tile; the running
+(m, s, gold) state lives in three (R, 1) f32 VMEM accumulators (output
+aliasing across grid steps on the same block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_V = 2048
+NEG_INF = -1e30
+
+
+def _ce_kernel(logits_ref, labels_ref, m_ref, s_ref, gold_ref):
+    i = pl.program_id(0)
+    tile = logits_ref[...].astype(jnp.float32)           # (R, BLOCK_V)
+    r, bv = tile.shape
+    labels = labels_ref[...].reshape(r)                  # (R,)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        gold_ref[...] = jnp.zeros_like(gold_ref)
+
+    # online logsumexp over the vocab tiles
+    m_prev = m_ref[...]                                  # (R, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(tile, axis=-1, keepdims=True))
+    s_ref[...] = s_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(tile - m_new), axis=-1, keepdims=True)
+    m_ref[...] = m_new
+
+    # gold logit: masked pick within this tile
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, bv), 1) + i * bv
+    hit = col == labels[:, None]
+    gold_ref[...] += jnp.sum(jnp.where(hit, tile, 0.0), axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def ce_loss_kernel(logits: jax.Array, labels: jax.Array, *,
+                   block_v: int = BLOCK_V,
+                   interpret: bool = False) -> jax.Array:
+    """(R, V) x (R,) -> per-row CE loss (R,) f32.  V % block_v == 0."""
+    r, v = logits.shape
+    assert v % block_v == 0, (v, block_v)
+    grid = (v // block_v,)
+
+    m, s, gold = pl.pallas_call(
+        _ce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, block_v), lambda i: (0, i)),
+            pl.BlockSpec((r, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r, 1), lambda i: (0, 0)),
+            pl.BlockSpec((r, 1), lambda i: (0, 0)),
+            pl.BlockSpec((r, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, labels.reshape(r, 1).astype(jnp.int32))
+
+    logz = m[:, 0] + jnp.log(s[:, 0])
+    return logz - gold[:, 0]

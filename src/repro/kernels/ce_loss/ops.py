@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the fused CE utility evaluation."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ce_loss.kernel import ce_loss_kernel
+from repro.kernels.ce_loss.ref import ce_loss_ref
+
+NEG_INF = -1e30
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_v"))
+def ce_loss(logits: jax.Array, labels: jax.Array, *,
+            use_kernel: bool = True, interpret: bool = True,
+            block_v: int = 2048) -> jax.Array:
+    """Mean CE over rows; (R, V) logits, (R,) int labels -> scalar f32.
+
+    Pads the vocab axis to the kernel tile (padded logits masked to -inf,
+    which contribute exp(-inf)=0 to the denominator).
+    """
+    r, v = logits.shape
+    if not use_kernel or v < block_v:
+        return jnp.mean(ce_loss_ref(logits, labels))
+    pad = (-v) % block_v
+    if pad:
+        fill = jnp.full((r, pad), NEG_INF, logits.dtype)
+        logits = jnp.concatenate([logits, fill], axis=1)
+    per = ce_loss_kernel(logits, labels, block_v=block_v, interpret=interpret)
+    return jnp.mean(per)

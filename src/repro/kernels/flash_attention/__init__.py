@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.ops import flash_attention_tpu
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention_tpu", "attention_ref"]

@@ -1,0 +1,47 @@
+"""jit'd public wrapper: model-shaped GQA in, kernel layout out.
+
+Folds (B, S, Hq=Kh*G, hd) GQA tensors into the kernel's (B*Kh, G*S, hd)
+layout.  NOTE the fold changes query positions (query row r of group g is
+token r), so instead we fold G into the BH axis by repeating KV — wrapper
+keeps semantics identical to models/lm/attention.attention.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "use_kernel", "interpret"))
+def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 512, block_k: int = 512,
+                        use_kernel: bool = True,
+                        interpret: bool = True) -> jax.Array:
+    """q (B, S, Hq, hd); k/v (B, T, Kh, hd) -> (B, S, Hq, hd)."""
+    b, s_len, hq, hd = q.shape
+    t_len, kh = k.shape[1], k.shape[2]
+    g = hq // kh
+
+    # (B, S, Kh, G, hd) -> (B*Kh*G, S, hd); KV repeated per group
+    qf = q.reshape(b, s_len, kh, g, hd).transpose(0, 2, 3, 1, 4)
+    qf = qf.reshape(b * kh * g, s_len, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(
+        b * kh * g, t_len, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(
+        b * kh * g, t_len, hd)
+
+    if use_kernel and s_len % block_q == 0 and t_len % block_k == 0:
+        of = flash_attention_kernel(qf, kf, vf, causal=causal, window=window,
+                                    block_q=block_q, block_k=block_k,
+                                    interpret=interpret)
+    else:
+        of = attention_ref(qf, kf, vf, causal=causal, window=window)
+
+    o = of.reshape(b, kh, g, s_len, hd).transpose(0, 3, 1, 2, 4)
+    return o.reshape(b, s_len, hq, hd)

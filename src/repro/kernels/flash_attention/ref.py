@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash_attention kernel (dense scores + mask)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q (BH, S, hd); k/v (BH, T, hd) -> (BH, S, hd)."""
+    s_len, t_len = q.shape[1], k.shape[1]
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    q_pos = jnp.arange(s_len)[:, None]
+    k_pos = jnp.arange(t_len)[None, :]
+    mask = jnp.ones((s_len, t_len), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.weighted_avg.ops import weighted_avg
+from repro.kernels.weighted_avg.ref import weighted_avg_ref
+
+__all__ = ["weighted_avg", "weighted_avg_ref"]

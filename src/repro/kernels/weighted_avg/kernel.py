@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused multi-model weighted averaging.
+
+The ModelAverage hot-spot of GTG-Shapley: a round evaluates O(T_mc * M^2)
+subset averages of the SAME stacked client-update matrix W (M, D) under
+different weight vectors.  The kernel processes a whole *batch* of R weight
+vectors per pass over W, so HBM traffic for the weights is amortised R-fold
+versus calling a plain weighted sum per subset (the GPU reference re-reads
+W per subset — DESIGN.md §3).
+
+Layout:
+    stacked  (M, D)  — client models flattened to a single parameter axis
+    weights  (R, M)  — R normalised subset-weight rows (one per MC subset)
+    out      (R, D)  — out[r] = sum_k weights[r,k] * stacked[k]
+
+Grid: (D // BLOCK_D,).  Per step the kernel streams a (M, BLOCK_D) tile of W
+into VMEM once and contracts it against the full (R, M) weight matrix (tiny,
+kept resident in VMEM) on the MXU: (R, M) @ (M, BLOCK_D).
+
+BLOCK_D is 128-aligned for the MXU; M (<= ~32 clients) and R ride in the
+sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048  # lane-dim tile; multiple of 128 (MXU) and 8*128 (VREG)
+
+
+def _wavg_kernel(w_ref, stacked_ref, out_ref):
+    # w_ref: (R, M) in VMEM; stacked_ref: (M, BLOCK_D); out_ref: (R, BLOCK_D)
+    w = w_ref[...].astype(jnp.float32)
+    tile = stacked_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.dot(
+        w, tile, preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def weighted_avg_kernel(stacked: jax.Array, weights: jax.Array, *,
+                        block_d: int = BLOCK_D,
+                        interpret: bool = False) -> jax.Array:
+    """stacked (M, D) x weights (R, M) -> (R, D).  D % block_d == 0."""
+    m, d = stacked.shape
+    r = weights.shape[0]
+    assert weights.shape == (r, m), (weights.shape, (r, m))
+    assert d % block_d == 0, (d, block_d)
+
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        _wavg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, m), lambda i: (0, 0)),          # weights resident
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),    # stream W tiles
+        ],
+        out_specs=pl.BlockSpec((r, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, d), stacked.dtype),
+        interpret=interpret,
+    )(weights, stacked)

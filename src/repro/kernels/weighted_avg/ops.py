@@ -1,0 +1,48 @@
+"""jit'd public wrapper: pytree-aware batched subset averaging.
+
+`weighted_avg(stacked_tree, weights)` flattens the stacked client pytree to
+one (M, D_total) matrix view per leaf, runs the Pallas kernel per leaf (or
+the jnp reference off-TPU), and rebuilds R averaged pytrees stacked on a
+leading subset axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weighted_avg.kernel import weighted_avg_kernel
+from repro.kernels.weighted_avg.ref import weighted_avg_ref
+
+PyTree = Any
+
+
+def _pad_to(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[-1]) % mult
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_d"))
+def weighted_avg(stacked_tree: PyTree, weights: jax.Array, *,
+                 use_kernel: bool = True, interpret: bool = True,
+                 block_d: int = 2048) -> PyTree:
+    """stacked_tree leaves (M, *s); weights (R, M) -> leaves (R, *s)."""
+
+    def one(leaf: jax.Array) -> jax.Array:
+        m = leaf.shape[0]
+        flat = leaf.reshape(m, -1)
+        d = flat.shape[1]
+        if not use_kernel or d < block_d:
+            out = weighted_avg_ref(flat, weights.astype(flat.dtype))
+        else:
+            padded = _pad_to(flat, block_d)
+            out = weighted_avg_kernel(padded, weights.astype(flat.dtype),
+                                      block_d=block_d, interpret=interpret)
+            out = out[:, :d]
+        return out.reshape((weights.shape[0],) + leaf.shape[1:])
+
+    return jax.tree.map(one, stacked_tree)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the weighted_avg kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_avg_ref(stacked: jax.Array, weights: jax.Array) -> jax.Array:
+    """stacked (M, D) x weights (R, M) -> (R, D) in f32 accumulation."""
+    out = jnp.einsum("rm,md->rd", weights.astype(jnp.float32),
+                     stacked.astype(jnp.float32))
+    return out.astype(stacked.dtype)

@@ -1,0 +1,123 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: named config variants per target pair.
+
+Each variant re-runs the dry-run roofline for one (arch, shape) pair with a
+config delta, so every hypothesis -> change -> before/after cycle is one
+CLI invocation producing a JSON record under experiments/perf/.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --target tinyllama_train
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.dryrun import run_one  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "perf")
+
+# variant name -> (arch, shape, config overrides)
+# Hypotheses are documented in EXPERIMENTS.md §Perf next to the measurements.
+VARIANTS = {
+    # ---- tinyllama-1.1b x train_4k (collective-bound, 22x compute) -------
+    "tinyllama_train/v0_baseline": ("tinyllama_1_1b", "train_4k", {}),
+    "tinyllama_train/v1_bf16_params": (
+        "tinyllama_1_1b", "train_4k", {"param_dtype": "bfloat16"}),
+    "tinyllama_train/v2_dp": (
+        "tinyllama_1_1b", "train_4k", {"parallelism": "dp"}),
+    "tinyllama_train/v3_dp_bf16": (
+        "tinyllama_1_1b", "train_4k",
+        {"parallelism": "dp", "param_dtype": "bfloat16"}),
+    "tinyllama_train/v4_dp_chunk2048": (
+        "tinyllama_1_1b", "train_4k",
+        {"parallelism": "dp", "attn_chunk": 2048}),
+    "tinyllama_train/v5_dp_chunk4096": (
+        "tinyllama_1_1b", "train_4k",
+        {"parallelism": "dp", "attn_chunk": 4096}),
+    "tinyllama_train/v6_dp_chunk2048_noremat": (
+        "tinyllama_1_1b", "train_4k",
+        {"parallelism": "dp", "attn_chunk": 2048, "remat": False}),
+    # ---- kimi-k2 x train_4k (most collective-bound absolute) -------------
+    "kimi_train/v0_baseline": ("kimi_k2_1t_a32b", "train_4k", {}),
+    "kimi_train/v1_bf16_params": (
+        "kimi_k2_1t_a32b", "train_4k", {"param_dtype": "bfloat16"}),
+    "kimi_train/v2_bf16_bigchunk": (
+        "kimi_k2_1t_a32b", "train_4k",
+        {"param_dtype": "bfloat16", "attn_chunk": 2048}),
+    "kimi_train/v3_bf16_remat_attn": (
+        "kimi_k2_1t_a32b", "train_4k",
+        {"param_dtype": "bfloat16", "attn_remat": True}),
+    "kimi_train/v4_remat_groups64": (
+        "kimi_k2_1t_a32b", "train_4k",
+        {"param_dtype": "bfloat16", "attn_remat": True, "moe_groups": 64}),
+    # ---- hymba-1.5b x train_4k (worst roofline fraction: memory) ---------
+    "hymba_train/v0_baseline": ("hymba_1_5b", "train_4k", {}),
+    "hymba_train/v1_dp": (
+        "hymba_1_5b", "train_4k", {"parallelism": "dp"}),
+    "hymba_train/v2_dp_attn_remat": (
+        "hymba_1_5b", "train_4k",
+        {"parallelism": "dp", "attn_remat": True}),
+    "hymba_train/v3_dp_remat_chunk128": (
+        "hymba_1_5b", "train_4k",
+        {"parallelism": "dp", "attn_remat": True, "ssm_chunk": 128}),
+    "hymba_train/v4_dp_remat_bf16": (
+        "hymba_1_5b", "train_4k",
+        {"parallelism": "dp", "attn_remat": True,
+         "param_dtype": "bfloat16"}),
+    "hymba_train/v5_dp_remat_chunk64": (
+        "hymba_1_5b", "train_4k",
+        {"parallelism": "dp", "attn_remat": True, "ssm_chunk": 64}),
+    "hymba_train/v6_dp_remat_c128_attnchunk256": (
+        "hymba_1_5b", "train_4k",
+        {"parallelism": "dp", "attn_remat": True, "ssm_chunk": 128,
+         "attn_chunk": 256}),
+}
+
+
+def run_variant(name: str) -> dict:
+    arch, shape, overrides = VARIANTS[name]
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    rec = run_one(arch, shape, multi_pod=False, assemble=True, save=False,
+                  cfg_override=cfg)
+    rec["variant"] = name
+    rec["overrides"] = overrides
+    os.makedirs(OUT, exist_ok=True)
+    fname = name.replace("/", "__") + ".json"
+    with open(os.path.join(OUT, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _summ(rec: dict) -> str:
+    r = rec["roofline"]
+    mem = rec["memory"].get("temp_size_in_bytes", 0) / 2 ** 30
+    return (f"compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+            f"collective={r['collective_s']:.3f}s dom={r['dominant']} "
+            f"util={r['useful_flops_ratio']:.2f} temp={mem:.1f}GiB")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", default=None,
+                    help="prefix filter, e.g. tinyllama_train")
+    ap.add_argument("--variant", default=None, help="exact variant name")
+    args = ap.parse_args()
+    names = [args.variant] if args.variant else [
+        n for n in VARIANTS if args.target is None or
+        n.startswith(args.target)]
+    for name in names:
+        try:
+            rec = run_variant(name)
+            print(f"[{name}] {_summ(rec)}")
+        except Exception as e:  # noqa: BLE001
+            print(f"[{name}] FAIL: {e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+No device allocation ever happens here — everything is jax.ShapeDtypeStruct
+(weak-type-correct, shardable), including the decode caches (via
+jax.eval_shape over init_cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import model as M
+from repro.models.lm.config import ArchConfig
+
+
+class InputShape(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """long_500k requires a sub-quadratic decode path (DESIGN.md §5)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: no sub-quadratic 500k decode"
+    return True, ""
+
+
+def pad_vocab(cfg: ArchConfig, multiple: int = 16) -> ArchConfig:
+    """Megatron-style vocab padding so the lm head shards over `model`."""
+    v = cfg.vocab
+    pad = (-v) % multiple
+    return dataclasses.replace(cfg, vocab=v + pad) if pad else cfg
+
+
+def batch_struct(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct batch for train/prefill kinds."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), dt)
+    if cfg.frontend == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), dt)
+    return batch
+
+
+def decode_structs(cfg: ArchConfig, shape: InputShape) -> tuple[dict, dict]:
+    """(cache, batch) ShapeDtypeStructs for a decode step."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    batch = {"token": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    return cache, batch
+
+
+def params_struct(cfg: ArchConfig) -> dict:
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.key(0)))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """All abstract inputs for the step function of this (arch, shape)."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": batch_struct(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": batch_struct(cfg, shape)}
+    cache, batch = decode_structs(cfg, shape)
+    return {"cache": cache, "batch": batch}

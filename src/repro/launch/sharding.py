@@ -1,0 +1,213 @@
+"""Partition rules: params / optimizer state / batches / caches -> PartitionSpec.
+
+Conventions (DESIGN.md §7):
+  * batch dims shard over ("pod","data") — when divisible;
+  * heads / d_ff / experts / vocab shard over "model" — when divisible
+    (e.g. hymba's 25 heads and <16 KV heads replicate instead);
+  * fsdp archs additionally shard the d_model/d_ff dim of big matrices over
+    "data" (GSPMD all-gathers them at use — classic FSDP traffic);
+  * decode KV caches shard KV-heads over "model" when divisible, otherwise
+    the cache *sequence* dim (distributed-softmax decode attention);
+  * SSM params/states shard over heads only when ssm_heads % model == 0.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.lm.config import ArchConfig
+from repro.optim.adamw import AdamWState
+from repro.optim.sgd import SGDState
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+class Rules:
+    def __init__(self, cfg: ArchConfig, mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.m = mesh.shape["model"]
+        # "dp" parallelism: the model axis joins the batch axes and no param
+        # dim is model-sharded — right for small archs (tinyllama) and archs
+        # whose head counts don't divide the axis (hymba's 25 heads)
+        self.dp = getattr(cfg, "parallelism", "tp") == "dp"
+        if self.dp:
+            self.batch_axes = tuple(mesh.axis_names)
+        else:
+            self.batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+        self.n_batch = 1
+        for a in self.batch_axes:
+            self.n_batch *= mesh.shape[a]
+        self.data = "data" if cfg.fsdp else None
+        self.d_fsdp = mesh.shape["data"] if cfg.fsdp else 1
+
+    # -- helpers ----------------------------------------------------------
+    def model_if(self, dim: int):
+        if self.dp:
+            return None
+        return "model" if dim % self.m == 0 else None
+
+    def data_if(self, dim: int):
+        return self.data if (self.data and dim % self.d_fsdp == 0) else None
+
+    def batch_if(self, dim: int):
+        if dim % self.n_batch == 0:
+            return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+        if len(self.batch_axes) > 1 and dim % self.mesh.shape["data"] == 0:
+            return "data"
+        return None
+
+    @property
+    def ssm_ok(self) -> bool:
+        return self.cfg.ssm_heads % self.m == 0 if self.cfg.has_ssm else False
+
+    # -- parameter rules ----------------------------------------------------
+    def param_spec(self, path: str, shape: tuple) -> P:
+        cfg, leading = self.cfg, ()
+        if path.startswith(("layers/", "enc_layers/")):
+            leading = (None,)           # stacked layer axis
+            shape = shape[1:]
+
+        def spec(*dims):
+            return P(*(leading + dims))
+
+        name = path.split("/")[-1]
+        parent = path.split("/")[-2] if "/" in path else ""
+
+        if path == "embed/table":
+            return P(None, self.model_if(shape[1]))
+        if path == "head/w":
+            return P(self.data_if(shape[0]), self.model_if(shape[1]))
+        if name == "scale":            # all norm scales replicated
+            return spec(*(None,) * len(shape))
+        if parent in ("attn", "cross_attn"):
+            if name == "wq":
+                return spec(self.data_if(shape[0]), self.model_if(shape[1]), None)
+            if name in ("wk", "wv"):
+                return spec(self.data_if(shape[0]), self.model_if(shape[1]), None)
+            if name == "wo":
+                return spec(self.model_if(shape[0]), None, self.data_if(shape[2]))
+        if parent == "ffn":
+            if name in ("w_gate", "w_up"):
+                return spec(self.data_if(shape[0]), self.model_if(shape[1]))
+            if name == "w_down":
+                return spec(self.model_if(shape[0]), self.data_if(shape[1]))
+        if parent == "moe":
+            if name == "router":
+                return spec(None, None)
+            if name in ("w_gate", "w_up"):   # (E, D, F)
+                return spec(self.model_if(shape[0]), self.data_if(shape[1]), None)
+            if name == "w_down":             # (E, F, D)
+                return spec(self.model_if(shape[0]), self.data_if(shape[1]), None)
+        if parent == "ssm":
+            di_ax = "model" if self.ssm_ok else None
+            if name in ("proj_z", "proj_x"):
+                return spec(self.data_if(shape[0]), di_ax)
+            if name == "proj_dt":
+                return spec(self.data_if(shape[0]),
+                            di_ax if shape[1] % self.m == 0 else None)
+            if name == "proj_bc":
+                return spec(self.data_if(shape[0]), None)
+            if name == "conv_x":
+                return spec(None, di_ax)
+            if name == "conv_bc":
+                return spec(None, None)
+            if name == "out_proj":
+                return spec(di_ax, self.data_if(shape[1]))
+            # A_log / D_skip / dt_bias
+            return spec(*(None,) * len(shape))
+        # fallback: replicate
+        return P(*((None,) * (len(leading) + len(shape))))
+
+
+def param_specs(cfg: ArchConfig, mesh, params_shape: PyTree) -> PyTree:
+    rules = Rules(cfg, mesh)
+
+    def one(path, leaf):
+        return rules.param_spec(_path_str(path), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_specs(cfg: ArchConfig, pspecs: PyTree) -> PyTree:
+    if cfg.optimizer == "sgd":
+        return SGDState(momentum=pspecs)
+    return AdamWState(mu=pspecs, nu=pspecs, step=P())
+
+
+def batch_specs(cfg: ArchConfig, mesh, batch_shape: PyTree) -> PyTree:
+    rules = Rules(cfg, mesh)
+
+    def one(path, leaf):
+        b = rules.batch_if(leaf.shape[0])
+        return P(b, *((None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_specs(cfg: ArchConfig, mesh, cache_shape: PyTree) -> PyTree:
+    """Decode caches: leaves are (L, B, ...) except the `pos` scalar."""
+    rules = Rules(cfg, mesh)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        if name == "pos":
+            return P()
+        b = rules.batch_if(leaf.shape[1])
+        if name in ("k", "v", "cross_k", "cross_v"):
+            L, B, C, Kh, hd = leaf.shape
+            if Kh % rules.m == 0:
+                return P(None, b, None, "model", None)
+            if C % rules.m == 0:
+                return P(None, b, "model", None, None)   # sequence-sharded
+            return P(None, b, None, None, None)
+        if name == "ssm_state":       # (L, B, H, P, N)
+            h_ax = "model" if rules.ssm_ok else None
+            return P(None, b, h_ax, None, None)
+        if name in ("ssm_conv_x",):   # (L, B, k, di)
+            di_ax = "model" if rules.ssm_ok else None
+            return P(None, b, None, di_ax)
+        if name == "ssm_conv_bc":
+            return P(None, b, None, None)
+        return P(*((None,) * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def logits_spec(cfg: ArchConfig, mesh, batch: int) -> P:
+    """Decode-step logits (B, V): batch + vocab sharding when divisible."""
+    rules = Rules(cfg, mesh)
+    return P(rules.batch_if(batch), rules.model_if(cfg.vocab))
+
+
+def to_named(mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def launch_cfg(cfg: ArchConfig, mesh, shape=None) -> ArchConfig:
+    """Arm the model's sharding-constraint hooks + MoE grouping for `mesh`."""
+    import dataclasses
+    rules = Rules(cfg, mesh)
+    upd: dict = {
+        "mesh_batch_axes": rules.batch_axes,
+        "mesh_batch_sizes": tuple(mesh.shape[a] for a in rules.batch_axes),
+        "mesh_model_axis": "" if rules.dp else "model",
+        "mesh_model_size": 0 if rules.dp else rules.m,
+    }
+    if cfg.is_moe and shape is not None and cfg.moe_groups == 1:
+        # default grouping: one dispatch group per data shard (an explicit
+        # cfg.moe_groups override, e.g. from the §Perf hillclimb, wins)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        groups = rules.n_batch
+        while groups > 1 and (tokens % groups or tokens // groups < 8):
+            groups //= 2
+        upd["moe_groups"] = max(groups, 1)
+    return dataclasses.replace(cfg, **upd)

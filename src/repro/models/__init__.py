@@ -1,0 +1,3 @@
+from repro.models.mlp_cnn import ClassifierModel, make_mlp, make_cnn, make_classifier
+
+__all__ = ["ClassifierModel", "make_mlp", "make_cnn", "make_classifier"]

@@ -1,0 +1,11 @@
+from repro.models.lm.config import ArchConfig, param_count, active_param_count
+from repro.models.lm.model import (
+    init_params, forward, loss_fn, train_step, make_train_step,
+    init_cache, prefill_step, decode_step,
+)
+
+__all__ = [
+    "ArchConfig", "param_count", "active_param_count",
+    "init_params", "forward", "loss_fn", "train_step", "make_train_step",
+    "init_cache", "prefill_step", "decode_step",
+]

@@ -1,0 +1,122 @@
+"""GQA attention: dense reference, chunked-flash (pure JAX), decode w/ cache.
+
+Never materialises the full (S, T) score matrix for long sequences: the
+flash path is a lax.scan over KV blocks carrying the running (max, denom,
+acc) per query — the same online-softmax recurrence as the Pallas kernel in
+kernels/flash_attention.py (which is the TPU-target implementation; this
+pure-JAX version is what the dry-run lowers, see DESIGN.md §3).
+
+Sliding-window attention (SWA) is a banded mask; on the flash path fully
+out-of-window KV blocks are skipped at runtime via lax.cond (true compute
+skipping — the scan is not vmapped over the block axis).
+
+Shapes: q (B, S, Hq, hd) with Hq = Kh * G (GQA group G); k/v (B, T, Kh, hd).
+Internally q is regrouped to (B, S, Kh, G, hd) so the contraction never
+repeats KV heads.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, kv_pos, *, causal: bool, window: int, kv_valid=None):
+    """(..., S, T) boolean mask: True = attend."""
+    m = jnp.ones(q_pos.shape + kv_pos.shape, bool)
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= kv_pos[None, :] > q_pos[:, None] - window
+    if kv_valid is not None:
+        m &= kv_valid[None, :]
+    return m
+
+
+def dense_attention(q, k, v, *, q_pos, kv_pos, causal=True, window=0,
+                    kv_valid=None):
+    """Reference / decode path. q (B,S,Hq,hd), k/v (B,T,Kh,hd)."""
+    B, S, Hq, hd = q.shape
+    T, Kh = k.shape[1], k.shape[2]
+    G = Hq // Kh
+    qg = q.reshape(B, S, Kh, G, hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = _mask(q_pos, kv_pos, causal=causal, window=window, kv_valid=kv_valid)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, q_pos, causal=True, window=0, kv_chunk=512,
+                    remat=False):
+    """Online-softmax over KV blocks; memory O(S * kv_chunk) per head.
+
+    Assumes T % kv_chunk == 0 (launch/input specs guarantee this).
+    remat=True checkpoints each KV-block step, so the backward pass
+    recomputes per block instead of saving every block's (S, kv_chunk)
+    probability tensor — peak activation memory drops ~n_blocks-fold
+    (§Perf hymba iteration).
+    """
+    B, S, Hq, hd = q.shape
+    T, Kh = k.shape[1], k.shape[2]
+    G = Hq // Kh
+    n_blocks = T // kv_chunk
+    qg = q.reshape(B, S, Kh, G, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+
+    def body(carry, blk):
+        acc, m, l = carry
+        start = blk * kv_chunk
+        kb = jax.lax.dynamic_slice_in_dim(k, start, kv_chunk, 1).astype(jnp.float32)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, kv_chunk, 1).astype(jnp.float32)
+        kv_pos = start + jnp.arange(kv_chunk)
+        mask = _mask(q_pos, kv_pos, causal=causal, window=window)  # (S, kc)
+
+        def compute(_):
+            s = jnp.einsum("bskgd,btkd->bkgst", qg, kb) * scale
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkgst,btkd->bkgsd", p, vb)
+            return acc_new, m_new, l_new
+
+        # runtime block skipping: causal blocks entirely in the future, or
+        # SWA blocks entirely behind the window
+        any_valid = jnp.any(mask)
+        acc, m, l = jax.lax.cond(any_valid, compute, lambda _: (acc, m, l),
+                                 operand=None)
+        return (acc, m, l), None
+
+    acc0 = jnp.zeros((B, Kh, G, S, hd), jnp.float32)
+    m0 = jnp.full((B, Kh, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kh, G, S), jnp.float32)
+    body_fn = jax.checkpoint(body) if remat else body
+    (acc, m, l), _ = jax.lax.scan(body_fn, (acc0, m0, l0),
+                                  jnp.arange(n_blocks))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B,Kh,G,S,hd) -> (B,S,Hq,hd)
+    o = jnp.moveaxis(o, 3, 1).reshape(B, S, Hq, hd)
+    return o.astype(q.dtype)
+
+
+def attention(q, k, v, *, q_pos, kv_pos=None, causal=True, window=0,
+              impl="auto", kv_chunk=512, kv_valid=None, remat=False):
+    """Dispatch: dense for short/decode, flash for long train/prefill."""
+    T = k.shape[1]
+    if impl == "auto":
+        impl = "flash" if (q.shape[1] > 1024 and T % kv_chunk == 0) else "dense"
+    if impl == "flash":
+        return flash_attention(q, k, v, q_pos=q_pos, causal=causal,
+                               window=window, kv_chunk=kv_chunk, remat=remat)
+    if kv_pos is None:
+        kv_pos = jnp.arange(T)
+    return dense_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                           window=window, kv_valid=kv_valid)

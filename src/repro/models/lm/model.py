@@ -1,0 +1,545 @@
+"""Model assembly for all six families.
+
+Layer parameters are *stacked* along a leading layer axis and the forward
+pass is a `lax.scan` over layers (small HLO, fast multi-device compile;
+roofline terms are assembled per-layer x trip-count, see launch/roofline).
+
+Public API (all pure):
+    init_params(cfg, key)                  -> params pytree
+    forward(cfg, params, batch)            -> logits (B, S, V)
+    loss_fn(cfg, params, batch)            -> scalar
+    make_train_step(cfg)                   -> (params, opt, batch) -> ...
+    init_cache(cfg, batch_size, cache_len) -> cache pytree
+    prefill_step(cfg, params, batch)       -> (cache, last_logits)
+    decode_step(cfg, params, cache, batch) -> (cache, logits)
+
+Decode caches: KV tensors are (L, B, C, Kh, hd) ring buffers (C = window for
+SWA archs — O(window) memory at 500k context); SSM caches are O(1) states.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.attention import attention, dense_attention
+from repro.models.lm.config import ArchConfig
+from repro.models.lm.layers import (
+    apply_norm, apply_rope, cross_entropy_tokens, dense_init, embed_apply,
+    embed_init, ffn_apply, ffn_init, head_apply, head_init, norm_init,
+)
+from repro.models.lm.moe import moe_apply, moe_init
+from repro.models.lm.ssm import (
+    ssm_cache_init, ssm_decode_step, ssm_forward, ssm_init,
+)
+from repro.optim import make_optimizer
+
+PyTree = Any
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _constrain(cfg: ArchConfig, x, dims):
+    """Sharding-constraint hook; no-op unless the launcher set mesh axes.
+
+    dims entries: "batch" (shard over the batch axes), "model", or None.
+    """
+    if not cfg.mesh_batch_axes and not cfg.mesh_model_axis:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = []
+    for i, d in enumerate(dims):
+        if d == "batch":
+            # keep only the leading batch axes that divide this dim
+            axes, size = [], 1
+            for a, s in zip(cfg.mesh_batch_axes, cfg.mesh_batch_sizes):
+                if x.shape[i] % (size * s) == 0:
+                    axes.append(a)
+                    size *= s
+            spec.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+        elif d == "model" and cfg.mesh_model_size and x.shape[i] % cfg.mesh_model_size == 0:
+            spec.append(cfg.mesh_model_axis)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ======================================================== attention =========
+def attn_init(key, cfg: ArchConfig, cross: bool = False):
+    d, hq, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, (hq, hd)),
+        "wk": dense_init(k2, d, (kh, hd)),
+        "wv": dense_init(k3, d, (kh, hd)),
+        "wo": jax.random.normal(k4, (hq, hd, d), jnp.float32) * (1.0 / (hq * hd)) ** 0.5,
+    }
+
+
+def _qkv(p, cfg, x, kv_x=None, *, rope: bool, q_pos=None, kv_pos=None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", kv_x, p["wv"].astype(x.dtype))
+    if rope:
+        q = apply_rope(q, q_pos, frac=cfg.rope_frac, theta=cfg.rope_theta)
+        k = apply_rope(k, kv_pos, frac=cfg.rope_frac, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply_seq(p, cfg: ArchConfig, x, *, causal=True, rope=True,
+                   kv_x=None, return_kv=False):
+    """Full-sequence path (train / prefill / encoder)."""
+    S = x.shape[1]
+    t = (kv_x if kv_x is not None else x).shape[1]
+    q_pos = jnp.arange(S)
+    kv_pos = jnp.arange(t)
+    q, k, v = _qkv(p, cfg, x, kv_x, rope=rope, q_pos=q_pos, kv_pos=kv_pos)
+    o = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                  window=cfg.window, impl=cfg.attn_impl,
+                  kv_chunk=cfg.attn_chunk, remat=cfg.attn_remat)
+    y = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _ring_positions(pos, cache_len):
+    """Absolute position stored in each ring slot; negative => unwritten."""
+    s = jnp.arange(cache_len)
+    return pos - ((pos - s) % cache_len)
+
+
+def attn_apply_decode(p, cfg: ArchConfig, x, kv_cache, pos, *, rope=True):
+    """One-token decode. x (B, 1, D); kv_cache {k,v}: (B, C, Kh, hd)."""
+    cache_len = kv_cache["k"].shape[1]
+    q_pos = pos[None] if pos.ndim == 0 else pos
+    q, k_new, v_new = _qkv(p, cfg, x, rope=rope, q_pos=q_pos, kv_pos=q_pos)
+
+    slot = pos % cache_len
+    k = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k_new.astype(kv_cache["k"].dtype), slot, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v_new.astype(kv_cache["v"].dtype), slot, 1)
+
+    kv_pos = _ring_positions(pos, cache_len)
+    kv_valid = kv_pos >= 0
+    o = dense_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True,
+                        window=cfg.window, kv_valid=kv_valid)
+    y = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}
+
+
+def attn_apply_cross_decode(p, cfg, x, cross_kv):
+    """Decoder cross-attention against a fixed encoder cache (no causality)."""
+    k, v = cross_kv["k"], cross_kv["v"]
+    t = k.shape[1]
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    kv_pos = jnp.arange(t)
+    o = dense_attention(q, k, v, q_pos=jnp.zeros((1,), jnp.int32),
+                        kv_pos=kv_pos, causal=False, window=0)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(x.dtype))
+
+
+# ====================================================== layer blocks ========
+def layer_init(key, cfg: ArchConfig):
+    keys = jax.random.split(key, 8)
+    p = {"norm1": norm_init(cfg.d_model)}
+    if cfg.has_attn:
+        p["attn"] = attn_init(keys[0], cfg)
+    if cfg.has_ssm:
+        p["ssm"] = ssm_init(keys[1], cfg)
+    if cfg.family == "hybrid":
+        p["attn_out_norm"] = norm_init(cfg.d_model)
+        p["ssm_out_norm"] = norm_init(cfg.d_model)
+    if cfg.is_moe:
+        p["norm2"] = norm_init(cfg.d_model)
+        p["moe"] = moe_init(keys[2], cfg)
+    elif cfg.d_ff > 0:
+        p["norm2"] = norm_init(cfg.d_model)
+        p["ffn"] = ffn_init(keys[3], cfg.d_model, cfg.d_ff, cfg.ffn_kind)
+    if cfg.encoder_layers:  # decoder layer of an enc-dec model
+        p["cross_norm"] = norm_init(cfg.d_model)
+        p["cross_attn"] = attn_init(keys[4], cfg, cross=True)
+    return p
+
+
+def _mix_sublayer(p, cfg: ArchConfig, x):
+    """Token-mixing sublayer on the *normed* input (full-sequence path)."""
+    h = apply_norm(cfg.norm_kind, p["norm1"], x)
+    if cfg.family == "hybrid":
+        a = attn_apply_seq(p["attn"], cfg, h)
+        s = ssm_forward(p["ssm"], cfg, h)
+        a = apply_norm(cfg.norm_kind, p["attn_out_norm"], a)
+        s = apply_norm(cfg.norm_kind, p["ssm_out_norm"], s)
+        return 0.5 * (a + s)
+    if cfg.has_ssm:
+        return ssm_forward(p["ssm"], cfg, h)
+    return attn_apply_seq(p["attn"], cfg, h)
+
+
+def _ffn_sublayer(p, cfg: ArchConfig, x):
+    if cfg.is_moe:
+        h = apply_norm(cfg.norm_kind, p["norm2"], x)
+        y, aux = moe_apply(p["moe"], cfg, h, n_groups=cfg.moe_groups,
+                           constrain=partial(_constrain, cfg))
+        return y, aux
+    if cfg.d_ff > 0:
+        h = apply_norm(cfg.norm_kind, p["norm2"], x)
+        return ffn_apply(p["ffn"], h, cfg.ffn_kind), jnp.zeros((), jnp.float32)
+    return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
+
+
+def decoder_layer(p, cfg: ArchConfig, x, cross_x=None):
+    x = x + _mix_sublayer(p, cfg, x)
+    if cfg.encoder_layers and cross_x is not None:
+        h = apply_norm(cfg.norm_kind, p["cross_norm"], x)
+        x = x + attn_apply_seq(p["cross_attn"], cfg, h, kv_x=cross_x,
+                               causal=False, rope=False)
+    y, aux = _ffn_sublayer(p, cfg, x)
+    return x + y, aux
+
+
+def encoder_layer(p, cfg: ArchConfig, x):
+    h = apply_norm(cfg.norm_kind, p["norm1"], x)
+    x = x + attn_apply_seq(p["attn"], cfg, h, causal=False, rope=False)
+    y, aux = _ffn_sublayer(p, cfg, x)
+    return x + y, aux
+
+
+# ===================================================== init / forward =======
+def _sinusoid(n, d, dtype):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> PyTree:
+    params = _init_params_f32(cfg, key)
+    pdt = jnp.dtype(cfg.param_dtype)
+    if pdt != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(pdt), params)
+    return params
+
+
+def _init_params_f32(cfg: ArchConfig, key: jax.Array) -> PyTree:
+    k_emb, k_layers, k_head, k_enc = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model),
+        "layers": jax.vmap(lambda k: layer_init(k, cfg))(layer_keys),
+        "final_norm": norm_init(cfg.d_model),
+        "head": head_init(k_head, cfg.d_model, cfg.vocab),
+    }
+    if cfg.encoder_layers:
+        enc_cfg = cfg  # same width; encoder layers have no cross-attn
+        enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+
+        def enc_layer_init(k):
+            keys = jax.random.split(k, 4)
+            return {
+                "norm1": norm_init(cfg.d_model),
+                "attn": attn_init(keys[0], enc_cfg),
+                "norm2": norm_init(cfg.d_model),
+                "ffn": ffn_init(keys[1], cfg.d_model, cfg.d_ff, cfg.ffn_kind),
+            }
+
+        params["enc_layers"] = jax.vmap(enc_layer_init)(enc_keys)
+        params["enc_norm"] = norm_init(cfg.d_model)
+    return params
+
+
+def _maybe_scan(cfg, body, init, xs):
+    """lax.scan, or a python-unrolled equivalent when cfg.scan_layers=False."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    ys = jax.tree.map(lambda *a: jnp.stack(a, 0), *ys)
+    return carry, ys
+
+
+def _scan_layers(cfg, layers, x, layer_fn):
+    """lax.scan over stacked layer params, with optional per-layer remat."""
+    fn = layer_fn
+    if cfg.remat:
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(h, lp):
+        h2, aux = fn(lp, h)
+        h2 = _constrain(cfg, h2, ("batch", None, None))
+        return h2, aux
+
+    x = _constrain(cfg, x, ("batch", None, None))
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(layers)[0].shape[0]
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            lp = jax.tree.map(lambda t: t[i], layers)
+            x, aux = body(x, lp)
+            aux_total = aux_total + aux
+        return x, aux_total
+    x, auxs = jax.lax.scan(body, x, layers)
+    return x, jnp.sum(auxs)
+
+
+def encode(cfg: ArchConfig, params: PyTree, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub conv-frontend frames (B, F, D)."""
+    dt = _dtype(cfg)
+    x = frames.astype(dt) + _sinusoid(frames.shape[1], cfg.d_model, dt)[None]
+    x, _ = _scan_layers(cfg, params["enc_layers"], x,
+                        lambda lp, h: encoder_layer(lp, cfg, h))
+    return apply_norm(cfg.norm_kind, params["enc_norm"], x)
+
+
+def forward(cfg: ArchConfig, params: PyTree, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B,S,V) fp32, moe aux loss)."""
+    dt = _dtype(cfg)
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens, dt)
+
+    if cfg.frontend == "vision":
+        # stub ViT frontend: precomputed patch embeddings replace the first
+        # n_frontend_tokens positions (image-prefix interleave)
+        patches = batch["patches"].astype(dt)
+        npatch = patches.shape[1]
+        x = jnp.concatenate([patches, x[:, npatch:]], axis=1)
+
+    cross = None
+    if cfg.encoder_layers:
+        cross = encode(cfg, params, batch["frames"])
+        x = x + _sinusoid(x.shape[1], cfg.d_model, dt)[None]
+
+    x, aux = _scan_layers(cfg, params["layers"], x,
+                          lambda lp, h: decoder_layer(lp, cfg, h, cross))
+    x = apply_norm(cfg.norm_kind, params["final_norm"], x)
+    logits = head_apply(params["head"], x)
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch: dict) -> jax.Array:
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["tokens"][:, 1:]
+    lg = logits[:, :-1]
+    mask = jnp.ones(labels.shape, bool)
+    if cfg.frontend == "vision":
+        # only text positions contribute to the LM loss
+        mask = jnp.arange(labels.shape[1])[None, :] >= cfg.n_frontend_tokens
+    loss = cross_entropy_tokens(lg, labels, mask)
+    return loss + MOE_AUX_WEIGHT * aux
+
+
+def make_train_step(cfg: ArchConfig):
+    opt_init, opt_step = make_optimizer(
+        cfg.optimizer, lr=0.01 if cfg.optimizer == "sgd" else 3e-4,
+        momentum=0.5)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(partial(loss_fn, cfg))(params, batch)
+        new_params, new_opt = opt_step(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return opt_init, train_step
+
+
+def train_step(cfg: ArchConfig, params, opt_state, batch):
+    _, step = make_train_step(cfg)
+    return step(params, opt_state, batch)
+
+
+# ========================================================= serving ==========
+def cache_len_for(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.has_attn and cfg.window > 0:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> PyTree:
+    dt = _dtype(cfg)
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    L = cfg.n_layers
+    if cfg.has_attn:
+        c = cache_len_for(cfg, seq_len)
+        kv = lambda: jnp.zeros((L, batch, c, cfg.n_kv_heads, cfg.hd), dt)
+        cache["k"], cache["v"] = kv(), kv()
+    if cfg.has_ssm:
+        per = ssm_cache_init(cfg, batch, dt)
+        for k, v in per.items():
+            cache[f"ssm_{k}"] = jnp.zeros((L,) + v.shape, v.dtype)
+    if cfg.encoder_layers:
+        cache["cross_k"] = jnp.zeros((L, batch, cfg.n_frontend_tokens,
+                                      cfg.n_kv_heads, cfg.hd), dt)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, cache: PyTree,
+                batch: dict) -> tuple[PyTree, jax.Array]:
+    """One decode step: batch {"token": (B,)} -> (cache', logits (B, V))."""
+    dt = _dtype(cfg)
+    pos = cache["pos"]
+    x = embed_apply(params["embed"], batch["token"][:, None], dt)  # (B,1,D)
+
+    # assemble per-layer cache slices for the scan
+    carry_keys = [k for k in ("k", "v", "ssm_state", "ssm_conv_x",
+                              "ssm_conv_bc", "cross_k", "cross_v") if k in cache]
+
+    def body(h, inp):
+        lp = inp["params"]
+        new = {}
+        y = apply_norm(cfg.norm_kind, lp["norm1"], h)
+        ssm_cache_in = ({"state": inp["ssm_state"], "conv_x": inp["ssm_conv_x"],
+                         "conv_bc": inp["ssm_conv_bc"]} if cfg.has_ssm else None)
+        if cfg.family == "hybrid":
+            a, kv = attn_apply_decode(lp["attn"], cfg, y, {"k": inp["k"], "v": inp["v"]}, pos)
+            s, st = ssm_decode_step(lp["ssm"], cfg, y[:, 0], ssm_cache_in)
+            a = apply_norm(cfg.norm_kind, lp["attn_out_norm"], a)
+            s = apply_norm(cfg.norm_kind, lp["ssm_out_norm"], s[:, None])
+            mix = 0.5 * (a + s)
+            new.update(k=kv["k"], v=kv["v"], ssm_state=st["state"],
+                       ssm_conv_x=st["conv_x"], ssm_conv_bc=st["conv_bc"])
+        elif cfg.has_ssm:
+            s, st = ssm_decode_step(lp["ssm"], cfg, y[:, 0], ssm_cache_in)
+            mix = s[:, None]
+            new.update(ssm_state=st["state"], ssm_conv_x=st["conv_x"],
+                       ssm_conv_bc=st["conv_bc"])
+        else:
+            a, kv = attn_apply_decode(lp["attn"], cfg, y, {"k": inp["k"], "v": inp["v"]}, pos)
+            mix = a
+            new.update(k=kv["k"], v=kv["v"])
+        h = h + mix
+        if cfg.encoder_layers:
+            hc = apply_norm(cfg.norm_kind, lp["cross_norm"], h)
+            h = h + attn_apply_cross_decode(lp["cross_attn"], cfg, hc,
+                                            {"k": inp["cross_k"], "v": inp["cross_v"]})
+            new.update(cross_k=inp["cross_k"], cross_v=inp["cross_v"])
+        y2, _ = _ffn_sublayer(lp, cfg, h)
+        return h + y2, new
+
+    xs = {"params": params["layers"]}
+    for ck in carry_keys:
+        xs[ck] = cache[ck]
+    h, new_cols = _maybe_scan(cfg, body, x, xs)
+
+    h = apply_norm(cfg.norm_kind, params["final_norm"], h)
+    logits = head_apply(params["head"], h)[:, 0]
+
+    new_cache = dict(cache)
+    new_cache["pos"] = pos + 1
+    for ck in carry_keys:
+        new_cache[ck] = new_cols[ck]
+    return new_cache, logits
+
+
+def prefill_step(cfg: ArchConfig, params: PyTree, batch: dict,
+                 cache_len: int | None = None) -> tuple[PyTree, jax.Array]:
+    """Run the full prompt, build the decode cache, return last-token logits.
+
+    For simplicity and lowering-robustness the cache is built by a full
+    forward that returns per-layer K/V (attention archs) / final SSM states.
+    """
+    dt = _dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    c = cache_len_for(cfg, cache_len)
+
+    x = embed_apply(params["embed"], tokens, dt)
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(dt)
+        x = jnp.concatenate([patches, x[:, patches.shape[1]:]], axis=1)
+    cross = None
+    if cfg.encoder_layers:
+        cross = encode(cfg, params, batch["frames"])
+        x = x + _sinusoid(S, cfg.d_model, dt)[None]
+
+    cache = init_cache(cfg, B, cache_len)
+    kv_rows, ssm_rows = [], []
+
+    def layer_with_kv(lp, h):
+        """decoder layer that also emits this layer's cache entries."""
+        out = {}
+        y = apply_norm(cfg.norm_kind, lp["norm1"], h)
+        if cfg.has_attn:
+            a, (k, v) = attn_apply_seq(lp["attn"], cfg, y, return_kv=True)
+            if S >= c:
+                # ring layout: keep the last `c` positions (aligned because
+                # the launch shapes guarantee S % c == 0 for SWA caches)
+                kk, vv = k[:, -c:], v[:, -c:]
+            else:
+                # room for decode: future slots stay zero; the ring-position
+                # validity mask hides them until written
+                pad = ((0, 0), (0, c - S), (0, 0), (0, 0))
+                kk, vv = jnp.pad(k, pad), jnp.pad(v, pad)
+            out["k"] = kk.astype(dt)
+            out["v"] = vv.astype(dt)
+        if cfg.family == "hybrid":
+            s = ssm_forward(lp["ssm"], cfg, y)
+            a = apply_norm(cfg.norm_kind, lp["attn_out_norm"], a)
+            s2 = apply_norm(cfg.norm_kind, lp["ssm_out_norm"], s)
+            mix = 0.5 * (a + s2)
+        elif cfg.has_ssm:
+            mix = ssm_forward(lp["ssm"], cfg, y)
+        else:
+            mix = a
+        if cfg.has_ssm:
+            # closed-form final state from the cumulative-decay sums (same
+            # math as the chunked SSD inter-chunk states, single chunk)
+            st, conv_x, conv_bc = _ssm_final_state(lp["ssm"], cfg, y)
+            out["ssm_state"] = st
+            out["ssm_conv_x"] = conv_x
+            out["ssm_conv_bc"] = conv_bc
+        h = h + mix
+        if cfg.encoder_layers and cross is not None:
+            hc = apply_norm(cfg.norm_kind, lp["cross_norm"], h)
+            h = h + attn_apply_seq(lp["cross_attn"], cfg, hc, kv_x=cross,
+                                   causal=False, rope=False)
+            kx = jnp.einsum("bsd,dhe->bshe", cross, lp["cross_attn"]["wk"].astype(dt))
+            vx = jnp.einsum("bsd,dhe->bshe", cross, lp["cross_attn"]["wv"].astype(dt))
+            out["cross_k"], out["cross_v"] = kx.astype(dt), vx.astype(dt)
+        y2, _ = _ffn_sublayer(lp, cfg, h)
+        return h + y2, out
+
+    h, cols = _maybe_scan(cfg, lambda hh, lp: layer_with_kv(lp, hh), x,
+                          params["layers"])
+
+    for k in cols:
+        cache[k] = cols[k]
+    # ring alignment: with a full-size cache, slot i == position i; with a
+    # window cache the last c tokens land at slots (S-c..S-1) % c — for the
+    # dry-run shapes S % c == 0, so the identity layout is already correct.
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    h = apply_norm(cfg.norm_kind, params["final_norm"], h[:, -1:])
+    logits = head_apply(params["head"], h)[:, 0]
+    return cache, logits
+
+
+def _ssm_final_state(p, cfg, x):
+    """Final (state, conv windows) after consuming x (B,S,D) — for prefill."""
+    from repro.models.lm.ssm import _causal_conv, _gates, _project
+    B, S, _ = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, x_raw, bc_raw, dt_raw = _project(p, x)
+    xc = _causal_conv(x_raw, p["conv_x"])
+    bc = _causal_conv(bc_raw, p["conv_bc"])
+    x_in = xc.reshape(B, S, h, pd).astype(jnp.float32)
+    b_mat = bc[..., :n].astype(jnp.float32)
+    dt, a = _gates(p, cfg, dt_raw)
+    da = dt * a                                  # (B,S,H)
+    cum = jnp.cumsum(da, axis=1)
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (B,S,H)
+    state = jnp.einsum("bsh,bsn,bshp->bhpn", decay_to_end * dt, b_mat, x_in)
+    pad = cfg.ssm_conv - 1
+    conv_x = jnp.pad(x_raw, ((0, 0), (pad, 0), (0, 0)))[:, -cfg.ssm_conv:]
+    conv_bc = jnp.pad(bc_raw, ((0, 0), (pad, 0), (0, 0)))[:, -cfg.ssm_conv:]
+    return state, conv_x.astype(x.dtype), conv_bc.astype(x.dtype)

@@ -1,0 +1,176 @@
+"""Mamba2 / SSD (state-space duality) layer [arXiv:2405.21060].
+
+Chunked SSD forward: within-chunk attention-like block (C B^T ⊙ decay) plus
+an inter-chunk recurrence over per-chunk states — O(S * Q) compute, O(1)
+decode state.  Single B/C group (G=1), multi-head over d_inner/P heads.
+
+TPU adaptation (DESIGN.md §3): chunk length Q is the MXU tile knob; all
+decay math in float32; the inter-chunk recurrence is a lax.scan whose carry
+(B, H, P, N) stays resident (maps to VMEM on TPU).
+
+Decode: h' = exp(dt*A) h + dt * (B ⊗ x);  y = C·h' + D_skip * x   (O(1)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.layers import dense_init, rmsnorm
+
+
+def ssm_init(key, cfg):
+    """Projections are kept separate (z / x / BC / dt) so each output dim can
+    be sharded cleanly over the `model` axis — a fused in_proj would put the
+    z|xBC|dt split boundaries inside shards (launch/sharding.py)."""
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "proj_z": dense_init(k1, d, (di,)),
+        "proj_x": dense_init(k2, d, (di,)),
+        "proj_bc": dense_init(k3, d, (2 * n,)),
+        "proj_dt": dense_init(k4, d, (h,)),
+        "conv_x": jax.random.normal(k5, (cfg.ssm_conv, di), jnp.float32)
+        * (1.0 / cfg.ssm_conv) ** 0.5,
+        "conv_bc": jax.random.normal(k6, (cfg.ssm_conv, 2 * n), jnp.float32)
+        * (1.0 / cfg.ssm_conv) ** 0.5,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "out_proj": dense_init(k4, di, (d,)),
+    }
+
+
+def _project(p, x):
+    """x (..., D) -> (z, x_raw, bc_raw, dt_raw) pre-conv projections."""
+    z = x @ p["proj_z"].astype(x.dtype)
+    xr = x @ p["proj_x"].astype(x.dtype)
+    bc = x @ p["proj_bc"].astype(x.dtype)
+    dt = x @ p["proj_dt"].astype(x.dtype)
+    return z, xr, bc, dt
+
+
+def _causal_conv(u, conv_w):
+    """Depthwise causal conv via shift-stack (window = ssm_conv)."""
+    k = conv_w.shape[0]
+    pads = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pads[:, i: i + u.shape[1]] * conv_w[i].astype(u.dtype)
+              for i in range(k))
+    return jax.nn.silu(out)
+
+
+def _gates(p, cfg, dt_raw):
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])  # (H,) negative
+    return dt, a
+
+
+def ssm_forward(p, cfg, x):
+    """x (B, S, D) -> (B, S, D).  S must be a multiple of ssm_chunk."""
+    B, S, _ = x.shape
+    di, n, h, pd = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                    cfg.ssm_head_dim)
+    q = min(cfg.ssm_chunk, S)
+    assert S % q == 0, f"seq {S} not divisible by ssm chunk {q}"
+    nc = S // q
+
+    z, x_raw, bc_raw, dt_raw = _project(p, x)
+    xc_in = _causal_conv(x_raw, p["conv_x"])
+    bc = _causal_conv(bc_raw, p["conv_bc"])
+    x_in = xc_in.reshape(B, S, h, pd).astype(jnp.float32)
+    b_mat = bc[..., :n].astype(jnp.float32)                  # (B,S,N) G=1
+    c_mat = bc[..., n:].astype(jnp.float32)
+    dt, a = _gates(p, cfg, dt_raw)                           # (B,S,H), (H,)
+
+    # chunk
+    xc = x_in.reshape(B, nc, q, h, pd)
+    bc = b_mat.reshape(B, nc, q, n)
+    cc = c_mat.reshape(B, nc, q, n)
+    dtc = dt.reshape(B, nc, q, h)
+    da = dtc * a                                             # (B,nc,q,H) <= 0
+    cum = jnp.cumsum(da, axis=2)                             # within-chunk
+
+    # ---- intra-chunk (the "attention-like" quadratic-in-Q block) --------
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)           # shared across H
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                         scores, decay, dtc, xc)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                        decay_to_end * dtc, bc, xc)          # per-chunk state
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    def scan_body(carry, inp):
+        st, dec = inp                                        # (B,H,P,N), (B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                    # emit state *before* chunk
+
+    init = jnp.zeros((B, h, pd, n), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_body, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         cc, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, h, pd)
+    y = y + p["D_skip"][None, None, :, None] * x_in
+    y = y.reshape(B, S, di)
+
+    # gated RMSNorm then output projection
+    y = rmsnorm(p["norm"], y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+# ------------------------------------------------------------- decode ------
+def ssm_cache_init(cfg, batch, dtype):
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv, di), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv, 2 * n), dtype),
+    }
+
+
+def ssm_decode_step(p, cfg, x, cache):
+    """x (B, D) one token -> (y (B, D), new cache)."""
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, x_new, bc_new, dt_raw = _project(p, x)
+
+    conv_x = jnp.concatenate([cache["conv_x"][:, 1:], x_new[:, None]], axis=1)
+    conv_bc = jnp.concatenate([cache["conv_bc"][:, 1:], bc_new[:, None]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_x.astype(jnp.float32),
+                                p["conv_x"]))
+    bc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_bc.astype(jnp.float32),
+                                p["conv_bc"]))
+    x_in = xc.reshape(-1, h, pd)
+    b_mat = bc[:, :n]
+    c_mat = bc[:, n:]
+    dt, a = _gates(p, cfg, dt_raw)                           # (B,H), (H,)
+
+    da = jnp.exp(dt * a)                                     # (B,H)
+    state = cache["state"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, x_in, b_mat)
+    y = jnp.einsum("bhpn,bn->bhp", state, c_mat)
+    y = y + p["D_skip"][None, :, None] * x_in
+    y = y.reshape(-1, di)
+
+    y = rmsnorm(p["norm"], y.astype(x.dtype)) * jax.nn.silu(z)
+    y = y @ p["out_proj"].astype(x.dtype)
+    return y, {"state": state, "conv_x": conv_x, "conv_bc": conv_bc}
+
+
+# --------------------------------------------------- reference (oracle) ----
+def ssm_forward_ref(p, cfg, x):
+    """Sequential O(S) recurrence — oracle for the chunked path."""
+    B, S, _ = x.shape
+    cache = ssm_cache_init(cfg, B, x.dtype)
+    ys = []
+    for t in range(S):
+        y, cache = ssm_decode_step(p, cfg, x[:, t], cache)
+        ys.append(y)
+    return jnp.stack(ys, axis=1)

@@ -1,0 +1,109 @@
+"""The paper's task models: MLP (MNIST/FMNIST) and CNN (CIFAR10).
+
+Pure-functional: params are pytrees, `apply(params, x) -> logits`,
+`loss(params, x, y) -> scalar CE`.  No flax dependency (offline container).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class ClassifierModel(NamedTuple):
+    name: str
+    init: Callable[[jax.Array], PyTree]
+    apply: Callable[[PyTree, jax.Array], jax.Array]
+
+    def loss(self, params: PyTree, x: jax.Array, y: jax.Array) -> jax.Array:
+        logits = self.apply(params, x)
+        return cross_entropy(logits, y)
+
+    def accuracy(self, params: PyTree, x: jax.Array, y: jax.Array) -> jax.Array:
+        logits = self.apply(params, x)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def _dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else (2.0 / d_in) ** 0.5
+    wk, _ = jax.random.split(key)
+    return {"w": jax.random.normal(wk, (d_in, d_out), jnp.float32) * scale,
+            "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def make_mlp(input_dim: int = 784, hidden: Sequence[int] = (200, 100),
+             n_classes: int = 10) -> ClassifierModel:
+    dims = [input_dim, *hidden, n_classes]
+
+    def init(key):
+        keys = jax.random.split(key, len(dims) - 1)
+        return {f"layer{i}": _dense_init(keys[i], dims[i], dims[i + 1])
+                for i in range(len(dims) - 1)}
+
+    def apply(params, x):
+        h = x.reshape((x.shape[0], -1))
+        n_layers = len(dims) - 1
+        for i in range(n_layers):
+            p = params[f"layer{i}"]
+            h = h @ p["w"] + p["b"]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return ClassifierModel("mlp", init, apply)
+
+
+def make_cnn(input_shape=(32, 32, 3), n_classes: int = 10,
+             channels: Sequence[int] = (32, 64), dense: int = 128) -> ClassifierModel:
+    h, w, c_in = input_shape
+
+    def init(key):
+        keys = jax.random.split(key, len(channels) + 2)
+        params = {}
+        c_prev = c_in
+        for i, c in enumerate(channels):
+            fan_in = 3 * 3 * c_prev
+            params[f"conv{i}"] = {
+                "w": jax.random.normal(keys[i], (3, 3, c_prev, c), jnp.float32)
+                * (2.0 / fan_in) ** 0.5,
+                "b": jnp.zeros((c,), jnp.float32),
+            }
+            c_prev = c
+        hh, ww = h // (2 ** len(channels)), w // (2 ** len(channels))
+        flat = hh * ww * c_prev
+        params["dense0"] = _dense_init(keys[-2], flat, dense)
+        params["head"] = _dense_init(keys[-1], dense, n_classes)
+        return params
+
+    def apply(params, x):
+        hcur = x
+        for i in range(len(channels)):
+            p = params[f"conv{i}"]
+            hcur = jax.lax.conv_general_dilated(
+                hcur, p["w"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            hcur = jax.nn.relu(hcur + p["b"])
+            hcur = jax.lax.reduce_window(
+                hcur, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        hcur = hcur.reshape((hcur.shape[0], -1))
+        hcur = jax.nn.relu(hcur @ params["dense0"]["w"] + params["dense0"]["b"])
+        return hcur @ params["head"]["w"] + params["head"]["b"]
+
+    return ClassifierModel("cnn", init, apply)
+
+
+def make_classifier(dataset: str) -> ClassifierModel:
+    if dataset in ("mnist", "fmnist"):
+        return make_mlp()
+    if dataset == "cifar10":
+        return make_cnn()
+    raise ValueError(f"no classifier for dataset {dataset!r}")

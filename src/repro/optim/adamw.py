@@ -1,0 +1,43 @@
+"""AdamW for the LM configs (SGD is too slow to be a realistic LM default)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    step: jax.Array
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    return AdamWState(mu=zeros(params), nu=zeros(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def adamw_step(grads: PyTree, state: AdamWState, params: PyTree, *,
+               lr: float, b1: float = 0.9, b2: float = 0.95,
+               eps: float = 1e-8, weight_decay: float = 0.0
+               ) -> tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    sf = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** sf
+    c2 = 1.0 - b2 ** sf
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+
+    def upd(p, m, v):
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_p = jax.tree.map(upd, params, mu, nu)
+    return new_p, AdamWState(mu=mu, nu=nu, step=step)

@@ -1,0 +1,24 @@
+"""SGD with momentum — the paper's client optimizer (eta=0.01, gamma=0.5)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+
+
+def sgd_init(params: PyTree) -> SGDState:
+    return SGDState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_step(grads: PyTree, state: SGDState, params: PyTree,
+             *, lr: float, momentum: float = 0.0) -> tuple[PyTree, SGDState]:
+    new_m = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+    new_p = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+    return new_p, SGDState(momentum=new_m)

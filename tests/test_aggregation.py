@@ -1,0 +1,46 @@
+"""ModelAverage properties (hypothesis): convexity, normalisation, masking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (
+    normalized_weights, subset_average, tree_stack, weighted_average,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 8), seed=st.integers(0, 100))
+def test_weights_normalised_and_masked(m, seed):
+    rng = np.random.default_rng(seed)
+    n_k = jnp.asarray(rng.integers(1, 100, m).astype(np.float32))
+    mask = jnp.asarray(rng.integers(0, 2, m).astype(np.float32))
+    w = normalized_weights(n_k, mask)
+    if float(mask.sum()) > 0:
+        np.testing.assert_allclose(float(w.sum()), 1.0, rtol=1e-5)
+        assert np.all(np.asarray(w)[np.asarray(mask) == 0] == 0.0)
+    else:
+        assert np.all(np.asarray(w) == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 6), seed=st.integers(0, 100))
+def test_average_is_convex_combination(m, seed):
+    """Averaged params lie inside the convex hull (per coordinate)."""
+    models = [{"a": jax.random.normal(jax.random.key(seed + i), (4, 3))}
+              for i in range(m)]
+    stacked = tree_stack(models)
+    n_k = jnp.arange(1.0, m + 1.0)
+    avg = weighted_average(stacked, normalized_weights(n_k))
+    arr = np.stack([np.asarray(mm["a"]) for mm in models])
+    assert np.all(np.asarray(avg["a"]) <= arr.max(0) + 1e-5)
+    assert np.all(np.asarray(avg["a"]) >= arr.min(0) - 1e-5)
+
+
+def test_singleton_subset_returns_that_model():
+    models = [{"a": jnp.ones(3) * i} for i in range(4)]
+    stacked = tree_stack(models)
+    n_k = jnp.array([1.0, 2.0, 3.0, 4.0])
+    mask = jnp.array([0.0, 0.0, 1.0, 0.0])
+    out = subset_average(stacked, n_k, mask)
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.0)

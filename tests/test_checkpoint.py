@@ -1,0 +1,40 @@
+"""Checkpoint roundtrip: pytrees and FL server state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (
+    load_pytree, load_server_state, save_pytree, save_server_state,
+)
+
+
+def test_pytree_roundtrip(tmp_path, key):
+    tree = {"layer0": {"w": jax.random.normal(key, (4, 5)),
+                       "b": jnp.zeros(5)},
+            "head": {"w": jnp.ones((5, 2), jnp.float32)}}
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    out = load_pytree(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_structure_mismatch_raises(tmp_path, key):
+    tree = {"a": jnp.zeros(3)}
+    path = str(tmp_path / "c.npz")
+    save_pytree(path, tree)
+    with pytest.raises(ValueError):
+        load_pytree(path, {"b": jnp.zeros(3)})
+
+
+def test_server_state_roundtrip(tmp_path, key):
+    params = {"w": jax.random.normal(key, (3, 3))}
+    path = str(tmp_path / "server.npz")
+    save_server_state(path, params=params, sv=np.arange(5.0),
+                      counts=np.arange(5), round_idx=17, seed=3)
+    st = load_server_state(path, params)
+    assert st["round"] == 17 and st["seed"] == 3
+    np.testing.assert_array_equal(st["sv"], np.arange(5.0))
+    np.testing.assert_array_equal(np.asarray(st["params"]["w"]),
+                                  np.asarray(params["w"]))

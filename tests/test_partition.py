@@ -1,0 +1,39 @@
+"""Dirichlet x power-law partitioning properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.federated.partition import (
+    dirichlet_partition, partition_summary, power_law_fractions,
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 50), seed=st.integers(0, 100))
+def test_power_law_fractions_normalised(n, seed):
+    rng = np.random.default_rng(seed)
+    q = power_law_fractions(n, rng)
+    assert q.shape == (n,)
+    np.testing.assert_allclose(q.sum(), 1.0, rtol=1e-9)
+    assert (q > 0).all()
+
+
+def test_partition_is_disjoint_cover():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 2000)
+    parts = dirichlet_partition(labels, 20, alpha=0.5, rng=rng)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(set(all_idx.tolist())), "indices must be disjoint"
+    assert len(all_idx) <= 2000
+    assert all(p.size >= 2 for p in parts)
+
+
+def test_alpha_controls_label_skew():
+    """Lower alpha => lower per-client label entropy (more skew)."""
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 4000)
+    ent = {}
+    for alpha in (1e-4, 100.0):
+        parts = dirichlet_partition(labels, 30, alpha=alpha,
+                                    rng=np.random.default_rng(1))
+        ent[alpha] = partition_summary(parts, labels)["label_entropy_mean"]
+    assert ent[1e-4] < ent[100.0] * 0.5, ent

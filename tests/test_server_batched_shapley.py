@@ -1,0 +1,23 @@
+"""shapley_impl="batched" (TPU-native GTG variant) through the server loop."""
+import numpy as np
+
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_federated
+
+FAST = dict(n_clients=8, m=2, rounds=6, n_train=800, n_val=150, n_test=200,
+            eval_every=3, shapley_max_iters=32,
+            client=ClientConfig(epochs=2, batches_per_epoch=2, batch_size=16))
+
+
+def test_batched_shapley_impl_trains():
+    res = run_federated(FLConfig(dataset="mnist", selector="greedyfed",
+                                 shapley_impl="batched", **FAST))
+    assert np.isfinite(res.final_acc) and res.final_acc > 0.2
+    assert res.shapley_evals > 0
+    assert np.isfinite(res.sv_final).all()
+
+
+def test_dropout_selector_through_server():
+    res = run_federated(FLConfig(dataset="mnist",
+                                 selector="greedyfed_dropout", **FAST))
+    assert np.isfinite(res.final_acc) and res.final_acc > 0.2

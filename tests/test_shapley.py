@@ -1,0 +1,92 @@
+"""GTG-Shapley (Alg. 2) correctness: exact-oracle match, truncation,
+additivity/symmetry properties (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import subset_average, tree_stack
+from repro.core.shapley import exact_shapley, gtg_shapley
+from repro.core.shapley_batched import gtg_shapley_batched
+
+
+def _toy(m=4, d=3, seed=0):
+    clients = [{"w": jax.random.normal(jax.random.key(seed + i + 1), (d,))}
+               for i in range(m)]
+    stacked = tree_stack(clients)
+    n_k = jnp.arange(1.0, m + 1.0) * 10
+    w_prev = {"w": jnp.zeros(d)}
+    target = jax.random.normal(jax.random.key(seed + 99), (d,))
+
+    def utility(p):
+        return -jnp.sum((p["w"] - target) ** 2)
+
+    return stacked, n_k, w_prev, utility
+
+
+def test_gtg_matches_exact_oracle():
+    stacked, n_k, w_prev, utility = _toy()
+    sv_exact = exact_shapley(stacked, n_k, w_prev, utility)
+    sv_mc, stats = gtg_shapley(stacked, n_k, w_prev, utility,
+                               jax.random.key(0), eps=1e-7, max_iters=400,
+                               convergence_tol=0.005, convergence_rounds=5)
+    np.testing.assert_allclose(np.asarray(sv_mc), np.asarray(sv_exact),
+                               atol=0.15)
+    assert int(stats.utility_evals) > 0
+
+
+def test_batched_gtg_matches_exact_oracle():
+    stacked, n_k, w_prev, utility = _toy()
+    sv_exact = exact_shapley(stacked, n_k, w_prev, utility)
+    sv_b, _ = gtg_shapley_batched(stacked, n_k, w_prev, utility,
+                                  jax.vmap(utility), jax.random.key(1),
+                                  n_perms=512, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(sv_b), np.asarray(sv_exact),
+                               atol=0.25)
+
+
+def test_additivity_sums_to_total_gain():
+    """sum_k SV_k == U(w^{t+1}) - U(w^t) (paper Section III-B)."""
+    stacked, n_k, w_prev, utility = _toy(m=5)
+    sv = exact_shapley(stacked, n_k, w_prev, utility)
+    w_full = subset_average(stacked, n_k, jnp.ones((5,)))
+    gain = utility(w_full) - utility(w_prev)
+    np.testing.assert_allclose(float(jnp.sum(sv)), float(gain), rtol=1e-4)
+
+
+def test_between_round_truncation():
+    stacked, n_k, w_prev, _ = _toy()
+    sv, stats = gtg_shapley(stacked, n_k, w_prev, lambda p: jnp.array(3.14),
+                            jax.random.key(0), eps=1e-4)
+    assert bool(stats.truncated_round)
+    assert np.all(np.asarray(sv) == 0.0)
+
+
+def test_symmetric_clients_get_equal_value():
+    """Identical updates with identical n_k must tie (SV symmetry)."""
+    base = {"w": jnp.array([1.0, 2.0])}
+    stacked = tree_stack([base, base, {"w": jnp.array([-1.0, 0.0])}])
+    n_k = jnp.array([10.0, 10.0, 10.0])
+    w_prev = {"w": jnp.zeros(2)}
+
+    def utility(p):
+        return -jnp.sum(p["w"] ** 2)
+
+    sv = exact_shapley(stacked, n_k, w_prev, utility)
+    assert abs(float(sv[0] - sv[1])) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(2, 5), seed=st.integers(0, 50))
+def test_property_additivity_mc(m, seed):
+    """Property: the MC estimator preserves additivity for any utility."""
+    stacked, n_k, w_prev, utility = _toy(m=m, seed=seed)
+    sv, stats = gtg_shapley(stacked, n_k, w_prev, utility,
+                            jax.random.key(seed), eps=1e-9, max_iters=20,
+                            convergence_tol=0.0)
+    w_full = subset_average(stacked, n_k, jnp.ones((m,)))
+    gain = float(utility(w_full) - utility(w_prev))
+    if not bool(stats.truncated_round):
+        np.testing.assert_allclose(float(jnp.sum(sv)), gain, rtol=1e-3,
+                                   atol=1e-4)

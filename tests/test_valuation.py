@@ -1,0 +1,53 @@
+"""Cumulative-SV tracking (Alg. 1 lines 11-12) and the beyond-paper
+SV-feedback dropout selector."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selection import GreedyFedDropoutSelector, SelectionContext
+from repro.core.valuation import init_valuation, update_valuation
+
+
+def test_mean_update_is_running_mean():
+    st = init_valuation(4)
+    sel = jnp.array([1, 2])
+    st = update_valuation(st, sel, jnp.array([2.0, 4.0]), mode="mean")
+    st = update_valuation(st, sel, jnp.array([4.0, 0.0]), mode="mean")
+    np.testing.assert_allclose(np.asarray(st.sv)[[1, 2]], [3.0, 2.0])
+    assert st.counts[1] == 2 and st.counts[0] == 0
+
+
+def test_exponential_update_seeds_with_first_value():
+    st = init_valuation(3)
+    st = update_valuation(st, jnp.array([0]), jnp.array([10.0]),
+                          mode="exponential", alpha=0.9)
+    # first observation is taken verbatim, not blended with the 0 init
+    assert float(st.sv[0]) == 10.0
+    st = update_valuation(st, jnp.array([0]), jnp.array([0.0]),
+                          mode="exponential", alpha=0.9)
+    np.testing.assert_allclose(float(st.sv[0]), 9.0)
+
+
+def test_unselected_clients_untouched():
+    st = init_valuation(5)
+    st = update_valuation(st, jnp.array([3]), jnp.array([7.0]), mode="mean")
+    assert float(st.sv[0]) == 0.0 and not bool(st.initialised[0])
+    assert bool(st.initialised[3])
+
+
+def test_dropout_selector_drops_bottom_and_saves_comm():
+    n, m = 10, 2
+    sel = GreedyFedDropoutSelector(n_clients=n, m=m, seed=0, drop_frac=0.5)
+    state = sel.init_state()
+    ctx = SelectionContext(data_fractions=jnp.ones(n) / n)
+    rr = int(np.ceil(n / m))
+    for t in range(rr):
+        s, state = sel.select(state, jax.random.key(t), ctx)
+        # client k earns SV == k
+        state = sel.update(state, s, sv_round=jnp.asarray([float(i) for i in s]))
+    s, state = sel.select(state, jax.random.key(99), ctx)
+    active = state.extra["active"]
+    assert len(active) == 5
+    assert set(active.tolist()) == {5, 6, 7, 8, 9}, "bottom half must drop"
+    assert set(int(i) for i in s) == {8, 9}
+    assert sel.dropped_fraction(state) == 0.5
