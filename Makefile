@@ -1,0 +1,13 @@
+.PHONY: check test bench-kernels bench-engine
+
+check:
+	./scripts/check.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+bench-kernels:
+	PYTHONPATH=src python -m benchmarks.run --only kernels
+
+bench-engine:
+	PYTHONPATH=src python -m benchmarks.run --only engine

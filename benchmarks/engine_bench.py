@@ -1,0 +1,164 @@
+"""Round-engine benchmark: fused batched round vs the legacy per-client loop.
+
+Two measurements (the engines are parity-exact, tests/test_engine.py):
+
+  * round latency — time for ONE round's result to materialise (blocking).
+    This is what every SV-driven strategy pays: GreedyFed/UCB/S-FedAvg
+    consume the round's Shapley values before the next selection, so the
+    round chain can never pipeline.  The legacy loop issues M+1 dispatches
+    per round; the fused engine exactly one with donated params.
+    (A pure-random selector never reads round outputs, letting the PJRT
+    CPU runtime overlap the loop's independent client programs across
+    rounds — a throughput artifact no paper workload can exploit.)
+
+  * end-to-end greedyfed — steady-state seconds/round of full
+    `run_federated` runs, (T_long - T_short)/(rounds difference), so
+    setup + compile cancels.
+
+Plus multi-seed amortisation (`run_federated_replicated`) and a
+virtual-clock deadline sweep (time-derived stragglers, DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (
+    normalized_weights, tree_stack, weighted_average,
+)
+from repro.engine.round_engine import RoundEngine, RoundSpec
+from repro.engine.schedule import ScheduleConfig
+from repro.federated.client import ClientConfig, client_update
+from repro.federated.server import (
+    FLConfig, run_federated, run_federated_replicated, setup_run,
+)
+
+# acceptance config: M=10 of N=50 clients per round
+BASE = dict(
+    n_clients=50, m=10, n_train=2500, n_val=300, n_test=300,
+    eval_every=1000,   # keep eval dispatches out of the round timing
+    client=ClientConfig(epochs=3, batches_per_epoch=3, batch_size=32),
+)
+R_SHORT, R_LONG = 2, 10
+
+
+def _timeit_chain(fn, params, reps=10) -> float:
+    """Time `params = fn(params)` chained, as the server consumes it.
+
+    Chaining keeps the measurement donation-safe on accelerators (the
+    fused step donates its params buffer, so re-calling with the same
+    pytree would fail there) and blocks each call on the previous round.
+    """
+    p = jax.block_until_ready(fn(params))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        p = fn(p)
+    jax.block_until_ready(p)
+    return (time.perf_counter() - t0) / reps
+
+
+def _round_latency_rows() -> tuple[list[str], float]:
+    cfg = FLConfig(**BASE)
+    s = setup_run(cfg)
+    sel = np.arange(cfg.m)
+    epochs_k = np.full(cfg.m, cfg.client.epochs, np.int32)
+    key = jax.random.key(1)
+
+    def loop_round(params):
+        # the legacy engine's round body, verbatim shape (M+1 dispatches)
+        ckeys = jax.random.split(key, cfg.m + 1)
+        ups = [client_update(s.model, cfg.client, params, s.xs[k], s.ys[k],
+                             s.n_valid[k], jnp.asarray(int(epochs_k[i])),
+                             jnp.asarray(s.sigma_k_all[k]), ckeys[i])
+               for i, k in enumerate(sel)]
+        stacked = tree_stack(ups)
+        n_k = s.n_k_all[jnp.asarray(sel)]
+        return weighted_average(stacked, normalized_weights(n_k))
+
+    engine = RoundEngine(s.model, cfg.client, RoundSpec(), s.xs, s.ys,
+                         s.n_valid, jnp.asarray(s.sigma_k_all),
+                         s.x_val, s.y_val)
+
+    t_loop = _timeit_chain(loop_round, s.params)
+    # fresh copy: the fused step donates its params argument on accelerators
+    t_fuse = _timeit_chain(
+        lambda p: engine.step(p, sel, epochs_k, key).params,
+        jax.tree.map(jnp.copy, s.params))
+    return [
+        f"round_latency_loop_N50_M10,{t_loop * 1e6:.0f},dispatches=11",
+        f"round_latency_batched_N50_M10,{t_fuse * 1e6:.0f},"
+        f"dispatches=1_speedup_x{t_loop / max(t_fuse, 1e-12):.2f}",
+    ], t_fuse
+
+
+def _per_round_e2e(cfg: FLConfig) -> tuple[float, int]:
+    """Steady-state (seconds, dispatches) per round of full runs; the
+    rounds=1 warmup plus the long-short difference cancels setup/compile."""
+    run_federated(dataclasses.replace(cfg, rounds=1))
+    short = run_federated(dataclasses.replace(cfg, rounds=R_SHORT))
+    long = run_federated(dataclasses.replace(cfg, rounds=R_LONG))
+    dt = (long.wall_time_s - short.wall_time_s) / (R_LONG - R_SHORT)
+    ddisp = (long.dispatches - short.dispatches) // (R_LONG - R_SHORT)
+    return dt, ddisp
+
+
+def run(*, full: bool = False) -> list[str]:
+    # shared-executable amortisation: the fused step is cached process-wide
+    # on (model, client cfg, spec), so every later seed of a table cell
+    # skips tracing+compilation entirely.  Must run FIRST (cold cache).
+    rcfg0 = FLConfig(engine="batched", selector="fedavg", rounds=R_SHORT,
+                     **BASE)
+    cold = run_federated(rcfg0).wall_time_s
+    warm = run_federated(dataclasses.replace(rcfg0, seed=1)).wall_time_s
+    rows = [
+        f"fused_run_cold_compile,{cold * 1e6:.0f},rounds={R_SHORT}",
+        f"fused_run_cached_seed1,{warm * 1e6:.0f},"
+        f"shared_executable_x{cold / max(warm, 1e-12):.2f}",
+    ]
+
+    lat_rows, t_fuse_round = _round_latency_rows()
+    rows += lat_rows
+    shapley_iters = 50 if full else 8
+
+    cfg = dict(BASE, selector="greedyfed", shapley_max_iters=shapley_iters)
+    t_loop, d_loop = _per_round_e2e(FLConfig(engine="loop", **cfg))
+    t_fuse, d_fuse = _per_round_e2e(FLConfig(engine="batched", **cfg))
+    rows.append(f"e2e_loop_greedyfed_N50_M10,{t_loop * 1e6:.0f},"
+                f"dispatches_per_round={d_loop}")
+    rows.append(f"e2e_batched_greedyfed_N50_M10,{t_fuse * 1e6:.0f},"
+                f"dispatches_per_round={d_fuse}_"
+                f"speedup_x{t_loop / max(t_fuse, 1e-12):.2f}")
+
+    # multi-seed vmap: ONE dispatch advances S replicas.  On CPU the
+    # batched while-loops undercut raw throughput (vs S solo fused rounds);
+    # the dispatch-count reduction is the part that transfers to TPU.
+    seeds = (0, 1, 2, 3) if full else (0, 1)
+    rcfg = FLConfig(engine="batched", selector="fedavg", **BASE)
+    run_federated_replicated(dataclasses.replace(rcfg, rounds=1), seeds)
+    rep_s = run_federated_replicated(
+        dataclasses.replace(rcfg, rounds=R_SHORT), seeds)
+    rep_l = run_federated_replicated(
+        dataclasses.replace(rcfg, rounds=R_LONG), seeds)
+    t_rep = (rep_l[0].wall_time_s - rep_s[0].wall_time_s) / (R_LONG - R_SHORT)
+    t_solo = t_fuse_round * len(seeds)
+    rows.append(f"replicated_{len(seeds)}seeds_per_round,{t_rep * 1e6:.0f},"
+                f"dispatches=1_for_{len(seeds)}_replicas_"
+                f"solo_{len(seeds)}x={t_solo * 1e6:.0f}us")
+
+    # deadline sweep: the scheduler turns tau into an accuracy/time knob
+    for tau in (0.05, 0.5, 5.0):
+        r = run_federated(dataclasses.replace(
+            rcfg, rounds=R_LONG, eval_every=R_LONG,
+            schedule=ScheduleConfig(deadline_s=tau, epoch_time_mean_s=0.1)))
+        rows.append(f"deadline_tau{tau}s,{r.sim_time_s * 1e6:.0f},"
+                    f"sim_time_acc={r.final_acc:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -73,6 +73,35 @@ def run() -> list[str]:
     jax.block_until_ready(st2.v0)
     t_b = (time.perf_counter() - t0) * 1e6
     rows.append(f"gtg_batched_M8,{t_b:.1f},evals={int(st2.utility_evals)}")
+
+    # cohort ClientUpdate: M sequential dispatches vs one vmapped dispatch
+    from repro.engine.batch_client import jit_batched_client_update
+    from repro.federated.client import ClientConfig, client_update
+    from repro.models.mlp_cnn import make_mlp
+
+    mdl = make_mlp(input_dim=64, hidden=(64,), n_classes=10)
+    ccfg = ClientConfig(epochs=2, batches_per_epoch=2, batch_size=16)
+    m_sel, cap = 10, 64
+    params = mdl.init(key)
+    xs = jax.random.normal(key, (m_sel, cap, 64))
+    ys = jax.random.randint(key, (m_sel, cap), 0, 10)
+    nv = jnp.full((m_sel,), cap)
+    ek = jnp.full((m_sel,), ccfg.epochs)
+    sg = jnp.zeros((m_sel,))
+    keys = jax.random.split(key, m_sel)
+
+    def seq(p):
+        # return ALL outputs so _time's block_until_ready waits for every
+        # dispatch, not just the last (PJRT overlaps independent programs)
+        return [client_update(mdl, ccfg, p, xs[i], ys[i], nv[i], ek[i],
+                              sg[i], keys[i]) for i in range(m_sel)]
+
+    t_seq = _time(seq, params, reps=5)
+    t_vmap = _time(lambda p: jit_batched_client_update(
+        mdl, ccfg, p, xs, ys, nv, ek, sg, keys), params, reps=5)
+    rows.append(f"client_update_seq_M10,{t_seq:.1f},dispatches=10")
+    rows.append(f"client_update_vmap_M10,{t_vmap:.1f},"
+                f"dispatches=1_speedup_x{t_seq / max(t_vmap, 1e-9):.1f}")
     return rows
 
 

@@ -12,8 +12,8 @@ from __future__ import annotations
 import argparse
 import time
 
-BENCHES = ["kernels", "table1", "table2", "table3", "table4", "fig1",
-           "roofline"]
+BENCHES = ["kernels", "engine", "table1", "table2", "table3", "table4",
+           "fig1", "roofline"]
 
 
 def main() -> None:
@@ -32,6 +32,12 @@ def main() -> None:
         from benchmarks.kernel_bench import run as kb
         print("\n# micro-benchmarks (name,us_per_call,derived)")
         for row in kb():
+            print(row)
+
+    if "engine" in only:
+        from benchmarks.engine_bench import run as eb
+        print("\n# round engine: loop vs batched (name,us,derived)")
+        for row in eb(full=args.full):
             print(row)
 
     fl = dict(full=args.full, seeds=seeds)

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full pytest suite plus a kernel-bench smoke run.
+# Usage: scripts/check.sh  (or `make check`)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo
+echo "== kernel bench smoke =="
+python -m benchmarks.run --only kernels

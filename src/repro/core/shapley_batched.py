@@ -66,9 +66,18 @@ def gtg_shapley_batched(
     v_m = utility_fn(w_full)
 
     def run():
-        keys = jax.random.split(key, n_perms)
-        perms = jax.vmap(lambda k: _permutation_batch(k, m)[
-            jax.random.randint(k, (), 0, m)])(keys)       # (R, M)
+        # Balanced sampling: draw whole (M, M) batches (each client first
+        # exactly once per batch) so first-position marginals are stratified
+        # — strictly lower variance than R independent permutations.  The
+        # row shuffle keeps truncation to n_perms unbiased when
+        # n_perms % M != 0 (otherwise low-index clients would always keep
+        # their first-position rows and high-index clients never would).
+        n_batches = -(-n_perms // m)
+        bkey, skey = jax.random.split(key)
+        keys = jax.random.split(bkey, n_batches)
+        perms = jax.vmap(lambda k: _permutation_batch(k, m))(keys)
+        perms = perms.reshape(n_batches * m, m)
+        perms = jax.random.permutation(skey, perms, axis=0)[:n_perms]  # (R, M)
         weights = prefix_weight_matrix(perms, n_k)        # (R, M, M)
         flat_w = weights.reshape(n_perms * m, m)          # (R*M, M)
 

@@ -1,0 +1,20 @@
+"""repro.engine — the batched round-execution engine (DESIGN.md §6).
+
+    batch_client  vmapped ClientUpdate over the selected cohort
+    round_engine  the fused single-dispatch `round_step` + RoundEngine
+    replicated    multi-seed vmap: S replicas per dispatch
+    schedule      virtual clock: latencies, deadlines, time-derived E_k
+"""
+from repro.engine.batch_client import batched_client_update, cohort_update
+from repro.engine.round_engine import RoundEngine, RoundOutput, RoundSpec
+from repro.engine.schedule import (
+    ClientClock, ScheduleConfig, VirtualClock, deadline_epochs,
+    make_client_clock, round_duration_s,
+)
+
+__all__ = [
+    "batched_client_update", "cohort_update",
+    "RoundEngine", "RoundOutput", "RoundSpec",
+    "ClientClock", "ScheduleConfig", "VirtualClock", "deadline_epochs",
+    "make_client_clock", "round_duration_s",
+]

@@ -1,0 +1,171 @@
+"""Multi-seed replication: S independent FL runs as ONE vmapped program.
+
+Every benchmark table re-runs each (strategy, knob) cell across seeds; run
+solo, each seed pays its own compilation and its own per-round dispatches.
+Here the fused `round_step` (round_engine.py) is vmapped over a leading
+seed axis and jitted ONCE: per round, a single dispatch advances all S
+replicas.  Host-side strategy logic (selection, E_k draws, SV bookkeeping)
+stays per-seed Python — it is numpy-cheap and keeps each replica's rng/key
+streams identical to a solo `run_federated(..., engine="batched")` run at
+the same seed, which is what `tests/test_engine.py` pins.
+
+Replicas may have different per-client capacities (each seed re-partitions
+its data); stacks are padded to the max capacity — padding is never read
+because minibatch indices are sampled below each client's `n_valid`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import tree_stack
+from repro.engine.round_engine import RoundSpec, jitted_round_step
+from repro.engine.schedule import VirtualClock, round_duration_s
+from repro.federated.client import local_loss
+from repro.federated.compression import codec_nbytes
+
+
+def _pad_cap(arr: np.ndarray, cap: int) -> np.ndarray:
+    """Zero-pad axis 1 (per-client capacity) of (N, cap_i, ...) to `cap`."""
+    if arr.shape[1] == cap:
+        return arr
+    widths = [(0, 0), (0, cap - arr.shape[1])] + [(0, 0)] * (arr.ndim - 2)
+    return np.pad(arr, widths)
+
+
+def run_replicated(cfg, seeds, data=None, model=None):
+    """See `federated.server.run_federated_replicated` (the public alias)."""
+    from repro.core.selection import SelectionContext
+    from repro.federated.server import (
+        FLResult, round_epochs, setup_run,
+    )
+
+    t_start = time.time()
+    seeds = list(seeds)
+    if not seeds:
+        raise ValueError("run_federated_replicated needs at least one seed")
+    setups = [setup_run(dataclasses.replace(cfg, seed=s), data, model)
+              for s in seeds]
+    model = setups[0].model
+    n_seeds = len(seeds)
+
+    # ---- stack per-seed state along a leading replica axis ---------------
+    cap = max(int(s.xs.shape[1]) for s in setups)
+    xs = jnp.asarray(np.stack([_pad_cap(np.asarray(s.xs), cap)
+                               for s in setups]))
+    ys = jnp.asarray(np.stack([_pad_cap(np.asarray(s.ys), cap)
+                               for s in setups]))
+    nv = jnp.asarray(np.stack([np.asarray(s.n_valid) for s in setups]))
+    sigma = jnp.asarray(np.stack([s.sigma_k_all for s in setups]))
+    x_val = jnp.asarray(np.stack([np.asarray(s.x_val) for s in setups]))
+    y_val = jnp.asarray(np.stack([np.asarray(s.y_val) for s in setups]))
+    x_test = jnp.asarray(np.stack([np.asarray(s.x_test) for s in setups]))
+    y_test = jnp.asarray(np.stack([np.asarray(s.y_test) for s in setups]))
+    params = tree_stack([s.params for s in setups])
+    keys = [s.key for s in setups]
+    states = [s.state for s in setups]
+
+    needs_sv = setups[0].selector.uses_shapley
+    max_iters = cfg.shapley_max_iters or 50 * cfg.m
+    spec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
+                     shapley_eps=cfg.shapley_eps, shapley_max_iters=max_iters,
+                     upload_codec=cfg.upload_codec)
+    step_rep = jitted_round_step(model, cfg.client, spec, vmapped=True)
+
+    uses_losses = setups[0].selector.uses_local_losses
+    losses_rep = jax.jit(jax.vmap(jax.vmap(
+        lambda p, x, y, n: local_loss(model, p, x, y, n),
+        in_axes=(None, 0, 0, 0))))
+    eval_rep = jax.jit(jax.vmap(model.accuracy))
+    vloss_rep = jax.jit(jax.vmap(lambda p, xv, yv: model.loss(p, xv, yv)))
+
+    codec_bytes = codec_nbytes(cfg.upload_codec, setups[0].params)
+    model_bytes = setups[0].model_bytes
+    ctxs = [SelectionContext(data_fractions=jnp.asarray(s.fractions))
+            for s in setups]
+    vclocks = [VirtualClock() if s.clock is not None else None
+               for s in setups]
+
+    test_acc = [[] for _ in seeds]
+    val_loss_hist = [[] for _ in seeds]
+    selections = [[] for _ in seeds]
+    total_evals = [0] * n_seeds
+    upload_bytes = [0] * n_seeds
+    download_bytes = [0] * n_seeds
+    dispatches = 0
+
+    for t in range(cfg.rounds):
+        # ---- per-replica host-side strategy logic ------------------------
+        sel_rows, epoch_rows, key_rows = [], [], []
+        losses_all = None
+        if uses_losses:
+            losses_all = losses_rep(params, xs, ys, nv)
+            dispatches += 1
+        for i, s in enumerate(setups):
+            keys[i], sel_key, round_key = jax.random.split(keys[i], 3)
+            ctx = ctxs[i]
+            if uses_losses:
+                ctx = ctx._replace(local_losses=losses_all[i])
+            sel, states[i] = s.selector.select(states[i], sel_key, ctx)
+            sel = np.asarray(sel, np.int64)
+            selections[i].append(sel)
+            sel_rows.append(sel)
+            epoch_rows.append(round_epochs(cfg, s, sel))
+            key_rows.append(round_key)
+            upload_bytes[i] += codec_bytes * len(sel)
+            download_bytes[i] += model_bytes * len(sel)
+            if vclocks[i] is not None:
+                vclocks[i].advance(round_duration_s(
+                    s.clock, cfg.schedule, sel, epoch_rows[-1]))
+
+        # ---- ONE dispatch advances every replica -------------------------
+        out = step_rep(params, xs, ys, nv, sigma, x_val, y_val,
+                       jnp.asarray(np.stack(sel_rows)),
+                       jnp.asarray(np.stack(epoch_rows)),
+                       jnp.stack(key_rows))
+        params = out.params
+        dispatches += 1
+
+        sv_rows = np.asarray(out.sv) if needs_sv else None
+        evals_rows = np.asarray(out.utility_evals)
+        for i, s in enumerate(setups):
+            sv_i = jnp.asarray(sv_rows[i]) if needs_sv else None
+            if needs_sv:
+                total_evals[i] += int(evals_rows[i])
+            states[i] = s.selector.update(states[i], sel_rows[i],
+                                          sv_round=sv_i)
+
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            accs = np.asarray(eval_rep(params, x_test, y_test))
+            vls = np.asarray(vloss_rep(params, x_val, y_val))
+            dispatches += 2
+            for i in range(n_seeds):
+                test_acc[i].append((t + 1, float(accs[i])))
+                val_loss_hist[i].append((t + 1, float(vls[i])))
+
+    wall = time.time() - t_start
+    results = []
+    for i, s in enumerate(setups):
+        params_i = jax.tree.map(lambda x: x[i], params)
+        results.append(FLResult(
+            config=dataclasses.replace(cfg, seed=seeds[i]),
+            test_acc=test_acc[i],
+            val_loss=val_loss_hist[i],
+            final_acc=test_acc[i][-1][1] if test_acc[i] else float("nan"),
+            sv_final=np.asarray(states[i].valuation.sv),
+            selection_counts=np.asarray(states[i].valuation.counts),
+            selections=selections[i],
+            shapley_evals=total_evals[i],
+            wall_time_s=wall,          # shared: the replicas ran fused
+            params=params_i,
+            upload_bytes=upload_bytes[i],
+            download_bytes=download_bytes[i],
+            sim_time_s=vclocks[i].now_s if vclocks[i] is not None else 0.0,
+            dispatches=dispatches,     # shared across the fused run
+        ))
+    return results

@@ -1,0 +1,157 @@
+"""The fused round engine: one jitted program per communication round.
+
+The legacy `run_federated` loop issues, per round, M `client_update`
+dispatches + a GTG-Shapley dispatch + a `weighted_average` dispatch, each a
+host->device round-trip XLA cannot fuse across.  `round_step` traces the
+whole round — cohort gather, vmapped local training, upload codec, GTG-
+Shapley, ModelAverage — into ONE compiled program with the server `params`
+buffer donated, so at paper scale (N=300, T=400, 6 strategies x seeds) the
+simulator stops being the bottleneck (DESIGN.md §6).
+
+Numerical parity with the legacy loop is a hard invariant (it is the
+oracle): same key-splitting, same op order per client, same Shapley calls.
+`tests/test_engine.py` pins selections, final params, and byte accounting
+against the loop for greedyfed / fedavg / power_of_choice.
+
+`make_round_step` returns the *untraced* function so `replicated.py` can
+vmap it over a seed axis before jitting — one compilation serves a whole
+multi-seed benchmark table.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import normalized_weights, weighted_average
+from repro.core.shapley import gtg_shapley
+from repro.engine.batch_client import cohort_update
+from repro.federated.client import ClientConfig
+from repro.federated.compression import codec_nbytes, codec_roundtrip
+from repro.models.mlp_cnn import ClassifierModel
+
+PyTree = Any
+
+
+class RoundSpec(NamedTuple):
+    """Static (hashable) round-execution config baked into the trace."""
+    needs_sv: bool = False
+    shapley_impl: str = "serial"   # "serial" (Alg. 2) | "batched" (§8)
+    shapley_eps: float = 1e-4
+    shapley_max_iters: int = 250
+    upload_codec: str = "identity"
+
+
+class RoundOutput(NamedTuple):
+    params: PyTree             # w^{t+1}
+    sv: jax.Array              # (M,) this round's GTG-SV (zeros if unused)
+    utility_evals: jax.Array   # scalar int32
+    sv_truncated: jax.Array    # bool: between-round truncation fired
+
+
+def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
+                    spec: RoundSpec) -> Callable[..., RoundOutput]:
+    """Build the traceable round function (jit/vmap applied by callers).
+
+    Signature of the returned fn:
+        (params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
+         sel, epochs_k, round_key) -> RoundOutput
+    """
+
+    def round_step(params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
+                   sel, epochs_k, round_key) -> RoundOutput:
+        stacked, n_k_sel, sv_key = cohort_update(
+            model, ccfg, params, xs_all, ys_all, nv_all, sigma_all,
+            sel, epochs_k, round_key)
+
+        if spec.upload_codec != "identity":
+            stacked = jax.vmap(
+                lambda u: codec_roundtrip(spec.upload_codec, u, params)
+            )(stacked)
+
+        m = sel.shape[0]
+        sv = jnp.zeros((m,))
+        evals = jnp.array(0, jnp.int32)
+        truncated = jnp.array(False)
+        if spec.needs_sv:
+            def utility_fn(p):  # U(w) = -L(w; D_val), as in the loop engine
+                return -model.loss(p, x_val, y_val)
+
+            if spec.shapley_impl == "batched":
+                from repro.core.shapley_batched import (
+                    gtg_shapley_batched, make_batched_mlp_utility,
+                )
+                # the same helper the loop engine uses (works on traced
+                # x_val/y_val), so loop and fused engines agree bitwise
+                batched_utility_fn = make_batched_mlp_utility(
+                    model, x_val, y_val)
+                sv, stats = gtg_shapley_batched(
+                    stacked, n_k_sel, params, utility_fn,
+                    batched_utility_fn, sv_key, eps=spec.shapley_eps,
+                    n_perms=spec.shapley_max_iters)
+            else:
+                sv, stats = gtg_shapley(
+                    stacked, n_k_sel, params, utility_fn, sv_key,
+                    eps=spec.shapley_eps, max_iters=spec.shapley_max_iters)
+            evals = stats.utility_evals
+            truncated = stats.truncated_round
+
+        new_params = weighted_average(stacked, normalized_weights(n_k_sel))
+        return RoundOutput(new_params, sv, evals, truncated)
+
+    return round_step
+
+
+@functools.lru_cache(maxsize=16)
+def _jitted_round_step_cached(model, ccfg, spec, donate, vmapped):
+    fn = make_round_step(model, ccfg, spec)
+    if vmapped:
+        fn = jax.vmap(fn)
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def jitted_round_step(model: ClassifierModel, ccfg: ClientConfig,
+                      spec: RoundSpec, *, vmapped: bool = False):
+    """Process-wide (bounded) cache of compiled round steps.
+
+    All key components are immutable NamedTuples (`make_classifier` is
+    memoized, so the same dataset yields the same model object), which
+    means every run of the same config — each seed of a benchmark table
+    cell — reuses one trace and one executable instead of recompiling.
+    The LRU bound keeps sweeps that build ad-hoc models per point from
+    accumulating executables for the process lifetime.
+    """
+    # params are consumed and replaced every round: donate the buffer so
+    # XLA updates in place (donation is a silent no-op we skip on CPU).
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+    return _jitted_round_step_cached(model, ccfg, spec, donate, vmapped)
+
+
+class RoundEngine:
+    """Owns the compiled `round_step` plus the per-run constant operands.
+
+    One instance per `run_federated` call: the full padded client stacks,
+    privacy sigmas, and validation split are bound once; per round only
+    (params, sel, epochs_k, key) cross the host boundary — a single
+    dispatch, vs O(M) for the legacy loop.
+    """
+
+    def __init__(self, model: ClassifierModel, ccfg: ClientConfig,
+                 spec: RoundSpec, xs_all, ys_all, nv_all, sigma_all,
+                 x_val, y_val):
+        self.spec = spec
+        self._step = jitted_round_step(model, ccfg, spec)
+        self._operands = (jnp.asarray(xs_all), jnp.asarray(ys_all),
+                          jnp.asarray(nv_all), jnp.asarray(sigma_all),
+                          jnp.asarray(x_val), jnp.asarray(y_val))
+
+    def step(self, params: PyTree, sel, epochs_k, round_key) -> RoundOutput:
+        """Execute one full communication round as one dispatch."""
+        return self._step(params, *self._operands, jnp.asarray(sel),
+                          jnp.asarray(epochs_k), round_key)
+
+    def upload_nbytes_per_client(self, params: PyTree) -> int:
+        """Wire bytes of one client upload under this spec's codec."""
+        return codec_nbytes(self.spec.upload_codec, params)

@@ -145,3 +145,20 @@ def compress_update(codec: str, w_new: PyTree, w_ref: PyTree
     enc_fn, dec_fn = CODECS[codec]
     enc = enc_fn(tree_sub(w_new, w_ref))
     return tree_add(w_ref, dec_fn(enc)), enc.nbytes
+
+
+def codec_roundtrip(codec: str, w_new: PyTree, w_ref: PyTree) -> PyTree:
+    """Pure-array encode->decode (no byte count): safe to trace under
+    jit/vmap, e.g. per-cohort inside the fused round engine."""
+    enc_fn, dec_fn = CODECS[codec]
+    return tree_add(w_ref, dec_fn(enc_fn(tree_sub(w_new, w_ref))))
+
+
+def codec_nbytes(codec: str, tree: PyTree) -> int:
+    """Wire size of one encoded update for a model of `tree`'s shapes.
+
+    Every codec's byte count depends on leaf shapes only, so it is a
+    per-run constant — computed once here instead of per client per round.
+    """
+    enc_fn, _ = CODECS[codec]
+    return enc_fn(jax.tree.map(jnp.zeros_like, tree)).nbytes

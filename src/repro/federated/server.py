@@ -6,12 +6,24 @@ One function, `run_federated`, drives T communication rounds:
 Strategy behaviour is fully encapsulated in the selector object, so FedAvg /
 FedProx / Power-of-Choice / S-FedAvg / UCB / GreedyFed all share this loop
 (the paper's experimental protocol).
+
+Round execution is pluggable (``cfg.engine``, DESIGN.md §6):
+  * "loop"    — the paper-faithful per-client Python loop (M dispatches per
+                round); kept verbatim as the parity oracle;
+  * "batched" — `repro.engine.RoundEngine`: the whole round (cohort gather,
+                vmapped local training, upload codec, GTG-Shapley,
+                ModelAverage) fused into ONE jitted dispatch.
+
+With ``cfg.schedule`` set, stragglers stop being randomly drawn: a virtual
+clock derives each client's E_k from the round deadline
+(`repro.engine.schedule`, DESIGN.md §9) and the run reports simulated
+wall-clock time.  `run_federated_replicated` vmaps the fused round over a
+seed axis so multi-seed benchmark tables amortise one compilation.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -22,6 +34,10 @@ from repro.core.aggregation import normalized_weights, tree_stack, weighted_aver
 from repro.core.selection import SelectionContext, make_selector
 from repro.core.shapley import gtg_shapley
 from repro.data.synth import SynthDataset, make_dataset
+from repro.engine.schedule import (
+    ScheduleConfig, VirtualClock, deadline_epochs, make_client_clock,
+    round_duration_s,
+)
 from repro.federated.client import ClientConfig, client_update, local_loss
 from repro.federated.compression import compress_update
 from repro.federated.partition import dirichlet_partition, power_law_fractions
@@ -39,10 +55,16 @@ class FLConfig:
     selector: str = "greedyfed"
     selector_kwargs: dict = field(default_factory=dict)
     client: ClientConfig = ClientConfig()
+    # round-execution engine: "loop" (per-client dispatches, parity oracle)
+    # or "batched" (fused single-dispatch round, repro.engine)
+    engine: str = "loop"
     # heterogeneity knobs (paper Section IV)
     dirichlet_alpha: float = 1e-4
     straggler_frac: float = 0.0  # x
     privacy_sigma: float = 0.0   # sigma
+    # virtual-clock timing model; when set, E_k is deadline-derived and
+    # straggler_frac is ignored (DESIGN.md §9)
+    schedule: Optional[ScheduleConfig] = None
     # GTG-Shapley
     shapley_eps: float = 1e-4
     shapley_max_iters: Optional[int] = None   # default 50*M
@@ -74,6 +96,8 @@ class FLResult(NamedTuple):
     params: PyTree
     upload_bytes: int = 0     # total client->PS traffic over the run
     download_bytes: int = 0   # total PS->client traffic (model broadcasts)
+    sim_time_s: float = 0.0   # virtual-clock seconds (0 without schedule)
+    dispatches: int = 0       # host->device program launches issued
 
 
 def _pad_clients(x, y, parts):
@@ -88,9 +112,41 @@ def _pad_clients(x, y, parts):
     return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(nv)
 
 
-def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
-                  model: Optional[ClassifierModel] = None) -> FLResult:
-    t_start = time.time()
+class RunSetup(NamedTuple):
+    """Everything `run_federated` derives from an FLConfig before round 0.
+
+    Shared with `engine.replicated` so the multi-seed path reproduces the
+    exact same rng/key streams as a solo run at the same seed.
+    """
+    data: SynthDataset
+    model: ClassifierModel
+    rng: np.random.Generator
+    key: jax.Array
+    fractions: np.ndarray
+    xs: jax.Array
+    ys: jax.Array
+    n_valid: jax.Array
+    n_k_all: jax.Array
+    straggler_ids: set
+    sigma_k_all: np.ndarray
+    params: PyTree
+    selector: Any
+    state: Any
+    x_val: jax.Array
+    y_val: jax.Array
+    x_test: jax.Array
+    y_test: jax.Array
+    model_bytes: int
+    clock: Any                # engine.schedule.ClientClock | None
+
+
+def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
+              model: Optional[ClassifierModel] = None) -> RunSetup:
+    """Partition data, assign heterogeneity, init model/selector state.
+
+    Draw order on `rng`/`key` is frozen (parity across engines and with the
+    seed history); anything new must draw strictly after the existing calls.
+    """
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.key(cfg.seed)
 
@@ -109,13 +165,14 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
 
     # ---- heterogeneity assignments --------------------------------------
     n_stragglers = int(round(cfg.straggler_frac * cfg.n_clients))
-    straggler_ids = set(rng.choice(cfg.n_clients, n_stragglers, replace=False).tolist())
+    straggler_ids = set(rng.choice(cfg.n_clients, n_stragglers,
+                                   replace=False).tolist())
     noise_perm = rng.permutation(cfg.n_clients)  # sigma_k = rank * sigma / N
     sigma_k_all = np.zeros(cfg.n_clients, np.float32)
     for rank, k in enumerate(noise_perm):
         sigma_k_all[k] = rank * cfg.privacy_sigma / cfg.n_clients
 
-    # ---- model / selector / shapley setup --------------------------------
+    # ---- model / selector setup ------------------------------------------
     key, init_key = jax.random.split(key)
     params = model.init(init_key)
     selector = make_selector(cfg.selector, cfg.n_clients, cfg.m,
@@ -125,92 +182,171 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
         selector.alpha = cfg.sv_alpha
     state = selector.init_state()
 
-    x_val, y_val = jnp.asarray(data.x_val), jnp.asarray(data.y_val)
+    model_bytes = sum(int(x.size) * x.dtype.itemsize
+                      for x in jax.tree.leaves(params))
+
+    # ---- virtual clock (draws AFTER all legacy consumption of rng) ------
+    clock = None
+    if cfg.schedule is not None:
+        clock = make_client_clock(cfg.schedule, cfg.n_clients, model_bytes,
+                                  rng, n_k=np.asarray(n_valid))
+
+    return RunSetup(
+        data=data, model=model, rng=rng, key=key, fractions=fractions,
+        xs=xs, ys=ys, n_valid=n_valid, n_k_all=n_k_all,
+        straggler_ids=straggler_ids, sigma_k_all=sigma_k_all, params=params,
+        selector=selector, state=state,
+        x_val=jnp.asarray(data.x_val), y_val=jnp.asarray(data.y_val),
+        x_test=jnp.asarray(data.x_test), y_test=jnp.asarray(data.y_test),
+        model_bytes=model_bytes, clock=clock,
+    )
+
+
+def round_epochs(cfg: FLConfig, s: RunSetup, sel: np.ndarray) -> np.ndarray:
+    """(M,) int32 local-epoch budget E_k for the selected cohort.
+
+    Deadline-derived when a schedule is set (DESIGN.md §9); otherwise the
+    paper's random straggler draw, consumed from `s.rng` in selection order
+    (the legacy stream — identical across engines).
+    """
+    e = cfg.client.epochs
+    if s.clock is not None:
+        return deadline_epochs(s.clock, cfg.schedule, sel, e)
+    out = np.full(len(sel), e, np.int32)
+    for i, k_id in enumerate(sel):
+        if int(k_id) in s.straggler_ids:
+            out[i] = int(s.rng.integers(1, e + 1))
+    return out
+
+
+def _make_round_engine(cfg: FLConfig, s: RunSetup, needs_sv: bool,
+                       max_iters: int):
+    from repro.engine.round_engine import RoundEngine, RoundSpec
+    spec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
+                     shapley_eps=cfg.shapley_eps, shapley_max_iters=max_iters,
+                     upload_codec=cfg.upload_codec)
+    return RoundEngine(s.model, cfg.client, spec, s.xs, s.ys, s.n_valid,
+                       jnp.asarray(s.sigma_k_all), s.x_val, s.y_val)
+
+
+def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
+                  model: Optional[ClassifierModel] = None) -> FLResult:
+    t_start = time.time()
+    s = setup_run(cfg, data, model)
+    model, params, state, key = s.model, s.params, s.state, s.key
+    selector = s.selector
 
     def utility_fn(p):  # U(w) = -L(w; D_val)
-        return -model.loss(p, x_val, y_val)
+        return -model.loss(p, s.x_val, s.y_val)
 
     batched_utility_fn = None
     if cfg.shapley_impl == "batched":
         from repro.core.shapley_batched import make_batched_mlp_utility
-        batched_utility_fn = make_batched_mlp_utility(model, x_val, y_val)
+        batched_utility_fn = make_batched_mlp_utility(model, s.x_val, s.y_val)
 
     needs_sv = selector.uses_shapley
     max_iters = cfg.shapley_max_iters or 50 * cfg.m
+
+    if cfg.engine not in ("loop", "batched"):
+        raise ValueError(f"unknown engine {cfg.engine!r}; "
+                         "options: 'loop', 'batched'")
+    engine = None
+    codec_bytes = s.model_bytes
+    if cfg.engine == "batched":
+        engine = _make_round_engine(cfg, s, needs_sv, max_iters)
+        codec_bytes = engine.upload_nbytes_per_client(params)
 
     all_losses_fn = jax.jit(jax.vmap(
         lambda p, x, y, n: local_loss(model, p, x, y, n),
         in_axes=(None, 0, 0, 0)))
 
     eval_acc = jax.jit(model.accuracy)
-    x_test, y_test = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
 
-    ctx_base = SelectionContext(data_fractions=jnp.asarray(fractions))
+    ctx_base = SelectionContext(data_fractions=jnp.asarray(s.fractions))
 
     test_acc, val_loss_hist, selections = [], [], []
     total_evals = 0
-    model_bytes = sum(int(x.size) * x.dtype.itemsize
-                      for x in jax.tree.leaves(params))
     upload_bytes = download_bytes = 0
+    dispatches = 0
+    vclock = VirtualClock() if s.clock is not None else None
 
     for t in range(cfg.rounds):
         key, sel_key, round_key = jax.random.split(key, 3)
 
         ctx = ctx_base
         if selector.uses_local_losses:
-            ctx = ctx._replace(local_losses=all_losses_fn(params, xs, ys, n_valid))
+            ctx = ctx._replace(
+                local_losses=all_losses_fn(params, s.xs, s.ys, s.n_valid))
+            dispatches += 1
 
         sel, state = selector.select(state, sel_key, ctx)
         sel = np.asarray(sel, np.int64)
         selections.append(sel)
+        epochs_k = round_epochs(cfg, s, sel)
 
-        # ---- ClientUpdate at each selected client -----------------------
-        ckeys = jax.random.split(round_key, len(sel) + 1)
-        updates = []
-        for i, k_id in enumerate(sel):
-            if int(k_id) in straggler_ids:
-                ek = int(rng.integers(1, cfg.client.epochs + 1))
-            else:
-                ek = cfg.client.epochs
-            upd = client_update(
-                model, cfg.client, params, xs[k_id], ys[k_id], n_valid[k_id],
-                jnp.asarray(ek), jnp.asarray(sigma_k_all[k_id]), ckeys[i])
-            if cfg.upload_codec != "identity":
-                upd, nbytes = compress_update(cfg.upload_codec, upd, params)
-            else:
-                nbytes = model_bytes
-            upload_bytes += nbytes
-            updates.append(upd)
-        download_bytes += model_bytes * len(sel)  # w^t broadcast
-
-        stacked = tree_stack(updates)
-        n_k_sel = n_k_all[jnp.asarray(sel)]
-
-        # ---- GTG-Shapley at the PS (Alg. 2 / batched variant) ------------
         sv_round = None
-        if needs_sv:
-            if cfg.shapley_impl == "batched":
-                from repro.core.shapley_batched import gtg_shapley_batched
-                sv_round, stats = gtg_shapley_batched(
-                    stacked, n_k_sel, params, utility_fn,
-                    batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
-                    n_perms=max_iters)
-            else:
-                sv_round, stats = gtg_shapley(
-                    stacked, n_k_sel, params, utility_fn, ckeys[-1],
-                    eps=cfg.shapley_eps, max_iters=max_iters)
-            total_evals += int(stats.utility_evals)
+        if engine is not None:
+            # ---- fused round: ONE dispatch for train+codec+SV+average ----
+            out = engine.step(params, sel, epochs_k, round_key)
+            params = out.params
+            if needs_sv:
+                sv_round = out.sv
+                total_evals += int(out.utility_evals)
+            upload_bytes += codec_bytes * len(sel)
+            dispatches += 1
+        else:
+            # ---- legacy loop: ClientUpdate at each selected client -------
+            ckeys = jax.random.split(round_key, len(sel) + 1)
+            updates = []
+            for i, k_id in enumerate(sel):
+                upd = client_update(
+                    model, cfg.client, params, s.xs[k_id], s.ys[k_id],
+                    s.n_valid[k_id], jnp.asarray(int(epochs_k[i])),
+                    jnp.asarray(s.sigma_k_all[k_id]), ckeys[i])
+                if cfg.upload_codec != "identity":
+                    upd, nbytes = compress_update(cfg.upload_codec, upd,
+                                                  params)
+                else:
+                    nbytes = s.model_bytes
+                upload_bytes += nbytes
+                updates.append(upd)
+            dispatches += len(sel)
 
-        # ---- ModelAverage (Alg. 1 line 9) --------------------------------
-        params = weighted_average(stacked, normalized_weights(n_k_sel))
+            stacked = tree_stack(updates)
+            n_k_sel = s.n_k_all[jnp.asarray(sel)]
+
+            # ---- GTG-Shapley at the PS (Alg. 2 / batched variant) --------
+            if needs_sv:
+                if cfg.shapley_impl == "batched":
+                    from repro.core.shapley_batched import gtg_shapley_batched
+                    sv_round, stats = gtg_shapley_batched(
+                        stacked, n_k_sel, params, utility_fn,
+                        batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
+                        n_perms=max_iters)
+                else:
+                    sv_round, stats = gtg_shapley(
+                        stacked, n_k_sel, params, utility_fn, ckeys[-1],
+                        eps=cfg.shapley_eps, max_iters=max_iters)
+                total_evals += int(stats.utility_evals)
+                dispatches += 1
+
+            # ---- ModelAverage (Alg. 1 line 9) ----------------------------
+            params = weighted_average(stacked, normalized_weights(n_k_sel))
+            dispatches += 1
+
+        download_bytes += s.model_bytes * len(sel)  # w^t broadcast
+        if vclock is not None:
+            vclock.advance(round_duration_s(s.clock, cfg.schedule, sel,
+                                            epochs_k))
 
         state = selector.update(state, sel, sv_round=sv_round)
 
         if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            acc = float(eval_acc(params, x_test, y_test))
+            acc = float(eval_acc(params, s.x_test, s.y_test))
             vl = float(-utility_fn(params))
             test_acc.append((t + 1, acc))
             val_loss_hist.append((t + 1, vl))
+            dispatches += 2
 
     counts = np.asarray(state.valuation.counts)
     return FLResult(
@@ -226,7 +362,23 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
         params=params,
         upload_bytes=upload_bytes,
         download_bytes=download_bytes,
+        sim_time_s=vclock.now_s if vclock is not None else 0.0,
+        dispatches=dispatches,
     )
+
+
+def run_federated_replicated(cfg: FLConfig, seeds,
+                             data: Optional[SynthDataset] = None,
+                             model: Optional[ClassifierModel] = None
+                             ) -> list[FLResult]:
+    """Run `len(seeds)` independent replicas with ONE vmapped round program.
+
+    Benchmark tables re-run every config across seeds; this entry point
+    compiles the fused round step once and advances all replicas per round
+    in a single dispatch (repro.engine.replicated, DESIGN.md §6).
+    """
+    from repro.engine.replicated import run_replicated
+    return run_replicated(cfg, seeds, data=data, model=model)
 
 
 def run_centralized(cfg: FLConfig, data: Optional[SynthDataset] = None,

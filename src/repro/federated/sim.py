@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import normalized_weights, weighted_average
-from repro.federated.client import ClientConfig, client_update
+from repro.engine.batch_client import batched_client_update
+from repro.federated.client import ClientConfig
 from repro.models.mlp_cnn import ClassifierModel
 
 PyTree = Any
@@ -36,11 +37,13 @@ def parallel_client_round(
     sigma_k: jax.Array,      # (M,) privacy noise levels
     keys: jax.Array,         # (M,) rng keys
 ) -> tuple[PyTree, PyTree]:
-    """Run all M ClientUpdates in parallel; return (stacked updates, w^{t+1})."""
-    stacked = jax.vmap(
-        lambda x, y, n, e, s, k: client_update(model, ccfg, params, x, y, n,
-                                               e, s, k)
-    )(xs, ys, n_valid, epochs_k, sigma_k, keys)
+    """Run all M ClientUpdates in parallel; return (stacked updates, w^{t+1}).
+
+    The cohort vmap is the engine's (`repro.engine.batch_client`); the fused
+    `round_step` extends it with codec + Shapley + aggregation in one trace.
+    """
+    stacked = batched_client_update(model, ccfg, params, xs, ys, n_valid,
+                                    epochs_k, sigma_k, keys)
     new_params = weighted_average(
         stacked, normalized_weights(n_valid.astype(jnp.float32)))
     return stacked, new_params

@@ -1,0 +1,54 @@
+"""Version compatibility shims for the moving jax mesh/sharding APIs.
+
+The ambient-mesh context manager has been renamed twice upstream
+(`jax.sharding.use_mesh` -> `jax.sharding.set_mesh` -> `jax.set_mesh`), and
+older releases (<= 0.4.x, as shipped in this container) have none of them —
+there the `Mesh` object itself is the context manager.  Likewise older
+`jax.jit` rejects bare `PartitionSpec`s in `in_shardings`/`out_shardings`;
+they must be wrapped into `NamedSharding`s by hand.
+
+Everything mesh-scoped in this repo goes through these two helpers so the
+code runs unchanged across jax versions.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def set_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh.
+
+    Resolution order: `jax.set_mesh` -> `jax.sharding.set_mesh` ->
+    `jax.sharding.use_mesh` -> legacy `with mesh:` (the Mesh object is its
+    own context manager on jax <= 0.4.x).
+    """
+    for mod in (jax, jax.sharding):
+        for name in ("set_mesh", "use_mesh"):
+            fn = getattr(mod, name, None)
+            if fn is not None:
+                return fn(mesh)
+    return mesh
+
+
+def named_shardings(mesh, specs: PyTree) -> PyTree:
+    """Normalise a pytree of PartitionSpec / None / Sharding leaves into
+    `NamedSharding`s on `mesh` (None -> fully replicated).
+
+    `jax.jit` on older versions only accepts concrete `Sharding`s; newer
+    versions accept raw specs under an ambient mesh, where this wrapping is
+    a harmless no-op semantically.
+    """
+    def conv(s):
+        if s is None:
+            s = P()
+        if isinstance(s, jax.sharding.Sharding):
+            return s
+        return NamedSharding(mesh, s)
+
+    return jax.tree.map(conv, specs,
+                        is_leaf=lambda s: s is None or isinstance(s, P))

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
+from repro.launch.compat import named_shardings, set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (
     assembled_roofline, collective_bytes_from_text, roofline_report,
@@ -117,8 +118,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
 
     t0 = time.time()
     fn, args, in_s, out_s = build_step(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
-        lowered = jax.jit(fn, in_shardings=in_s, out_shardings=out_s).lower(*args)
+    with set_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=named_shardings(mesh, in_s),
+                          out_shardings=named_shardings(mesh, out_s)
+                          ).lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -142,7 +145,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "collective_bytes_toplevel": coll,
     }
     if assemble:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             rec["assembled"] = assembled_roofline(cfg, shape, mesh)
         rec["roofline"] = roofline_report(cfg, shape, rec,
                                           n_devices=int(mesh.devices.size))

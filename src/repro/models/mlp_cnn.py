@@ -5,6 +5,7 @@ Pure-functional: params are pytrees, `apply(params, x) -> logits`,
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
@@ -101,7 +102,11 @@ def make_cnn(input_shape=(32, 32, 3), n_classes: int = 10,
     return ClassifierModel("cnn", init, apply)
 
 
+@functools.lru_cache(maxsize=None)
 def make_classifier(dataset: str) -> ClassifierModel:
+    """Memoized: the same dataset always yields the SAME (hashable) model
+    object, so jit caches keyed on the model — notably the round engine's
+    fused step — are shared across runs instead of re-tracing per run."""
     if dataset in ("mnist", "fmnist"):
         return make_mlp()
     if dataset == "cifar10":

@@ -1,0 +1,33 @@
+"""Import-time fallback when `hypothesis` is not installed (offline CI).
+
+Property-based tests decorate with `@given(...)`; without hypothesis the
+decorator replaces the test with a skip marker so the module still collects
+and every plain test in it runs.  Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                       # offline container
+        from _hypothesis_compat import given, settings, st
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn
+
+
+class _AnyStrategy:
+    """Stands in for `hypothesis.strategies`: any attribute is a callable
+    returning None, enough for decorator-argument evaluation at import."""
+
+    def __getattr__(self, _name):
+        return lambda *a, **k: None
+
+
+st = _AnyStrategy()

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.aggregation import (
     normalized_weights, subset_average, tree_stack, weighted_average,

@@ -5,7 +5,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container
+    from _hypothesis_compat import given, settings, st
 
 from repro.models.lm.config import ArchConfig
 from repro.models.lm.model import _ring_positions

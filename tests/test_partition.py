@@ -1,6 +1,9 @@
 """Dirichlet x power-law partitioning properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container
+    from _hypothesis_compat import given, settings, st
 
 from repro.federated.partition import (
     dirichlet_partition, partition_summary, power_law_fractions,

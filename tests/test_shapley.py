@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.aggregation import subset_average, tree_stack
 from repro.core.shapley import exact_shapley, gtg_shapley
