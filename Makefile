@@ -1,4 +1,4 @@
-.PHONY: check test bench-kernels bench-engine
+.PHONY: check test bench-kernels bench-engine bench-smoke
 
 check:
 	./scripts/check.sh
@@ -11,3 +11,9 @@ bench-kernels:
 
 bench-engine:
 	PYTHONPATH=src python -m benchmarks.run --only engine
+
+# small-size engine bench that refreshes BENCH_selection.json (dispatch
+# counts + loop/batched/scan latencies); opt into the check gate with
+# CHECK_BENCH_SMOKE=1 ./scripts/check.sh
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.engine_bench --smoke --json BENCH_selection.json

@@ -1,26 +1,40 @@
-"""Round-engine benchmark: fused batched round vs the legacy per-client loop.
+"""Round/run-engine benchmark: loop vs batched vs whole-run scan.
 
-Two measurements (the engines are parity-exact, tests/test_engine.py):
+Three execution tiers (parity-pinned by tests/test_engine.py):
+
+  * loop    — the legacy per-client python loop: M+1 dispatches per round;
+  * batched — `round_step`: ONE dispatch per round with donated params;
+  * scan    — `run_scan`: the WHOLE T-round run (device-resident selection
+              and valuation included) as one `lax.scan` dispatch.
+
+Measurements:
 
   * round latency — time for ONE round's result to materialise (blocking).
     This is what every SV-driven strategy pays: GreedyFed/UCB/S-FedAvg
     consume the round's Shapley values before the next selection, so the
-    round chain can never pipeline.  The legacy loop issues M+1 dispatches
-    per round; the fused engine exactly one with donated params.
-    (A pure-random selector never reads round outputs, letting the PJRT
-    CPU runtime overlap the loop's independent client programs across
-    rounds — a throughput artifact no paper workload can exploit.)
+    round chain can never pipeline.  (A pure-random selector never reads
+    round outputs, letting the PJRT CPU runtime overlap the loop's
+    independent client programs across rounds — a throughput artifact no
+    paper workload can exploit.)
 
   * end-to-end greedyfed — steady-state seconds/round of full
-    `run_federated` runs, (T_long - T_short)/(rounds difference), so
-    setup + compile cancels.
+    `run_federated` runs, (T_long - T_short)/(rounds difference), so setup
+    (and, for loop/batched, compile) cancels; the scan engine compiles one
+    executable per T, so a small residual compile delta stays in its
+    number — the dispatch counts are the load-bearing comparison.
 
-Plus multi-seed amortisation (`run_federated_replicated`) and a
-virtual-clock deadline sweep (time-derived stragglers, DESIGN.md §9).
+Plus multi-seed amortisation (`run_federated_replicated`, per-round and
+whole-run flavours) and a virtual-clock deadline sweep (DESIGN.md §9).
+
+`run(json_path=...)` (or `make bench-smoke`) additionally writes
+BENCH_selection.json — machine-readable dispatch counts and latencies so
+the selection-path perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -43,6 +57,12 @@ BASE = dict(
     eval_every=1000,   # keep eval dispatches out of the round timing
     client=ClientConfig(epochs=3, batches_per_epoch=3, batch_size=32),
 )
+# CI-smoke config: same shape, small enough for scripts/check.sh
+SMOKE = dict(
+    n_clients=16, m=4, n_train=800, n_val=120, n_test=120,
+    eval_every=1000,
+    client=ClientConfig(epochs=2, batches_per_epoch=2, batch_size=32),
+)
 R_SHORT, R_LONG = 2, 10
 
 
@@ -61,12 +81,13 @@ def _timeit_chain(fn, params, reps=10) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def _round_latency_rows() -> tuple[list[str], float]:
-    cfg = FLConfig(**BASE)
+def _round_latency_rows(base: dict) -> tuple[list[str], dict, float]:
+    cfg = FLConfig(**base)
     s = setup_run(cfg)
     sel = np.arange(cfg.m)
     epochs_k = np.full(cfg.m, cfg.client.epochs, np.int32)
     key = jax.random.key(1)
+    tag = f"N{cfg.n_clients}_M{cfg.m}"
 
     def loop_round(params):
         # the legacy engine's round body, verbatim shape (M+1 dispatches)
@@ -88,30 +109,46 @@ def _round_latency_rows() -> tuple[list[str], float]:
     t_fuse = _timeit_chain(
         lambda p: engine.step(p, sel, epochs_k, key).params,
         jax.tree.map(jnp.copy, s.params))
-    return [
-        f"round_latency_loop_N50_M10,{t_loop * 1e6:.0f},dispatches=11",
-        f"round_latency_batched_N50_M10,{t_fuse * 1e6:.0f},"
+    rows = [
+        f"round_latency_loop_{tag},{t_loop * 1e6:.0f},"
+        f"dispatches={cfg.m + 1}",
+        f"round_latency_batched_{tag},{t_fuse * 1e6:.0f},"
         f"dispatches=1_speedup_x{t_loop / max(t_fuse, 1e-12):.2f}",
-    ], t_fuse
+    ]
+    stats = {"loop": t_loop * 1e6, "batched": t_fuse * 1e6}
+    return rows, stats, t_fuse
 
 
-def _per_round_e2e(cfg: FLConfig) -> tuple[float, int]:
-    """Steady-state (seconds, dispatches) per round of full runs; the
-    rounds=1 warmup plus the long-short difference cancels setup/compile."""
+def _per_round_e2e(cfg: FLConfig, r_long: int) -> tuple[float, int, int]:
+    """Steady-state (seconds/round, dispatches/round, total dispatches of
+    the long run); the rounds=1 warmup plus the long-short difference
+    cancels setup (and loop/batched compile)."""
     run_federated(dataclasses.replace(cfg, rounds=1))
     short = run_federated(dataclasses.replace(cfg, rounds=R_SHORT))
-    long = run_federated(dataclasses.replace(cfg, rounds=R_LONG))
-    dt = (long.wall_time_s - short.wall_time_s) / (R_LONG - R_SHORT)
-    ddisp = (long.dispatches - short.dispatches) // (R_LONG - R_SHORT)
-    return dt, ddisp
+    long = run_federated(dataclasses.replace(cfg, rounds=r_long))
+    dt = (long.wall_time_s - short.wall_time_s) / (r_long - R_SHORT)
+    ddisp = (long.dispatches - short.dispatches) // (r_long - R_SHORT)
+    return dt, ddisp, long.dispatches
 
 
-def run(*, full: bool = False) -> list[str]:
+def run(*, full: bool = False, smoke: bool = False,
+        json_path: str | None = None) -> list[str]:
+    base = SMOKE if smoke else BASE
+    r_long = 6 if smoke else R_LONG
+    tag = f"N{base['n_clients']}_M{base['m']}"
+    report: dict = {
+        "schema": "bench_selection/v1",
+        "backend": jax.default_backend(),
+        "mode": "smoke" if smoke else ("full" if full else "quick"),
+        "config": {"n_clients": base["n_clients"], "m": base["m"],
+                   "rounds_short": R_SHORT, "rounds_long": r_long},
+    }
+
     # shared-executable amortisation: the fused step is cached process-wide
     # on (model, client cfg, spec), so every later seed of a table cell
     # skips tracing+compilation entirely.  Must run FIRST (cold cache).
     rcfg0 = FLConfig(engine="batched", selector="fedavg", rounds=R_SHORT,
-                     **BASE)
+                     **base)
     cold = run_federated(rcfg0).wall_time_s
     warm = run_federated(dataclasses.replace(rcfg0, seed=1)).wall_time_s
     rows = [
@@ -120,45 +157,97 @@ def run(*, full: bool = False) -> list[str]:
         f"shared_executable_x{cold / max(warm, 1e-12):.2f}",
     ]
 
-    lat_rows, t_fuse_round = _round_latency_rows()
+    lat_rows, lat_stats, t_fuse_round = _round_latency_rows(base)
     rows += lat_rows
+    report["round_latency_us"] = lat_stats
     shapley_iters = 50 if full else 8
 
-    cfg = dict(BASE, selector="greedyfed", shapley_max_iters=shapley_iters)
-    t_loop, d_loop = _per_round_e2e(FLConfig(engine="loop", **cfg))
-    t_fuse, d_fuse = _per_round_e2e(FLConfig(engine="batched", **cfg))
-    rows.append(f"e2e_loop_greedyfed_N50_M10,{t_loop * 1e6:.0f},"
+    cfg = dict(base, selector="greedyfed", shapley_max_iters=shapley_iters)
+    t_loop, d_loop, _ = _per_round_e2e(FLConfig(engine="loop", **cfg), r_long)
+    t_fuse, d_fuse, _ = _per_round_e2e(FLConfig(engine="batched", **cfg),
+                                       r_long)
+    t_scan, _, scan_total = _per_round_e2e(FLConfig(engine="scan", **cfg),
+                                           r_long)
+    rows.append(f"e2e_loop_greedyfed_{tag},{t_loop * 1e6:.0f},"
                 f"dispatches_per_round={d_loop}")
-    rows.append(f"e2e_batched_greedyfed_N50_M10,{t_fuse * 1e6:.0f},"
+    rows.append(f"e2e_batched_greedyfed_{tag},{t_fuse * 1e6:.0f},"
                 f"dispatches_per_round={d_fuse}_"
                 f"speedup_x{t_loop / max(t_fuse, 1e-12):.2f}")
+    rows.append(f"e2e_scan_greedyfed_{tag},{t_scan * 1e6:.0f},"
+                f"dispatches_total={scan_total}_"
+                f"speedup_x{t_loop / max(t_scan, 1e-12):.2f}")
+    report["e2e_greedyfed"] = {
+        "loop": {"us_per_round": t_loop * 1e6,
+                 "dispatches_per_round": d_loop},
+        "batched": {"us_per_round": t_fuse * 1e6,
+                    "dispatches_per_round": d_fuse},
+        "scan": {"us_per_round": t_scan * 1e6,
+                 "dispatches_per_round": 0,       # amortised: 1 per run
+                 "dispatches_total": scan_total},
+    }
+    report["speedup"] = {
+        "batched_vs_loop_round_latency":
+            lat_stats["loop"] / max(lat_stats["batched"], 1e-9),
+        "batched_vs_loop_e2e": t_loop / max(t_fuse, 1e-12),
+        "scan_vs_loop_e2e": t_loop / max(t_scan, 1e-12),
+        "scan_vs_batched_e2e": t_fuse / max(t_scan, 1e-12),
+    }
 
-    # multi-seed vmap: ONE dispatch advances S replicas.  On CPU the
-    # batched while-loops undercut raw throughput (vs S solo fused rounds);
-    # the dispatch-count reduction is the part that transfers to TPU.
+    # multi-seed vmap: ONE dispatch advances S replicas (per-round flavour)
+    # or S whole runs (scan flavour).  On CPU the batched while-loops
+    # undercut raw throughput (vs S solo fused rounds); the dispatch-count
+    # reduction is the part that transfers to TPU.
     seeds = (0, 1, 2, 3) if full else (0, 1)
-    rcfg = FLConfig(engine="batched", selector="fedavg", **BASE)
+    rcfg = FLConfig(engine="batched", selector="fedavg", **base)
     run_federated_replicated(dataclasses.replace(rcfg, rounds=1), seeds)
     rep_s = run_federated_replicated(
         dataclasses.replace(rcfg, rounds=R_SHORT), seeds)
     rep_l = run_federated_replicated(
-        dataclasses.replace(rcfg, rounds=R_LONG), seeds)
-    t_rep = (rep_l[0].wall_time_s - rep_s[0].wall_time_s) / (R_LONG - R_SHORT)
+        dataclasses.replace(rcfg, rounds=r_long), seeds)
+    t_rep = (rep_l[0].wall_time_s - rep_s[0].wall_time_s) / (r_long - R_SHORT)
     t_solo = t_fuse_round * len(seeds)
     rows.append(f"replicated_{len(seeds)}seeds_per_round,{t_rep * 1e6:.0f},"
                 f"dispatches=1_for_{len(seeds)}_replicas_"
                 f"solo_{len(seeds)}x={t_solo * 1e6:.0f}us")
 
+    scfg = FLConfig(engine="scan", selector="fedavg", **base)
+    grid = run_federated_replicated(
+        dataclasses.replace(scfg, rounds=r_long), seeds)
+    rows.append(f"replicated_scan_{len(seeds)}seeds_whole_run,"
+                f"{grid[0].wall_time_s * 1e6:.0f},"
+                f"dispatches={grid[0].dispatches}_for_{len(seeds)}_full_runs")
+    report["replicated"] = {
+        "seeds": len(seeds),
+        "per_round_us": t_rep * 1e6,
+        "scan_whole_run_us": grid[0].wall_time_s * 1e6,
+        "scan_whole_run_dispatches": grid[0].dispatches,
+    }
+
     # deadline sweep: the scheduler turns tau into an accuracy/time knob
     for tau in (0.05, 0.5, 5.0):
         r = run_federated(dataclasses.replace(
-            rcfg, rounds=R_LONG, eval_every=R_LONG,
+            rcfg, rounds=r_long, eval_every=r_long,
             schedule=ScheduleConfig(deadline_s=tau, epoch_time_mean_s=0.1)))
         rows.append(f"deadline_tau{tau}s,{r.sim_time_s * 1e6:.0f},"
                     f"sim_time_acc={r.final_acc:.3f}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        rows.append(f"json_report,0,{json_path}")
     return rows
 
 
 if __name__ == "__main__":
-    for row in run():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale shapley iteration budget")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI-gate sizes (scripts/check.sh opt-in)")
+    ap.add_argument("--json", default="BENCH_selection.json",
+                    help="machine-readable report path ('' disables)")
+    args = ap.parse_args()
+    for row in run(full=args.full, smoke=args.smoke,
+                   json_path=args.json or None):
         print(row)

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full pytest suite plus a kernel-bench smoke run.
 # Usage: scripts/check.sh  (or `make check`)
+#   CHECK_BENCH_SMOKE=1 scripts/check.sh  additionally runs the engine
+#   bench smoke and refreshes BENCH_selection.json (perf trajectory).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,3 +14,9 @@ python -m pytest -x -q
 echo
 echo "== kernel bench smoke =="
 python -m benchmarks.run --only kernels
+
+if [[ "${CHECK_BENCH_SMOKE:-0}" == "1" ]]; then
+  echo
+  echo "== engine bench smoke (BENCH_selection.json) =="
+  make bench-smoke
+fi

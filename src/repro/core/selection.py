@@ -1,14 +1,21 @@
-"""Client selection strategies.
+"""Client selection strategies — host-side reference implementations.
 
 Common interface (python-level orchestration; inner math is jnp):
 
     strategy = GreedyFedSelector(n_clients=N, m=M)
-    sel, state = strategy.select(state, key, round_t, ctx)
-    state = strategy.update(state, sel, sv_round=..., ...)
+    sel, state = strategy.select(state, key, ctx)
+    state = strategy.update(state, sel, sv_round=...)
 
 `ctx` is a SelectionContext carrying everything any strategy may need
 (data fractions, local losses of the current global model, ...) so the
 server loop is strategy-agnostic.
+
+These classes are the *parity oracle* for the device-resident selector
+stack (`repro.core.selection_jax`, used by the `engine="scan"` whole-run
+path): scores and sampling probabilities are computed with the shared jnp
+helpers and all top-M cuts use stable argsorts, so a host selector and its
+device twin produce bit-identical selections from the same key
+(tests/test_selection.py pins this for every registry entry).
 
 Implemented strategies (paper Section IV baselines + ours):
   * RandomSelector           — FedAvg / FedProx uniform sampling
@@ -28,6 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.selection_jax import (
+    SelectorSpec, poc_probs, sfedavg_probs, ucb_scores,
+)
 from repro.core.valuation import ValuationState, init_valuation, update_valuation
 
 
@@ -40,7 +50,9 @@ class SelectorState(NamedTuple):
     valuation: ValuationState
     round: int
     rr_order: np.ndarray      # random round-robin order fixed at init
-    extra: dict
+    active: np.ndarray        # (N,) bool dropout active-mask (fixed shape;
+                              # all True until greedyfed_dropout freezes it)
+    frozen: bool              # has the active-mask been frozen
 
 
 @dataclasses.dataclass
@@ -59,7 +71,8 @@ class SelectorBase:
             valuation=init_valuation(self.n_clients),
             round=0,
             rr_order=rng.permutation(self.n_clients),
-            extra={},
+            active=np.ones(self.n_clients, bool),
+            frozen=False,
         )
 
     # -- helpers ---------------------------------------------------------
@@ -124,13 +137,11 @@ class PowerOfChoiceSelector(SelectorBase):
         assert ctx.local_losses is not None, "Power-of-Choice needs local losses"
         d0 = self.d0 if self.d0 is not None else self.n_clients
         d = max(self.m, int(round(d0 * (self.decay ** state.round))))
-        probs = np.asarray(ctx.data_fractions, np.float64)
-        probs = probs / probs.sum()
         cand = jax.random.choice(key, self.n_clients, (d,), replace=False,
-                                 p=jnp.asarray(probs))
+                                 p=poc_probs(ctx.data_fractions))
         cand = np.asarray(cand)
         losses = np.asarray(ctx.local_losses)[cand]
-        top = cand[np.argsort(-losses)[: self.m]]
+        top = cand[np.argsort(-losses, kind="stable")[: self.m]]
         return top, state
 
 
@@ -150,16 +161,9 @@ class SFedAvgSelector(SelectorBase):
         return self.beta
 
     def select(self, state, key, ctx):
-        sv = np.asarray(state.valuation.sv, np.float64)
-        # unvalued clients get the mean value -> near-uniform early exploration
-        init = np.asarray(state.valuation.initialised)
-        if init.any():
-            sv = np.where(init, sv, sv[init].mean())
-        z = (sv - sv.max()) / max(self.temperature, 1e-8)
-        p = np.exp(z)
-        p /= p.sum()
+        p = sfedavg_probs(state.valuation, self.temperature)
         sel = jax.random.choice(key, self.n_clients, (self.m,), replace=False,
-                                p=jnp.asarray(p))
+                                p=p)
         return np.asarray(sel), state
 
 
@@ -174,11 +178,8 @@ class UCBSelector(SelectorBase):
     def select(self, state, key, ctx):
         if state.round < self._rr_rounds():
             return self._rr_select(state), state
-        sv = np.asarray(state.valuation.sv, np.float64)
-        counts = np.maximum(np.asarray(state.valuation.counts, np.float64), 1.0)
-        t = max(state.round, 2)
-        ucb = sv + self.c * np.sqrt(np.log(t) / counts)
-        return np.argsort(-ucb)[: self.m], state
+        scores = np.asarray(ucb_scores(state.valuation, state.round, self.c))
+        return np.argsort(-scores, kind="stable")[: self.m], state
 
 
 @dataclasses.dataclass
@@ -199,8 +200,8 @@ class GreedyFedSelector(SelectorBase):
     def select(self, state, key, ctx):
         if state.round < self._rr_rounds():
             return self._rr_select(state), state
-        sv = np.asarray(state.valuation.sv, np.float64)
-        return np.argsort(-sv)[: self.m], state
+        sv = np.asarray(state.valuation.sv)
+        return np.argsort(-sv, kind="stable")[: self.m], state
 
 
 @dataclasses.dataclass
@@ -212,29 +213,34 @@ class GreedyFedDropoutSelector(GreedyFedSelector):
     overhead with (empirically, see benchmarks) no accuracy cost, since
     greedy selection would not have picked them anyway.
 
-    `dropped_fraction(state)` reports the communication saving.
+    The active set lives in the fixed-shape `state.active` bool mask
+    (frozen at the first post-RR selection); `dropped_fraction(state)`
+    reports the communication saving.
     """
     drop_frac: float = 0.5
 
     name = "greedyfed_dropout"
 
+    def _n_keep(self) -> int:
+        return max(self.m, int(round((1.0 - self.drop_frac)
+                                     * self.n_clients)))
+
     def select(self, state, key, ctx):
         if state.round < self._rr_rounds():
             return self._rr_select(state), state
-        if "active" not in state.extra:
-            sv = np.asarray(state.valuation.sv, np.float64)
-            n_keep = max(self.m, int(round((1.0 - self.drop_frac)
-                                           * self.n_clients)))
-            active = np.sort(np.argsort(-sv)[:n_keep])
-            state = state._replace(extra={**state.extra, "active": active})
-        active = state.extra["active"]
-        sv = np.asarray(state.valuation.sv, np.float64)[active]
-        return active[np.argsort(-sv)[: self.m]], state
+        if not state.frozen:
+            sv = np.asarray(state.valuation.sv)
+            rank = np.argsort(-sv, kind="stable")
+            active = np.zeros(self.n_clients, bool)
+            active[rank[: self._n_keep()]] = True
+            state = state._replace(active=active, frozen=True)
+        sv = np.where(state.active, np.asarray(state.valuation.sv), -np.inf)
+        return np.argsort(-sv, kind="stable")[: self.m], state
 
     def dropped_fraction(self, state) -> float:
-        if "active" not in state.extra:
+        if not state.frozen:
             return 0.0
-        return 1.0 - len(state.extra["active"]) / self.n_clients
+        return 1.0 - int(state.active.sum()) / self.n_clients
 
 
 SELECTORS = {
@@ -254,3 +260,22 @@ def make_selector(name: str, n_clients: int, m: int, seed: int = 0, **kw) -> Sel
     except KeyError:
         raise ValueError(f"unknown selector {name!r}; options: {sorted(SELECTORS)}")
     return cls(n_clients=n_clients, m=m, seed=seed, **kw)
+
+
+def selector_spec(sel: SelectorBase) -> SelectorSpec:
+    """The device twin's static config for a host selector instance."""
+    d0 = getattr(sel, "d0", None)
+    return SelectorSpec(
+        name=sel.name,
+        n_clients=sel.n_clients,
+        m=sel.m,
+        sv_mode=sel.sv_mode(),
+        sv_alpha=sel.sv_alpha(),
+        decay=getattr(sel, "decay", 0.9),
+        # resolve the host's None-means-N default here so an explicit
+        # d0=0 (clamps to m every round) survives the round trip
+        d0=int(d0) if d0 is not None else sel.n_clients,
+        c=getattr(sel, "c", 0.1),
+        temperature=getattr(sel, "temperature", 1.0),
+        drop_frac=getattr(sel, "drop_frac", 0.5),
+    )

@@ -1,0 +1,323 @@
+"""Device-resident client selection — the pure-JAX selector stack.
+
+The host selectors in `repro.core.selection` orchestrate per-round python
+(`np.argsort`, host RNG, a python `dict` of extras), so every round of a
+strategy-driven run pays a device→host→device sync and the whole-run
+`lax.scan` engine (DESIGN.md §11) cannot trace them.  This module is the
+same six strategies as fixed-shape, jittable pure functions:
+
+    spec  = make_selector_spec("greedyfed", n_clients=N, m=M)
+    state = init_device_state(spec, seed)
+    sel, state = device_select(spec, state, key, ctx)   # traceable
+    state      = device_update(spec, state, sel, sv)    # traceable
+
+`SelectorSpec` is a hashable NamedTuple of python scalars — static under
+`jit` — and `DeviceSelectorState` is a pytree of fixed-shape arrays (the
+round-robin order, selection counts, EMA'd Shapley values, and the dropout
+active-mask), so the state threads through `lax.scan` carries and vmaps
+over a seed axis.  All strategies share one state/ctx signature, which
+makes them `lax.switch`-dispatchable (`device_select_any`): a single
+compiled program can serve a multi-strategy replica batch with a traced
+per-replica `strategy_id`.
+
+Parity contract (pinned by tests/test_selection.py): the host selectors
+compute their scores/probabilities with the *shared jnp helpers below*
+(`poc_probs`, `sfedavg_probs`, `ucb_scores`) and stable argsorts, so host
+and device paths produce bit-identical selections from the same key.  Two
+implementation notes that make that possible:
+
+  * `jax.random.choice(key, n, (d,), replace=False[, p])` draws `n`
+    gumbels (or a full permutation) and keeps the first `d` — the draw is
+    a *prefix* of a fixed-shape order, so the decaying Power-of-Choice
+    candidate count `d` becomes a traced mask over a static-shape sort
+    instead of a dynamic shape.
+  * `jnp.argsort` is stable, matching `np.argsort(kind="stable")`; ties
+    resolve by client index on both paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.valuation import ValuationState, init_valuation, update_valuation
+
+
+# --------------------------------------------------------------------------
+# static config + state pytree
+# --------------------------------------------------------------------------
+
+class SelectorSpec(NamedTuple):
+    """Hashable, jit-static description of one selection strategy.
+
+    `name` is the canonical strategy name ("random", "power_of_choice",
+    "s_fedavg", "ucb", "greedyfed", "greedyfed_dropout"); the remaining
+    fields are the union of all strategies' hyperparameters (unused ones
+    keep their defaults so specs stay comparable/hashable).
+    """
+    name: str
+    n_clients: int
+    m: int
+    sv_mode: str = "mean"        # cumulative-SV averaging ("mean"|"exponential")
+    sv_alpha: float = 0.5
+    decay: float = 0.9           # power_of_choice: d decay rate
+    d0: int = 0                  # power_of_choice: initial d, already
+                                 # resolved (selector_spec maps the host's
+                                 # None default to n_clients)
+    c: float = 0.1               # ucb: exploration constant
+    temperature: float = 1.0     # s_fedavg: softmax temperature
+    drop_frac: float = 0.5       # greedyfed_dropout: fraction dropped
+
+    @property
+    def uses_shapley(self) -> bool:
+        return self.name in ("s_fedavg", "ucb", "greedyfed",
+                             "greedyfed_dropout")
+
+    @property
+    def uses_local_losses(self) -> bool:
+        return self.name == "power_of_choice"
+
+    @property
+    def rr_rounds(self) -> int:
+        return int(np.ceil(self.n_clients / self.m))
+
+    @property
+    def n_keep(self) -> int:
+        """greedyfed_dropout: active-set size after the RR phase (>= m)."""
+        return max(self.m, int(round((1.0 - self.drop_frac) * self.n_clients)))
+
+
+class DeviceSelectorState(NamedTuple):
+    """Fixed-shape selector state: a pytree for scan carries / seed vmaps."""
+    valuation: ValuationState   # (N,) sv / counts / initialised
+    round: jax.Array            # ()  int32 current round t
+    rr_order: jax.Array         # (N,) int32 fixed random round-robin order
+    active: jax.Array           # (N,) bool  dropout active-mask (all True
+                                #            until greedyfed_dropout freezes)
+    frozen: jax.Array           # ()  bool   has the active-mask been frozen
+
+
+class DeviceSelectionContext(NamedTuple):
+    """Per-round inputs any strategy may need (fixed shapes, zeros if unused)."""
+    data_fractions: jax.Array   # (N,) q_k
+    local_losses: jax.Array     # (N,) loss of w^t per client (Power-of-Choice)
+    poc_d: jax.Array            # ()  int32 this round's candidate count d
+
+
+def init_device_state(spec: SelectorSpec, seed: int = 0) -> DeviceSelectorState:
+    """Mirror of `SelectorBase.init_state` (same host-rng rr_order draw)."""
+    rng = np.random.default_rng(seed)
+    return DeviceSelectorState(
+        valuation=init_valuation(spec.n_clients),
+        round=jnp.asarray(0, jnp.int32),
+        rr_order=jnp.asarray(rng.permutation(spec.n_clients), jnp.int32),
+        active=jnp.ones((spec.n_clients,), bool),
+        frozen=jnp.asarray(False),
+    )
+
+
+def make_selector_spec(name: str, n_clients: int, m: int,
+                       **kw) -> SelectorSpec:
+    """Build a SelectorSpec from a registry name + selector kwargs.
+
+    Accepts the same kwargs as `selection.make_selector` for each strategy
+    (PoC: decay/d0; S-FedAvg: beta/temperature; UCB: c; GreedyFed:
+    averaging/alpha; dropout: + drop_frac).
+    """
+    # one source of truth: construct the host selector and read its fields
+    from repro.core.selection import make_selector, selector_spec
+    return selector_spec(make_selector(name, n_clients, m, **kw))
+
+
+def poc_d_schedule(spec: SelectorSpec, rounds: int) -> np.ndarray:
+    """(T,) int32 Power-of-Choice candidate counts, the host formula verbatim
+    (python-float decay so device and host agree on every rounding)."""
+    return np.asarray(
+        [max(spec.m, int(round(spec.d0 * (spec.decay ** t))))
+         for t in range(rounds)], np.int32)
+
+
+# --------------------------------------------------------------------------
+# shared score/probability helpers (the host selectors call these too,
+# which is what makes host-vs-device selections bit-identical)
+# --------------------------------------------------------------------------
+
+def poc_probs(data_fractions: jax.Array) -> jax.Array:
+    """Power-of-Choice candidate-sampling probabilities: normalised q_k."""
+    p = jnp.asarray(data_fractions, jnp.float32)
+    return p / jnp.sum(p)
+
+
+def sfedavg_probs(val: ValuationState, temperature: float) -> jax.Array:
+    """S-FedAvg selection probabilities: softmax over the EMA value vector.
+
+    Unvalued clients get the mean value of valued ones (near-uniform early
+    exploration); with nothing valued yet the raw (zero) vector is used.
+    """
+    init = val.initialised
+    n_init = jnp.sum(init.astype(jnp.float32))
+    mean_init = (jnp.sum(jnp.where(init, val.sv, 0.0))
+                 / jnp.maximum(n_init, 1.0))
+    sv = jnp.where(n_init > 0, jnp.where(init, val.sv, mean_init), val.sv)
+    z = (sv - jnp.max(sv)) / max(temperature, 1e-8)
+    p = jnp.exp(z)
+    return p / jnp.sum(p)
+
+
+def ucb_scores(val: ValuationState, round_t: jax.Array, c: float) -> jax.Array:
+    """UCB acquisition: SV_k + c * sqrt(ln t / N_k) (t clipped at 2)."""
+    counts = jnp.maximum(val.counts.astype(jnp.float32), 1.0)
+    t = jnp.maximum(round_t, 2).astype(jnp.float32)
+    return val.sv + c * jnp.sqrt(jnp.log(t) / counts)
+
+
+def _gumbel_order(key: jax.Array, p: jax.Array) -> jax.Array:
+    """(N,) full preference order of `jax.random.choice(..., replace=False,
+    p=p)` — its Gumbel top-k internals verbatim; any without-replacement
+    draw of size d from the same key is the first d entries."""
+    g = -jax.random.gumbel(key, p.shape, p.dtype) - jnp.log(p)
+    return jnp.argsort(g)
+
+
+def _top_m(scores: jax.Array, m: int) -> jax.Array:
+    """Indices of the m largest scores; ties resolve by client index
+    (stable argsort — matches np.argsort(kind='stable') on the host)."""
+    return jnp.argsort(-scores)[:m].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# per-strategy select functions — identical signatures, fixed shapes
+# --------------------------------------------------------------------------
+
+def _rr_select(spec: SelectorSpec, state: DeviceSelectorState) -> jax.Array:
+    """Alg. 1 lines 2-3: round-robin through the fixed random order."""
+    idx = (state.round * spec.m + jnp.arange(spec.m)) % spec.n_clients
+    return jnp.take(state.rr_order, idx).astype(jnp.int32)
+
+
+def _sel_random(spec, state, key, ctx):
+    sel = jax.random.choice(key, spec.n_clients, (spec.m,), replace=False)
+    return sel.astype(jnp.int32), state
+
+
+def _sel_power_of_choice(spec, state, key, ctx):
+    # prefix property: candidates = first d of the full gumbel order
+    order = _gumbel_order(key, poc_probs(ctx.data_fractions))
+    cand_losses = jnp.take(ctx.local_losses, order)
+    in_draw = jnp.arange(spec.n_clients) < ctx.poc_d
+    masked = jnp.where(in_draw, cand_losses, -jnp.inf)
+    sel = jnp.take(order, _top_m(masked, spec.m))
+    return sel.astype(jnp.int32), state
+
+
+def _sel_s_fedavg(spec, state, key, ctx):
+    order = _gumbel_order(key, sfedavg_probs(state.valuation,
+                                             spec.temperature))
+    return order[: spec.m].astype(jnp.int32), state
+
+
+def _sel_ucb(spec, state, key, ctx):
+    top = _top_m(ucb_scores(state.valuation, state.round, spec.c), spec.m)
+    sel = jnp.where(state.round < spec.rr_rounds, _rr_select(spec, state), top)
+    return sel, state
+
+
+def _sel_greedyfed(spec, state, key, ctx):
+    top = _top_m(state.valuation.sv, spec.m)
+    sel = jnp.where(state.round < spec.rr_rounds, _rr_select(spec, state), top)
+    return sel, state
+
+
+def _sel_greedyfed_dropout(spec, state, key, ctx):
+    post_rr = state.round >= spec.rr_rounds
+    # freeze the active set at the first post-RR selection: keep the top
+    # n_keep by cumulative SV, drop the rest from the protocol for good
+    rank = jnp.argsort(-state.valuation.sv)
+    keep = jnp.zeros((spec.n_clients,), bool).at[rank[: spec.n_keep]].set(True)
+    active = jnp.where(post_rr & ~state.frozen, keep, state.active)
+    state = state._replace(active=active, frozen=state.frozen | post_rr)
+    sv_masked = jnp.where(active, state.valuation.sv, -jnp.inf)
+    sel = jnp.where(post_rr, _top_m(sv_masked, spec.m),
+                    _rr_select(spec, state))
+    return sel, state
+
+
+_SELECT_FNS = {
+    "random": _sel_random,
+    "power_of_choice": _sel_power_of_choice,
+    "s_fedavg": _sel_s_fedavg,
+    "ucb": _sel_ucb,
+    "greedyfed": _sel_greedyfed,
+    "greedyfed_dropout": _sel_greedyfed_dropout,
+}
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def device_select(spec: SelectorSpec, state: DeviceSelectorState,
+                  key: jax.Array, ctx: DeviceSelectionContext
+                  ) -> tuple[jax.Array, DeviceSelectorState]:
+    """Select the round's cohort: (sel (m,) int32, new state).  Pure and
+    traceable; `spec` is static."""
+    try:
+        fn = _SELECT_FNS[spec.name]
+    except KeyError:
+        raise ValueError(f"unknown device selector {spec.name!r}; "
+                         f"options: {sorted(_SELECT_FNS)}")
+    return fn(spec, state, key, ctx)
+
+
+def device_update(spec: SelectorSpec, state: DeviceSelectorState,
+                  sel: jax.Array, sv_round: Optional[jax.Array] = None
+                  ) -> DeviceSelectorState:
+    """Post-round bookkeeping, mirroring `SelectorBase.update`.
+
+    `sv_round` may be passed unconditionally (e.g. by a mixed-strategy
+    switch whose engine always computes SV); strategies that do not value
+    clients statically ignore it and only bump selection counts.
+    """
+    val = state.valuation
+    if sv_round is not None and spec.uses_shapley:
+        val = update_valuation(val, sel, sv_round, mode=spec.sv_mode,
+                               alpha=spec.sv_alpha)
+    else:
+        val = ValuationState(
+            sv=val.sv,
+            counts=val.counts.at[sel].add(1),
+            initialised=val.initialised.at[sel].set(True),
+        )
+    return state._replace(valuation=val, round=state.round + 1)
+
+
+def device_select_any(specs: tuple[SelectorSpec, ...], strategy_id: jax.Array,
+                      state: DeviceSelectorState, key: jax.Array,
+                      ctx: DeviceSelectionContext
+                      ) -> tuple[jax.Array, DeviceSelectorState]:
+    """`lax.switch` dispatch over a static tuple of specs with a *traced*
+    strategy id — one compiled program serves a mixed-strategy replica
+    batch.  All specs must share (n_clients, m) so shapes agree."""
+    if len(specs) == 1:
+        return device_select(specs[0], state, key, ctx)
+    branches = [functools.partial(device_select, sp) for sp in specs]
+    return jax.lax.switch(strategy_id, branches, state, key, ctx)
+
+
+def device_update_any(specs: tuple[SelectorSpec, ...], strategy_id: jax.Array,
+                      state: DeviceSelectorState, sel: jax.Array,
+                      sv_round: Optional[jax.Array] = None
+                      ) -> DeviceSelectorState:
+    if len(specs) == 1:
+        return device_update(specs[0], state, sel, sv_round)
+    branches = [functools.partial(device_update, sp) for sp in specs]
+    return jax.lax.switch(strategy_id, branches, state, sel, sv_round)
+
+
+def device_dropped_fraction(state: DeviceSelectorState) -> jax.Array:
+    """Fraction of clients dropped from the protocol (0 until frozen)."""
+    return jnp.where(state.frozen,
+                     1.0 - jnp.mean(state.active.astype(jnp.float32)), 0.0)

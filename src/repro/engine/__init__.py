@@ -1,20 +1,28 @@
-"""repro.engine — the batched round-execution engine (DESIGN.md §6).
+"""repro.engine — fused round/run execution engines (DESIGN.md §6, §11).
 
     batch_client  vmapped ClientUpdate over the selected cohort
-    round_engine  the fused single-dispatch `round_step` + RoundEngine
-    replicated    multi-seed vmap: S replicas per dispatch
+    round_engine  fused single-dispatch `round_step` + whole-run `run_scan`
+    scan_engine   engine="scan" orchestration: T rounds as ONE dispatch
+    replicated    replica vmaps: per-round (seeds) and whole-run
+                  (strategies x seeds, lax.switch-dispatched)
     schedule      virtual clock: latencies, deadlines, time-derived E_k
 """
 from repro.engine.batch_client import batched_client_update, cohort_update
-from repro.engine.round_engine import RoundEngine, RoundOutput, RoundSpec
+from repro.engine.round_engine import (
+    RoundEngine, RoundOutput, RoundSpec, ScanRunOutput, ScanSpec,
+    jitted_run_scan, make_run_scan,
+)
 from repro.engine.schedule import (
     ClientClock, ScheduleConfig, VirtualClock, deadline_epochs,
-    make_client_clock, round_duration_s,
+    deadline_epochs_table, make_client_clock, round_duration_s,
+    straggler_epochs_table,
 )
 
 __all__ = [
     "batched_client_update", "cohort_update",
     "RoundEngine", "RoundOutput", "RoundSpec",
+    "ScanRunOutput", "ScanSpec", "jitted_run_scan", "make_run_scan",
     "ClientClock", "ScheduleConfig", "VirtualClock", "deadline_epochs",
-    "make_client_clock", "round_duration_s",
+    "deadline_epochs_table", "make_client_clock", "round_duration_s",
+    "straggler_epochs_table",
 ]

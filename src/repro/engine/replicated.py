@@ -1,13 +1,23 @@
-"""Multi-seed replication: S independent FL runs as ONE vmapped program.
+"""Multi-seed / multi-strategy replication: R independent FL runs fused.
 
 Every benchmark table re-runs each (strategy, knob) cell across seeds; run
 solo, each seed pays its own compilation and its own per-round dispatches.
-Here the fused `round_step` (round_engine.py) is vmapped over a leading
-seed axis and jitted ONCE: per round, a single dispatch advances all S
-replicas.  Host-side strategy logic (selection, E_k draws, SV bookkeeping)
-stays per-seed Python — it is numpy-cheap and keeps each replica's rng/key
-streams identical to a solo `run_federated(..., engine="batched")` run at
-the same seed, which is what `tests/test_engine.py` pins.
+Two fused paths live here:
+
+  * `run_replicated` — the PR-1 contract: the fused `round_step`
+    (round_engine.py) is vmapped over a leading seed axis and jitted ONCE;
+    per round, a single dispatch advances all S replicas.  Host-side
+    strategy logic (selection, E_k draws, SV bookkeeping) stays per-seed
+    Python, keeping each replica's rng/key streams identical to a solo
+    `run_federated(..., engine="batched")` run at the same seed.
+
+  * `run_replicated_scan` — the whole-run `lax.scan` program
+    (round_engine.make_run_scan) vmapped over the replica axis, selector
+    state included: a T-round, R-replica table is ONE dispatch total.
+    Replicas may differ in *strategy* as well as seed — the device
+    selectors share one state/ctx signature, so a `lax.switch` on a
+    per-replica strategy id lets a single executable serve a whole
+    strategies × seeds benchmark grid (DESIGN.md §11).
 
 Replicas may have different per-client capacities (each seed re-partitions
 its data); stacks are padded to the max capacity — padding is never read
@@ -17,14 +27,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import tree_stack
-from repro.engine.round_engine import RoundSpec, jitted_round_step
+from repro.core.selection import selector_spec
+from repro.core.selection_jax import init_device_state, poc_d_schedule
+from repro.engine.round_engine import (
+    RoundSpec, jitted_round_step, jitted_run_scan,
+)
 from repro.engine.schedule import VirtualClock, round_duration_s
 from repro.federated.client import local_loss
 from repro.federated.compression import codec_nbytes
@@ -168,4 +182,83 @@ def run_replicated(cfg, seeds, data=None, model=None):
             sim_time_s=vclocks[i].now_s if vclocks[i] is not None else 0.0,
             dispatches=dispatches,     # shared across the fused run
         ))
+    return results
+
+
+def run_replicated_scan(cfg, seeds, selectors: Optional[Sequence[str]] = None,
+                        data=None, model=None):
+    """Seeds × strategies, each a full T-round run, as ONE scan dispatch.
+
+    `selectors=None` replicates `cfg.selector` across `seeds` (each replica
+    reproduces a solo `run_federated(..., engine="scan")` at its seed).
+    With a list of registry names the replica batch becomes the full
+    strategies × seeds grid dispatched through `lax.switch` on a traced
+    per-replica strategy id — one compilation, one executable, one
+    dispatch for the whole benchmark table.  Mixed batches run with
+    superset semantics (Shapley/local losses are computed if ANY strategy
+    needs them); non-SV replicas report shapley_evals = 0.
+
+    Returns a flat list of FLResults in (selector-major, seed-minor) order.
+    """
+    from repro.engine.scan_engine import (
+        build_epochs_table, make_scan_spec, results_from_scan,
+    )
+    from repro.federated.server import setup_run
+
+    t_start = time.time()
+    seeds = list(seeds)
+    if not seeds:
+        raise ValueError("run_replicated_scan needs at least one seed")
+    names = list(selectors) if selectors else [cfg.selector]
+
+    rep_cfgs = [dataclasses.replace(cfg, selector=name, seed=s)
+                for name in names for s in seeds]
+    setups = [setup_run(c, data, model) for c in rep_cfgs]
+    model = setups[0].model
+
+    # one spec per strategy name (shared by its seeds); replica i dispatches
+    # through strategy_id = i // len(seeds)
+    specs = tuple(selector_spec(setups[j * len(seeds)].selector)
+                  for j in range(len(names)))
+    spec = make_scan_spec(cfg, specs)
+
+    cap = max(int(s.xs.shape[1]) for s in setups)
+    xs = jnp.asarray(np.stack([_pad_cap(np.asarray(s.xs), cap)
+                               for s in setups]))
+    ys = jnp.asarray(np.stack([_pad_cap(np.asarray(s.ys), cap)
+                               for s in setups]))
+    nv = jnp.asarray(np.stack([np.asarray(s.n_valid) for s in setups]))
+    sigma = jnp.asarray(np.stack([s.sigma_k_all for s in setups]))
+    x_val = jnp.asarray(np.stack([np.asarray(s.x_val) for s in setups]))
+    y_val = jnp.asarray(np.stack([np.asarray(s.y_val) for s in setups]))
+    x_test = jnp.asarray(np.stack([np.asarray(s.x_test) for s in setups]))
+    y_test = jnp.asarray(np.stack([np.asarray(s.y_test) for s in setups]))
+    fractions = jnp.asarray(np.stack([np.asarray(s.fractions, np.float32)
+                                      for s in setups]))
+    params = tree_stack([s.params for s in setups])
+    keys = jnp.stack([s.key for s in setups])
+
+    epochs_tables = jnp.asarray(np.stack([
+        build_epochs_table(c, s) for c, s in zip(rep_cfgs, setups)]))
+    d_scheds = jnp.asarray(np.stack([
+        poc_d_schedule(specs[i // len(seeds)], cfg.rounds)
+        for i in range(len(setups))]))
+    strategy_ids = jnp.asarray(
+        [i // len(seeds) for i in range(len(setups))], jnp.int32)
+    sel_states = tree_stack([
+        init_device_state(specs[i // len(seeds)], rep_cfgs[i].seed)
+        for i in range(len(setups))])
+
+    run = jitted_run_scan(model, cfg.client, spec, vmapped=True)
+    out = run(params, xs, ys, nv, sigma, x_val, y_val, x_test, y_test,
+              fractions, epochs_tables, d_scheds, strategy_ids, sel_states,
+              keys)
+
+    wall = time.time() - t_start
+    results = []
+    for i, (c, s) in enumerate(zip(rep_cfgs, setups)):
+        out_i = jax.tree.map(lambda x: x[i], out)
+        results.append(results_from_scan(
+            c, s, out_i, wall_time_s=wall, seed=c.seed, dispatches=1,
+            uses_shapley=specs[i // len(seeds)].uses_shapley))
     return results

@@ -26,9 +26,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import normalized_weights, weighted_average
+from repro.core.selection_jax import (
+    DeviceSelectionContext, DeviceSelectorState, SelectorSpec,
+    device_select_any, device_update_any,
+)
 from repro.core.shapley import gtg_shapley
 from repro.engine.batch_client import cohort_update
-from repro.federated.client import ClientConfig
+from repro.federated.client import ClientConfig, local_loss
 from repro.federated.compression import codec_nbytes, codec_roundtrip
 from repro.models.mlp_cnn import ClassifierModel
 
@@ -127,6 +131,127 @@ def jitted_round_step(model: ClassifierModel, ccfg: ClientConfig,
     # XLA updates in place (donation is a silent no-op we skip on CPU).
     donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
     return _jitted_round_step_cached(model, ccfg, spec, donate, vmapped)
+
+
+class ScanSpec(NamedTuple):
+    """Static config for the whole-run `lax.scan` program (DESIGN.md §11).
+
+    `selectors` is a tuple of device SelectorSpecs: length 1 dispatches
+    statically; longer tuples compile a `lax.switch` over strategies so one
+    executable serves a mixed-strategy replica batch (all entries must
+    share n_clients / m for shapes to agree).
+    """
+    round: RoundSpec
+    selectors: tuple            # tuple[SelectorSpec, ...]
+    rounds: int                 # T: scan length
+    eval_every: int             # eval cadence (lax.cond inside the scan)
+
+
+class ScanRunOutput(NamedTuple):
+    params: PyTree              # w^T
+    sel_state: DeviceSelectorState
+    selections: jax.Array       # (T, M) int32
+    epochs: jax.Array           # (T, M) int32 E_k actually granted
+    sv: jax.Array               # (T, M) per-round GTG-SV (zeros if unused)
+    utility_evals: jax.Array    # (T,) int32
+    sv_truncated: jax.Array     # (T,) bool
+    test_acc: jax.Array         # (T,) NaN on non-eval rounds
+    val_loss: jax.Array         # (T,) NaN on non-eval rounds
+
+
+def make_run_scan(model: ClassifierModel, ccfg: ClientConfig,
+                  spec: ScanSpec) -> Callable[..., ScanRunOutput]:
+    """Build the traceable whole-run function: T rounds in ONE `lax.scan`.
+
+    Selection, the straggler E_k gather, local training, GTG-Shapley, the
+    valuation update, and the (cond-gated) eval all live inside the scan
+    body, so a full T-round run — strategy logic included — executes as a
+    single dispatch.  Per-round key-splitting matches the host engines
+    (`split(key, 3)` then `cohort_update`'s `split(round_key, M+1)`), so
+    selections are bit-identical to `engine="batched"` at the same seed.
+
+    Signature of the returned fn:
+        (params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
+         x_test, y_test, fractions, epochs_table, d_sched, strategy_id,
+         sel_state, key) -> ScanRunOutput
+    where epochs_table is (T, N) int32 (see engine.schedule tables),
+    d_sched is (T,) int32 Power-of-Choice candidate counts, and
+    strategy_id picks from spec.selectors (ignored when len == 1).
+    """
+    round_step = make_round_step(model, ccfg, spec.round)
+    uses_losses = any(sp.uses_local_losses for sp in spec.selectors)
+    n_clients = spec.selectors[0].n_clients
+
+    def run_scan(params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
+                 x_test, y_test, fractions, epochs_table, d_sched,
+                 strategy_id, sel_state, key) -> ScanRunOutput:
+
+        def body(carry, per_round):
+            params, sstate, key = carry
+            t, epochs_row, d_t = per_round
+            key, sel_key, round_key = jax.random.split(key, 3)
+
+            if uses_losses:   # Power-of-Choice ranks clients by w^t loss
+                losses = jax.vmap(
+                    lambda x, y, nv: local_loss(model, params, x, y, nv)
+                )(xs_all, ys_all, nv_all)
+            else:
+                losses = jnp.zeros((n_clients,), jnp.float32)
+
+            ctx = DeviceSelectionContext(data_fractions=fractions,
+                                         local_losses=losses, poc_d=d_t)
+            sel, sstate = device_select_any(spec.selectors, strategy_id,
+                                            sstate, sel_key, ctx)
+            epochs_k = jnp.take(epochs_row, sel)
+
+            out = round_step(params, xs_all, ys_all, nv_all, sigma_all,
+                             x_val, y_val, sel, epochs_k, round_key)
+            sstate = device_update_any(
+                spec.selectors, strategy_id, sstate, sel,
+                out.sv if spec.round.needs_sv else None)
+
+            # eval on cadence only: the predicate depends on nothing but t
+            # (unbatched under the seed vmap), so the cond survives as a
+            # real branch and off-rounds skip the eval entirely
+            do_eval = jnp.logical_or((t + 1) % spec.eval_every == 0,
+                                     t == spec.rounds - 1)
+            nan = jnp.full((), jnp.nan, jnp.float32)
+            acc, vloss = jax.lax.cond(
+                do_eval,
+                lambda p: (model.accuracy(p, x_test, y_test),
+                           model.loss(p, x_val, y_val)),
+                lambda p: (nan, nan),
+                out.params)
+
+            ys = (sel, epochs_k, out.sv, out.utility_evals,
+                  out.sv_truncated, acc, vloss)
+            return (out.params, sstate, key), ys
+
+        xs = (jnp.arange(spec.rounds), epochs_table, d_sched)
+        (params, sel_state, _), ys = jax.lax.scan(
+            body, (params, sel_state, key), xs)
+        sels, epochs, sv, evals, trunc, acc, vloss = ys
+        return ScanRunOutput(params, sel_state, sels, epochs, sv, evals,
+                             trunc, acc, vloss)
+
+    return run_scan
+
+
+@functools.lru_cache(maxsize=16)
+def _jitted_run_scan_cached(model, ccfg, spec, donate, vmapped):
+    fn = make_run_scan(model, ccfg, spec)
+    if vmapped:
+        fn = jax.vmap(fn)
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def jitted_run_scan(model: ClassifierModel, ccfg: ClientConfig,
+                    spec: ScanSpec, *, vmapped: bool = False):
+    """Process-wide (bounded) cache of compiled whole-run scans, mirroring
+    `jitted_round_step`: every seed of a benchmark table cell reuses one
+    trace and one executable."""
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+    return _jitted_run_scan_cached(model, ccfg, spec, donate, vmapped)
 
 
 class RoundEngine:

@@ -1,0 +1,144 @@
+"""engine="scan": a whole federated run as ONE compiled program.
+
+The batched engine (round_engine.RoundEngine) fused each round into a
+single dispatch but left strategy logic on the host, so a T-round run
+still pays T device→host→device syncs — selection reads the round's
+Shapley values, so the chain cannot pipeline.  Here the device-resident
+selector stack (repro.core.selection_jax) moves selection and valuation
+into the trace and `make_run_scan` rolls the T rounds into one `lax.scan`:
+the whole run — selection, straggler E_k gathers, local training, upload
+codec, GTG-Shapley, ModelAverage, cumulative-SV updates, cadenced evals —
+is a single dispatch (DESIGN.md §11).
+
+This module is the host-side orchestration: it precomputes the run's
+static tables (per-round epoch budgets, the Power-of-Choice candidate
+schedule), invokes the cached executable, and rebuilds the usual FLResult
+bookkeeping (byte accounting, virtual-clock replay, eval history) from
+the scan's stacked outputs.
+
+Parity contract: with deadline-derived or absent stragglers, an
+`engine="scan"` run produces the same selections (bit-identical) and
+final params (to jit-fusion tolerance) as `engine="batched"` at the same
+seed — tests/test_engine.py pins greedyfed, fedavg, and power_of_choice.
+With `straggler_frac > 0` the paper's random E_k draw cannot be replayed
+on-device in the legacy stream order; the scan engine pre-draws a (T, N)
+table instead (schedule.straggler_epochs_table) — same distribution,
+different stream.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selection import selector_spec
+from repro.core.selection_jax import init_device_state, poc_d_schedule
+from repro.engine.round_engine import RoundSpec, ScanSpec, jitted_run_scan
+from repro.engine.schedule import (
+    VirtualClock, deadline_epochs_table, round_duration_s,
+    straggler_epochs_table,
+)
+from repro.federated.compression import codec_nbytes
+
+PyTree = Any
+
+
+def build_epochs_table(cfg, s) -> np.ndarray:
+    """(T, N) int32 local-epoch budgets for every round of a scan run."""
+    e = cfg.client.epochs
+    if s.clock is not None:
+        return deadline_epochs_table(s.clock, cfg.schedule, cfg.rounds, e)
+    if s.straggler_ids:
+        return straggler_epochs_table(s.rng, cfg.rounds, cfg.n_clients,
+                                      s.straggler_ids, e)
+    return np.full((cfg.rounds, cfg.n_clients), e, np.int32)
+
+
+def make_scan_spec(cfg, selector_specs: tuple) -> ScanSpec:
+    """ScanSpec for an FLConfig; `selector_specs` may hold several
+    strategies for a switch-dispatched mixed batch (superset semantics:
+    SV is computed if ANY strategy needs it)."""
+    needs_sv = any(sp.uses_shapley for sp in selector_specs)
+    max_iters = cfg.shapley_max_iters or 50 * cfg.m
+    rspec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
+                      shapley_eps=cfg.shapley_eps,
+                      shapley_max_iters=max_iters,
+                      upload_codec=cfg.upload_codec)
+    return ScanSpec(round=rspec, selectors=tuple(selector_specs),
+                    rounds=cfg.rounds, eval_every=cfg.eval_every)
+
+
+def results_from_scan(cfg, s, out, *, wall_time_s: float, seed: int,
+                      dispatches: int, uses_shapley: bool):
+    """Rebuild the host-side FLResult bookkeeping from a ScanRunOutput."""
+    from repro.federated.server import FLConfig, FLResult  # cycle-free at call time
+    import dataclasses
+
+    sels = np.asarray(out.selections)
+    epochs = np.asarray(out.epochs)
+    selections = [row.astype(np.int64) for row in sels]
+
+    codec_bytes = codec_nbytes(cfg.upload_codec, s.params)
+    upload_bytes = codec_bytes * cfg.m * cfg.rounds
+    download_bytes = s.model_bytes * cfg.m * cfg.rounds
+
+    vclock = VirtualClock() if s.clock is not None else None
+    if vclock is not None:
+        for t in range(cfg.rounds):
+            vclock.advance(round_duration_s(s.clock, cfg.schedule,
+                                            sels[t], epochs[t]))
+
+    acc = np.asarray(out.test_acc)
+    vloss = np.asarray(out.val_loss)
+    test_acc, val_loss_hist = [], []
+    for t in range(cfg.rounds):
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            test_acc.append((t + 1, float(acc[t])))
+            val_loss_hist.append((t + 1, float(vloss[t])))
+
+    total_evals = int(np.asarray(out.utility_evals).sum()) if uses_shapley else 0
+    final_cfg = cfg if cfg.seed == seed else dataclasses.replace(cfg, seed=seed)
+    return FLResult(
+        config=final_cfg,
+        test_acc=test_acc,
+        val_loss=val_loss_hist,
+        final_acc=test_acc[-1][1] if test_acc else float("nan"),
+        sv_final=np.asarray(out.sel_state.valuation.sv),
+        selection_counts=np.asarray(out.sel_state.valuation.counts),
+        selections=selections,
+        shapley_evals=total_evals,
+        wall_time_s=wall_time_s,
+        params=out.params,
+        upload_bytes=upload_bytes,
+        download_bytes=download_bytes,
+        sim_time_s=vclock.now_s if vclock is not None else 0.0,
+        dispatches=dispatches,
+    )
+
+
+def run_federated_scan(cfg, s, t_start: float):
+    """Execute `cfg.rounds` federated rounds as one scan dispatch.
+
+    `s` is the RunSetup from `server.setup_run` — the rng/key streams it
+    consumed match the other engines, so the scan starts from identical
+    partitions, params, and selector order.
+    """
+    spec_sel = selector_spec(s.selector)
+    spec = make_scan_spec(cfg, (spec_sel,))
+
+    epochs_table = jnp.asarray(build_epochs_table(cfg, s))
+    d_sched = jnp.asarray(poc_d_schedule(spec_sel, cfg.rounds))
+    sel_state = init_device_state(spec_sel, cfg.seed)
+
+    run = jitted_run_scan(s.model, cfg.client, spec)
+    out = run(s.params, s.xs, s.ys, s.n_valid, jnp.asarray(s.sigma_k_all),
+              s.x_val, s.y_val, s.x_test, s.y_test,
+              jnp.asarray(s.fractions), epochs_table, d_sched,
+              jnp.asarray(0, jnp.int32), sel_state, s.key)
+
+    return results_from_scan(cfg, s, out,
+                             wall_time_s=time.time() - t_start,
+                             seed=cfg.seed, dispatches=1,
+                             uses_shapley=spec_sel.uses_shapley)

@@ -93,3 +93,42 @@ class VirtualClock:
     def advance(self, dt_s: float) -> float:
         self.now_s += float(dt_s)
         return self.now_s
+
+
+# ---------------------------------------------------------------------------
+# Whole-run epoch tables for the scan engine (DESIGN.md §11).
+#
+# The loop/batched engines derive each round's E_k on the host *after*
+# selection; the scan engine selects on-device inside one compiled program,
+# so every round's per-client budget must exist up front as a (T, N) int32
+# operand the trace gathers rows from.
+# ---------------------------------------------------------------------------
+
+def deadline_epochs_table(clock: ClientClock, scfg: ScheduleConfig,
+                          rounds: int, max_epochs: int) -> np.ndarray:
+    """(T, N) int32 deadline-derived budgets — the timing profile is static,
+    so every round repeats the same row (exactly `deadline_epochs` for every
+    client, keeping scan/batched/loop engines bit-identical)."""
+    n = clock.epoch_time_s.shape[0]
+    row = deadline_epochs(clock, scfg, np.arange(n), max_epochs)
+    return np.tile(row, (rounds, 1))
+
+
+def straggler_epochs_table(rng: np.random.Generator, rounds: int,
+                           n_clients: int, straggler_ids, max_epochs: int
+                           ) -> np.ndarray:
+    """(T, N) int32 budgets under the paper's random-straggler model:
+    straggler k completes E_tk ~ U{1..E} in round t, everyone else E.
+
+    The table fills (round-major, client id ascending) from one vectorized
+    draw — a fresh stream, NOT the legacy engines' lazily-consumed
+    per-selection draws, which cannot be replayed once selection happens
+    on-device.  With straggler_frac > 0 the scan engine is therefore
+    distribution-identical but not stream-identical to loop/batched
+    (DESIGN.md §11)."""
+    table = np.full((rounds, n_clients), max_epochs, np.int32)
+    ids = sorted(int(k) for k in straggler_ids)
+    if ids:
+        table[:, ids] = rng.integers(1, max_epochs + 1,
+                                     size=(rounds, len(ids)))
+    return table

@@ -7,12 +7,15 @@ Strategy behaviour is fully encapsulated in the selector object, so FedAvg /
 FedProx / Power-of-Choice / S-FedAvg / UCB / GreedyFed all share this loop
 (the paper's experimental protocol).
 
-Round execution is pluggable (``cfg.engine``, DESIGN.md §6):
+Round execution is pluggable (``cfg.engine``, DESIGN.md §6, §11):
   * "loop"    — the paper-faithful per-client Python loop (M dispatches per
                 round); kept verbatim as the parity oracle;
   * "batched" — `repro.engine.RoundEngine`: the whole round (cohort gather,
                 vmapped local training, upload codec, GTG-Shapley,
-                ModelAverage) fused into ONE jitted dispatch.
+                ModelAverage) fused into ONE jitted dispatch;
+  * "scan"    — `repro.engine.scan_engine`: the whole T-round RUN as one
+                `lax.scan` dispatch, with selection and valuation living
+                on-device (`repro.core.selection_jax`).
 
 With ``cfg.schedule`` set, stragglers stop being randomly drawn: a virtual
 clock derives each client's E_k from the round deadline
@@ -55,8 +58,9 @@ class FLConfig:
     selector: str = "greedyfed"
     selector_kwargs: dict = field(default_factory=dict)
     client: ClientConfig = ClientConfig()
-    # round-execution engine: "loop" (per-client dispatches, parity oracle)
-    # or "batched" (fused single-dispatch round, repro.engine)
+    # round-execution engine: "loop" (per-client dispatches, parity oracle),
+    # "batched" (fused single-dispatch round), or "scan" (whole run as one
+    # lax.scan dispatch with device-resident selection)
     engine: str = "loop"
     # heterogeneity knobs (paper Section IV)
     dirichlet_alpha: float = 1e-4
@@ -175,11 +179,15 @@ def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
     # ---- model / selector setup ------------------------------------------
     key, init_key = jax.random.split(key)
     params = model.init(init_key)
+    # sv_averaging/sv_alpha reach GreedyFed-family selectors through the
+    # constructor (explicit selector_kwargs win) — never by mutating the
+    # selector after construction
+    sel_kwargs = dict(cfg.selector_kwargs)
+    if cfg.selector in ("greedyfed", "greedyfed_dropout"):
+        sel_kwargs.setdefault("averaging", cfg.sv_averaging)
+        sel_kwargs.setdefault("alpha", cfg.sv_alpha)
     selector = make_selector(cfg.selector, cfg.n_clients, cfg.m,
-                             seed=cfg.seed, **cfg.selector_kwargs)
-    if cfg.selector == "greedyfed":
-        selector.averaging = cfg.sv_averaging
-        selector.alpha = cfg.sv_alpha
+                             seed=cfg.seed, **sel_kwargs)
     state = selector.init_state()
 
     model_bytes = sum(int(x.size) * x.dtype.itemsize
@@ -232,7 +240,13 @@ def _make_round_engine(cfg: FLConfig, s: RunSetup, needs_sv: bool,
 def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
                   model: Optional[ClassifierModel] = None) -> FLResult:
     t_start = time.time()
+    if cfg.engine not in ("loop", "batched", "scan"):
+        raise ValueError(f"unknown engine {cfg.engine!r}; "
+                         "options: 'loop', 'batched', 'scan'")
     s = setup_run(cfg, data, model)
+    if cfg.engine == "scan":
+        from repro.engine.scan_engine import run_federated_scan
+        return run_federated_scan(cfg, s, t_start)
     model, params, state, key = s.model, s.params, s.state, s.key
     selector = s.selector
 
@@ -247,9 +261,6 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
     needs_sv = selector.uses_shapley
     max_iters = cfg.shapley_max_iters or 50 * cfg.m
 
-    if cfg.engine not in ("loop", "batched"):
-        raise ValueError(f"unknown engine {cfg.engine!r}; "
-                         "options: 'loop', 'batched'")
     engine = None
     codec_bytes = s.model_bytes
     if cfg.engine == "batched":
@@ -369,14 +380,21 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
 
 def run_federated_replicated(cfg: FLConfig, seeds,
                              data: Optional[SynthDataset] = None,
-                             model: Optional[ClassifierModel] = None
-                             ) -> list[FLResult]:
-    """Run `len(seeds)` independent replicas with ONE vmapped round program.
+                             model: Optional[ClassifierModel] = None,
+                             selectors=None) -> list[FLResult]:
+    """Run a replica batch with ONE fused program (repro.engine.replicated).
 
-    Benchmark tables re-run every config across seeds; this entry point
-    compiles the fused round step once and advances all replicas per round
-    in a single dispatch (repro.engine.replicated, DESIGN.md §6).
+    With ``cfg.engine != "scan"`` and no `selectors`, this is the PR-1
+    per-round vmap: the fused round step advances all seeds per dispatch
+    (DESIGN.md §6).  With ``cfg.engine == "scan"`` (or a `selectors` list
+    of registry names) the whole strategies × seeds table — selection and
+    valuation included — runs as a single `lax.scan` dispatch
+    (DESIGN.md §11); results come back selector-major, seed-minor.
     """
+    if cfg.engine == "scan" or selectors is not None:
+        from repro.engine.replicated import run_replicated_scan
+        return run_replicated_scan(cfg, seeds, selectors=selectors,
+                                   data=data, model=model)
     from repro.engine.replicated import run_replicated
     return run_replicated(cfg, seeds, data=data, model=model)
 

@@ -6,6 +6,13 @@ data-axis-sharded) computation — DESIGN.md §3 "client parallelism".  The
 stacked updates feed GTG-Shapley directly (its subset averages contract
 over the client axis, which GSPMD turns into small all-reduces).
 
+`device_selected_round` extends the collective step upward through the
+strategy layer: with a device-resident selector (repro.core.selection_jax)
+the round's *selection* is part of the same trace, so select → gather →
+train → aggregate is one program — the single-round building block of the
+whole-run scan engine (DESIGN.md §11), exposed standalone for interactive
+use and mesh lowering.
+
 Works on 1 CPU device (plain vmap) and on a production mesh (client axis
 sharded over "data"): tests/test_sharding.py lowers it on a debug mesh.
 """
@@ -18,7 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import normalized_weights, weighted_average
-from repro.engine.batch_client import batched_client_update
+from repro.core.selection_jax import (
+    DeviceSelectionContext, DeviceSelectorState, SelectorSpec, device_select,
+    device_update,
+)
+from repro.engine.batch_client import batched_client_update, cohort_update
 from repro.federated.client import ClientConfig
 from repro.models.mlp_cnn import ClassifierModel
 
@@ -47,3 +58,38 @@ def parallel_client_round(
     new_params = weighted_average(
         stacked, normalized_weights(n_valid.astype(jnp.float32)))
     return stacked, new_params
+
+
+@partial(jax.jit, static_argnames=("model", "ccfg", "spec"))
+def device_selected_round(
+    model: ClassifierModel,
+    ccfg: ClientConfig,
+    spec: SelectorSpec,
+    params: PyTree,          # replicated server model w^t
+    xs_all: jax.Array,       # (N, cap, ...) ALL clients' padded data
+    ys_all: jax.Array,       # (N, cap)
+    nv_all: jax.Array,       # (N,)
+    sigma_all: jax.Array,    # (N,)
+    epochs_all: jax.Array,   # (N,) this round's per-client epoch budgets
+    state: DeviceSelectorState,
+    ctx: DeviceSelectionContext,
+    key: jax.Array,
+) -> tuple[jax.Array, DeviceSelectorState, PyTree]:
+    """Fused select → gather → train → aggregate: ONE jitted program.
+
+    The strategy picks the cohort *inside* the trace (no host round-trip
+    between selection and training), then the vmapped cohort update and
+    ModelAverage run exactly as in `parallel_client_round`.  Returns
+    (sel, selector state with bumped counts, w^{t+1}).  SV-driven
+    strategies feed their valuation separately via `device_update` once
+    the round's Shapley values exist (see round_engine.make_run_scan for
+    the fully-fused variant).
+    """
+    sel_key, round_key = jax.random.split(key)
+    sel, state = device_select(spec, state, sel_key, ctx)
+    stacked, n_k_sel, _ = cohort_update(
+        model, ccfg, params, xs_all, ys_all, nv_all, sigma_all, sel,
+        jnp.take(epochs_all, sel), round_key)
+    new_params = weighted_average(stacked, normalized_weights(n_k_sel))
+    state = device_update(spec, state, sel)
+    return sel, state, new_params

@@ -1,8 +1,10 @@
-"""Batched round engine: parity with the legacy loop (the oracle), the
-virtual-clock scheduler, and multi-seed replication."""
+"""Round/run engines: batched parity with the legacy loop (the oracle),
+the whole-run scan engine's parity with batched, the virtual-clock
+scheduler, and multi-seed / multi-strategy replication."""
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -12,7 +14,7 @@ from repro.engine.schedule import (
 )
 from repro.federated.client import ClientConfig
 from repro.federated.server import (
-    FLConfig, run_federated, run_federated_replicated,
+    FLConfig, run_federated, run_federated_replicated, setup_run,
 )
 
 TINY = dict(n_clients=8, m=3, rounds=6, n_train=600, n_val=100, n_test=100,
@@ -63,6 +65,87 @@ def test_batched_engine_matches_loop_with_codec():
 def test_unknown_engine_rejected():
     with pytest.raises(ValueError, match="engine"):
         run_federated(FLConfig(engine="warp", **TINY))
+
+
+# -------------------------------------------------------------------- scan --
+@pytest.mark.parametrize("selector", ["greedyfed", "fedavg",
+                                      "power_of_choice"])
+def test_scan_engine_matches_batched(selector):
+    """The whole-run lax.scan path reproduces the batched engine —
+    selections bit-identical, params/bytes/eval counts matching — while
+    issuing ONE train dispatch for the run instead of one per round."""
+    cfg = dict(TINY, selector=selector, privacy_sigma=0.05)
+    batched = run_federated(FLConfig(engine="batched", **cfg))
+    scan = run_federated(FLConfig(engine="scan", **cfg))
+    _assert_parity(batched, scan)
+    assert scan.dispatches == 1
+    assert batched.dispatches >= TINY["rounds"]
+    # in-scan cadenced eval reproduces the host-side eval history
+    assert [t for t, _ in scan.test_acc] == [t for t, _ in batched.test_acc]
+    np.testing.assert_allclose([a for _, a in scan.test_acc],
+                               [a for _, a in batched.test_acc], atol=1e-5)
+
+
+def test_scan_engine_matches_batched_with_codec():
+    cfg = dict(TINY, selector="fedavg", upload_codec="quant8")
+    batched = run_federated(FLConfig(engine="batched", **cfg))
+    scan = run_federated(FLConfig(engine="scan", **cfg))
+    _assert_parity(batched, scan, atol=5e-4)
+    assert scan.upload_bytes < scan.download_bytes
+
+
+def test_scan_engine_schedule_parity():
+    """Deadline-derived E_k is deterministic, so the scan engine matches
+    batched under a virtual clock — including simulated time."""
+    cfg = dict(TINY, selector="fedavg",
+               schedule=ScheduleConfig(deadline_s=100.0))
+    batched = run_federated(FLConfig(engine="batched", **cfg))
+    scan = run_federated(FLConfig(engine="scan", **cfg))
+    _assert_parity(batched, scan)
+    assert scan.sim_time_s == pytest.approx(batched.sim_time_s)
+    assert scan.sim_time_s > 0
+
+
+def test_scan_engine_random_stragglers():
+    """straggler_frac uses a pre-drawn (T, N) table on the scan path —
+    distribution-identical to the legacy stream, not bit-identical — so
+    the run must still train and grant reduced budgets."""
+    cfg = dict(TINY, selector="fedavg", straggler_frac=0.5)
+    r = run_federated(FLConfig(engine="scan", **cfg))
+    flat = _flat(r.params)
+    assert np.isfinite(flat).all()
+    assert len(r.selections) == TINY["rounds"]
+    assert r.dispatches == 1
+
+
+def test_device_selected_round_fuses_selection():
+    """sim.device_selected_round: select → gather → train → aggregate in
+    one jitted program, with selection counts bumped on-device."""
+    from repro.core.selection import selector_spec
+    from repro.core.selection_jax import (
+        DeviceSelectionContext, init_device_state,
+    )
+    from repro.federated.sim import device_selected_round
+
+    cfg = FLConfig(selector="fedavg", **TINY)
+    s = setup_run(cfg)
+    spec = selector_spec(s.selector)
+    state = init_device_state(spec, cfg.seed)
+    ctx = DeviceSelectionContext(
+        data_fractions=jnp.asarray(s.fractions),
+        local_losses=jnp.zeros(cfg.n_clients, jnp.float32),
+        poc_d=jnp.asarray(0, jnp.int32))
+    epochs_all = jnp.full((cfg.n_clients,), cfg.client.epochs, jnp.int32)
+    sel, state, new_params = device_selected_round(
+        s.model, cfg.client, spec, s.params, s.xs, s.ys, s.n_valid,
+        jnp.asarray(s.sigma_k_all), epochs_all, state, ctx,
+        jax.random.key(3))
+    assert sel.shape == (cfg.m,)
+    assert len(set(int(i) for i in sel)) == cfg.m
+    assert int(state.round) == 1
+    assert int(np.asarray(state.valuation.counts).sum()) == cfg.m
+    assert np.isfinite(_flat(new_params)).all()
+    assert not np.allclose(_flat(new_params), _flat(s.params))
 
 
 # ---------------------------------------------------------------- schedule --
@@ -136,3 +219,34 @@ def test_replicated_shapley_selector():
         assert len(rep.selections) == TINY["rounds"]
     # replicas genuinely differ (different partitions/keys)
     assert not np.allclose(_flat(reps[0].params), _flat(reps[1].params))
+
+
+def test_replicated_scan_matches_solo_runs():
+    """cfg.engine='scan' replication vmaps the WHOLE run — selector state
+    included — and each replica reproduces the solo scan run at its seed."""
+    cfg = FLConfig(selector="fedavg", engine="scan", **TINY)
+    seeds = [0, 1]
+    reps = run_federated_replicated(cfg, seeds)
+    assert len(reps) == len(seeds)
+    for s, rep in zip(seeds, reps):
+        solo = run_federated(dataclasses.replace(cfg, seed=s))
+        _assert_parity(solo, rep)
+        assert rep.config.seed == s
+        assert rep.dispatches == 1
+
+
+def test_replicated_scan_mixed_strategy_grid():
+    """A strategies × seeds grid lax.switch-dispatches through ONE compiled
+    program; every cell reproduces its solo scan run (SV superset: non-SV
+    replicas just report zero shapley evals)."""
+    cfg = FLConfig(selector="greedyfed", engine="scan",
+                   shapley_max_iters=10, **TINY)
+    grid = run_federated_replicated(cfg, [0], selectors=["greedyfed",
+                                                         "fedavg"])
+    assert [r.config.selector for r in grid] == ["greedyfed", "fedavg"]
+    for r in grid:
+        solo = run_federated(dataclasses.replace(cfg,
+                                                 selector=r.config.selector))
+        _assert_parity(solo, r)
+        assert r.dispatches == 1
+    assert grid[0].shapley_evals > 0 and grid[1].shapley_evals == 0

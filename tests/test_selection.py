@@ -1,11 +1,18 @@
 """Selection strategies: RR initialisation coverage, greedy top-M, softmax
-sampling validity, Power-of-Choice loss bias."""
+sampling validity, Power-of-Choice loss bias — plus the host-vs-device
+parity contract for the pure-JAX selector stack (selection_jax)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.selection import SelectionContext, make_selector
+from repro.core.selection import (
+    SELECTORS, SelectionContext, make_selector, selector_spec,
+)
+from repro.core.selection_jax import (
+    DeviceSelectionContext, device_dropped_fraction, device_select,
+    device_update, init_device_state, make_selector_spec, poc_d_schedule,
+)
 
 
 def _ctx(n, losses=None):
@@ -76,3 +83,130 @@ def test_sfedavg_returns_valid_distinct_clients():
 def test_unknown_selector_raises():
     with pytest.raises(ValueError):
         make_selector("nope", 4, 2)
+
+
+# ------------------------------------------------- device-resident parity --
+_jit_select = jax.jit(device_select, static_argnums=0)
+_jit_update = jax.jit(device_update, static_argnums=0)
+
+
+def _drive_both(name, seed, n=9, m=3, rounds=8, **kw):
+    """Run host and jitted-device selectors side by side on one synthetic
+    round stream; assert bit-identical selections every round and matching
+    final state."""
+    host = make_selector(name, n, m, seed=seed, **kw)
+    spec = selector_spec(host)
+    hstate = host.init_state()
+    dstate = init_device_state(spec, seed)
+    d_sched = poc_d_schedule(spec, rounds)
+    rng = np.random.default_rng(seed + 7)
+    fractions = jnp.asarray(rng.random(n).astype(np.float32) + 0.1)
+    key = jax.random.key(seed + 100)
+    for t in range(rounds):
+        key, sk = jax.random.split(key)
+        losses = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        hs, hstate = host.select(
+            hstate, sk, SelectionContext(fractions, losses))
+        ds, dstate = _jit_select(
+            spec, dstate, sk,
+            DeviceSelectionContext(fractions, losses, jnp.asarray(d_sched[t])))
+        np.testing.assert_array_equal(
+            np.asarray(hs), np.asarray(ds),
+            err_msg=f"{name} seed={seed} round {t}")
+        sv = (jnp.asarray(rng.standard_normal(m).astype(np.float32))
+              if host.uses_shapley else None)
+        hstate = host.update(hstate, np.asarray(hs), sv_round=sv)
+        dstate = _jit_update(spec, dstate, jnp.asarray(ds), sv)
+    # valuation state: counts/initialised exact; sv to jit-fusion ulp
+    np.testing.assert_array_equal(np.asarray(hstate.valuation.counts),
+                                  np.asarray(dstate.valuation.counts))
+    np.testing.assert_array_equal(np.asarray(hstate.valuation.initialised),
+                                  np.asarray(dstate.valuation.initialised))
+    np.testing.assert_allclose(np.asarray(hstate.valuation.sv),
+                               np.asarray(dstate.valuation.sv),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(hstate.active),
+                                  np.asarray(dstate.active))
+    assert bool(hstate.frozen) == bool(dstate.frozen)
+    return host, hstate, dstate
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("name", sorted(SELECTORS))
+def test_host_device_selector_parity(name, seed):
+    """Every registry strategy: the jittable device twin reproduces the
+    host selector's per-round selections bit-for-bit across seeds."""
+    _drive_both(name, seed)
+
+
+def test_power_of_choice_explicit_d0_zero_parity():
+    """Regression: d0=0 means 'd clamps to m every round' on both paths —
+    it must not round-trip through selector_spec as the None sentinel."""
+    spec = selector_spec(make_selector("power_of_choice", 9, 3, d0=0))
+    assert poc_d_schedule(spec, 4).tolist() == [3, 3, 3, 3]
+    _drive_both("power_of_choice", 0, rounds=4, d0=0)
+
+
+def test_make_selector_spec_matches_host_instance():
+    spec = make_selector_spec("ucb", 12, 4, c=2.5)
+    assert spec.name == "ucb" and spec.c == 2.5
+    assert spec == selector_spec(make_selector("ucb", 12, 4, c=2.5))
+    assert spec.rr_rounds == 3 and spec.uses_shapley
+
+
+# ------------------------------------------------- dropout mask edge cases --
+@pytest.mark.parametrize("drop_frac,expect_keep", [
+    (0.0, 10),   # nothing drops: active stays full
+    (1.0, 3),    # degenerate: n_keep clamps up to m
+    (0.9, 3),    # round(0.1*10) = 1 < m: the n_keep < m clamp
+])
+def test_dropout_drop_frac_edges(drop_frac, expect_keep):
+    n, m = 10, 3
+    host = make_selector("greedyfed_dropout", n, m, seed=0,
+                         drop_frac=drop_frac)
+    spec = selector_spec(host)
+    assert spec.n_keep == expect_keep
+    hstate = host.init_state()
+    dstate = init_device_state(spec, 0)
+    ctx = SelectionContext(data_fractions=jnp.ones(n) / n)
+    dctx = DeviceSelectionContext(jnp.ones(n) / n, jnp.zeros(n),
+                                  jnp.asarray(0))
+    rr = int(np.ceil(n / m))
+    key = jax.random.key(0)
+    for t in range(rr + 1):
+        key, sk = jax.random.split(key)
+        hs, hstate = host.select(hstate, sk, ctx)
+        ds, dstate = _jit_select(spec, dstate, sk, dctx)
+        np.testing.assert_array_equal(np.asarray(hs), np.asarray(ds))
+        sv = jnp.asarray([float(i) for i in np.asarray(hs)])  # SV == id
+        hstate = host.update(hstate, np.asarray(hs), sv_round=sv)
+        dstate = _jit_update(spec, dstate, jnp.asarray(ds), sv)
+    # post-RR: mask frozen at exactly n_keep highest-SV clients, both paths
+    assert bool(hstate.frozen) and bool(dstate.frozen)
+    assert int(hstate.active.sum()) == expect_keep
+    np.testing.assert_array_equal(np.asarray(hstate.active),
+                                  np.asarray(dstate.active))
+    want_frac = 1.0 - expect_keep / n
+    assert host.dropped_fraction(hstate) == pytest.approx(want_frac)
+    assert float(device_dropped_fraction(dstate)) == pytest.approx(want_frac)
+    # selections always come from the active set
+    hs, hstate = host.select(hstate, jax.random.key(99), ctx)
+    assert all(hstate.active[int(i)] for i in hs)
+
+
+def test_sv_averaging_routed_through_selector_kwargs():
+    """Satellite: sv_averaging/sv_alpha reach the selector via the
+    constructor, and explicit selector_kwargs win over the FLConfig knobs."""
+    from repro.federated.server import FLConfig, setup_run
+    small = dict(n_clients=4, m=2, rounds=1, n_train=120, n_val=40,
+                 n_test=40)
+    s = setup_run(FLConfig(selector="greedyfed", sv_averaging="exponential",
+                           sv_alpha=0.25, **small))
+    assert s.selector.averaging == "exponential"
+    assert s.selector.alpha == 0.25
+    s = setup_run(FLConfig(selector="greedyfed_dropout",
+                           sv_averaging="exponential", **small))
+    assert s.selector.averaging == "exponential"
+    s = setup_run(FLConfig(selector="greedyfed", sv_averaging="exponential",
+                           selector_kwargs={"averaging": "mean"}, **small))
+    assert s.selector.averaging == "mean"

@@ -46,7 +46,7 @@ def test_dropout_selector_drops_bottom_and_saves_comm():
         # client k earns SV == k
         state = sel.update(state, s, sv_round=jnp.asarray([float(i) for i in s]))
     s, state = sel.select(state, jax.random.key(99), ctx)
-    active = state.extra["active"]
+    active = np.flatnonzero(state.active)
     assert len(active) == 5
     assert set(active.tolist()) == {5, 6, 7, 8, 9}, "bottom half must drop"
     assert set(int(i) for i in s) == {8, 9}
