@@ -1,4 +1,4 @@
-.PHONY: check test bench-kernels bench-engine bench-smoke
+.PHONY: check test bench-kernels bench-engine bench-smoke grid-smoke
 
 check:
 	./scripts/check.sh
@@ -17,3 +17,11 @@ bench-engine:
 # CHECK_BENCH_SMOKE=1 ./scripts/check.sh
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.engine_bench --smoke --json BENCH_selection.json
+
+# grid-runner smoke: a 2-partition, 2-segment, 4-replica grid sharded over
+# the forced-host 8-device debug mesh; refreshes BENCH_grid.json (per-
+# partition dispatch counts, segment latency, bytes resident).  Opt into
+# the check gate with CHECK_GRID_SMOKE=1 ./scripts/check.sh
+grid-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	PYTHONPATH=src python -m benchmarks.engine_bench --grid --json BENCH_grid.json

@@ -239,15 +239,111 @@ def run(*, full: bool = False, smoke: bool = False,
     return rows
 
 
+def run_grid_bench(*, full: bool = False,
+                   json_path: str | None = "BENCH_grid.json") -> list[str]:
+    """The `make grid-smoke` payload: a 2-partition (greedyfed+fedavg),
+    2-segment, 4-replica grid through `repro.grid.run_grid`, sharded over
+    the replica mesh (4 of the forced-host 8 devices in CI), emitting
+    BENCH_grid.json — per-partition dispatch counts and compiled-flops
+    evidence that the non-SV partition no longer traces GTG-Shapley,
+    segment latency, and bytes resident per partition/device.
+    """
+    import jax
+
+    from repro.grid import GridSpec, run_grid
+
+    base_kw = BASE if full else SMOKE
+    rounds, k = (8, 4) if full else (4, 2)
+    cfg = FLConfig(selector="greedyfed", engine="scan",
+                   shapley_max_iters=(50 if full else 8), rounds=rounds,
+                   **base_kw)
+    gspec = GridSpec.product(cfg, selectors=["greedyfed", "fedavg"],
+                             seeds=(0, 1))
+
+    cold = run_grid(gspec, rounds_per_segment=k, compile_stats=True)
+    warm = run_grid(gspec, rounds_per_segment=k)   # executables cached
+    n_segments = warm.n_segments
+    seg_us = warm.wall_time_s / max(
+        sum(p.dispatches for p in warm.partitions), 1) * 1e6
+
+    n_dev = len(jax.devices())
+    rows, parts = [], []
+    for p in cold.partitions:
+        rows.append(
+            f"grid_partition_{p.label},{p.dispatches},needs_sv={p.needs_sv}"
+            f"_evals={p.shapley_evals}_flops={p.flops_per_dispatch:.0f}")
+        parts.append({
+            "label": p.label, "cells": list(p.cell_indices),
+            "needs_sv": p.needs_sv,
+            "uses_local_losses": p.uses_local_losses,
+            "n_strategies": p.n_strategies,
+            "dispatches": p.dispatches,
+            "shapley_evals": p.shapley_evals,
+            "bytes_resident": p.bytes_resident,
+            "flops_per_dispatch": None
+            if p.flops_per_dispatch != p.flops_per_dispatch
+            else p.flops_per_dispatch,
+        })
+    rows.append(f"grid_segment_latency,{seg_us:.0f},"
+                f"segments={n_segments}_cells={len(gspec.cells)}")
+    bytes_total = sum(p.bytes_resident for p in cold.partitions)
+    shard_dev = min(n_dev, 2)   # 2 replicas per partition
+    rows.append(f"grid_bytes_resident,{bytes_total},"
+                f"per_device={bytes_total // max(shard_dev, 1)}"
+                f"_devices={n_dev}")
+
+    sv = next(p for p in cold.partitions if p.needs_sv)
+    plain = next(p for p in cold.partitions if not p.needs_sv)
+    report = {
+        "schema": "bench_grid/v1",
+        "backend": jax.default_backend(),
+        "devices": n_dev,
+        "grid": {"cells": len(gspec.cells),
+                 "selectors": ["greedyfed", "fedavg"], "seeds": [0, 1],
+                 "rounds": rounds, "rounds_per_segment": k,
+                 "n_segments": n_segments},
+        "partitions": parts,
+        "segment_latency_us": seg_us,
+        "bytes_resident_total": bytes_total,
+        "bytes_resident_per_device": bytes_total // max(shard_dev, 1),
+        "sv_partition_skipped_in_plain": {
+            "plain_partition_shapley_evals": plain.shapley_evals,
+            "flops_ratio_sv_over_plain": None
+            if sv.flops_per_dispatch != sv.flops_per_dispatch
+            or plain.flops_per_dispatch != plain.flops_per_dispatch
+            else sv.flops_per_dispatch / plain.flops_per_dispatch,
+        },
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        rows.append(f"json_report,0,{json_path}")
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--full", action="store_true",
                     help="paper-scale shapley iteration budget")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI-gate sizes (scripts/check.sh opt-in)")
-    ap.add_argument("--json", default="BENCH_selection.json",
-                    help="machine-readable report path ('' disables)")
+    ap.add_argument("--grid", action="store_true",
+                    help="grid-runner smoke (partitioned/segmented/"
+                         "sharded) emitting BENCH_grid.json")
+    ap.add_argument("--json", default=None,
+                    help="machine-readable report path ('' disables; "
+                         "default BENCH_selection.json, or BENCH_grid.json "
+                         "with --grid)")
     args = ap.parse_args()
-    for row in run(full=args.full, smoke=args.smoke,
-                   json_path=args.json or None):
+    if args.grid:
+        json_path = ("BENCH_grid.json" if args.json is None
+                     else (args.json or None))
+        out_rows = run_grid_bench(full=args.full, json_path=json_path)
+    else:
+        json_path = ("BENCH_selection.json" if args.json is None
+                     else (args.json or None))
+        out_rows = run(full=args.full, smoke=args.smoke,
+                       json_path=json_path)
+    for row in out_rows:
         print(row)

@@ -36,7 +36,14 @@ DIFFICULTY = 3.0
 
 
 def run_algo(algo: str, *, dataset="mnist", seeds=(0, 1), full=False,
-             **overrides) -> dict:
+             engine="loop", **overrides) -> dict:
+    """One benchmark-table cell: `algo` across `seeds`.
+
+    `engine="scan"` routes the multi-seed replication through the grid
+    runner (`repro.grid.run_grid`, DESIGN.md §12): every seed is a grid
+    cell, all seeds execute as one partitioned scan dispatch.  The other
+    engines keep the solo per-seed loop.
+    """
     import jax
     # hundreds of (algo x setting x seed) configs each compile their own
     # client_update/eval executables; without this the accumulated jit cache
@@ -48,20 +55,31 @@ def run_algo(algo: str, *, dataset="mnist", seeds=(0, 1), full=False,
     base.update(overrides)   # sweep/caller settings win over the defaults
     if algo == "fedprox":
         client = client._replace(prox_mu=0.1)  # ClientConfig is a NamedTuple
-    accs, walls, evals = [], [], []
-    for seed in seeds:
-        cfg = FLConfig(dataset=dataset, selector=algo, seed=seed,
-                       client=client, **base)
-        data = make_dataset(dataset, n_train=cfg.n_train, n_val=cfg.n_val,
-                            n_test=cfg.n_test, seed=seed,
-                            difficulty=DIFFICULTY)
-        if algo == "centralized":
-            res = run_centralized(cfg, data=data)
-        else:
-            res = run_federated(cfg, data=data)
-        accs.append(res.final_acc)
-        walls.append(res.wall_time_s)
-        evals.append(res.shapley_evals)
+    datasets = [make_dataset(dataset, n_train=base["n_train"],
+                             n_val=base["n_val"], n_test=base["n_test"],
+                             seed=seed, difficulty=DIFFICULTY)
+                for seed in seeds]
+    if engine == "scan" and algo != "centralized":
+        from repro.grid import GridSpec, run_grid
+        cfg = FLConfig(dataset=dataset, selector=algo, client=client,
+                       engine="scan", **base)
+        out = run_grid(GridSpec.product(cfg, seeds=list(seeds)),
+                       data=datasets)
+        results = out.results
+    else:
+        results = []
+        for seed, data in zip(seeds, datasets):
+            cfg = FLConfig(dataset=dataset, selector=algo, seed=seed,
+                           client=client, engine=engine
+                           if algo != "centralized" else "loop", **base)
+            if algo == "centralized":
+                results.append(run_centralized(cfg, data=data))
+            else:
+                results.append(run_federated(cfg, data=data))
+    accs = [r.final_acc for r in results]
+    walls = [r.wall_time_s for r in results]
+    evals = [r.shapley_evals for r in results]
+    res = results[-1]
     return {
         "algo": algo,
         "acc_mean": float(np.mean(accs)),
@@ -75,7 +93,7 @@ def run_algo(algo: str, *, dataset="mnist", seeds=(0, 1), full=False,
 
 
 def sweep(setting_name: str, values, algos=None, *, dataset="mnist",
-          seeds=(0, 1), full=False, **fixed):
+          seeds=(0, 1), full=False, engine="loop", **fixed):
     """Run a table: one column per value of `setting_name`."""
     algos = algos or ALGOS
     rows = []
@@ -84,7 +102,7 @@ def sweep(setting_name: str, values, algos=None, *, dataset="mnist",
         for v in values:
             t0 = time.time()
             out = run_algo(algo, dataset=dataset, seeds=seeds, full=full,
-                           **fixed, **{setting_name: v})
+                           engine=engine, **fixed, **{setting_name: v})
             row[str(v)] = (out["acc_mean"], out["acc_std"])
             row.setdefault("wall_s", 0.0)
             row["wall_s"] += time.time() - t0

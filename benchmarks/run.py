@@ -23,6 +23,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help=f"comma list from {BENCHES}")
     ap.add_argument("--seeds", default="0,1")
+    ap.add_argument("--engine", default="loop",
+                    choices=["loop", "batched", "scan"],
+                    help="table execution path; 'scan' fuses each cell's "
+                         "seeds into one repro.grid dispatch")
     args = ap.parse_args()
     seeds = tuple(int(s) for s in args.seeds.split(","))
     only = args.only.split(",") if args.only else BENCHES
@@ -40,7 +44,7 @@ def main() -> None:
         for row in eb(full=args.full):
             print(row)
 
-    fl = dict(full=args.full, seeds=seeds)
+    fl = dict(full=args.full, seeds=seeds, engine=args.engine)
     if "table1" in only:
         from benchmarks.table1_data_heterogeneity import run as t1
         t1(**fl)

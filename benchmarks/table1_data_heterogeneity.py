@@ -4,9 +4,9 @@ from benchmarks.fl_common import print_table, sweep
 VALUES = [1e-4, 0.1, 100.0]
 
 
-def run(*, full=False, seeds=(0, 1), dataset="mnist"):
+def run(*, full=False, seeds=(0, 1), dataset="mnist", engine="loop"):
     rows = sweep("dirichlet_alpha", VALUES, dataset=dataset, seeds=seeds,
-                 full=full)
+                 full=full, engine=engine)
     print_table("Table I — data heterogeneity (alpha)", rows, VALUES)
     return rows
 

@@ -5,9 +5,10 @@ VALUES = [15, 25, 40]
 VALUES_FULL = [150, 250, 350]
 
 
-def run(*, full=False, seeds=(0, 1), dataset="mnist"):
+def run(*, full=False, seeds=(0, 1), dataset="mnist", engine="loop"):
     vals = VALUES_FULL if full else VALUES
-    rows = sweep("rounds", vals, dataset=dataset, seeds=seeds, full=full)
+    rows = sweep("rounds", vals, dataset=dataset, seeds=seeds, full=full,
+                 engine=engine)
     print_table("Table II — timing constraints (T)", rows, vals)
     return rows
 

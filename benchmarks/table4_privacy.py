@@ -4,9 +4,9 @@ from benchmarks.fl_common import print_table, sweep
 VALUES = [0.0, 0.05, 0.1]
 
 
-def run(*, full=False, seeds=(0, 1), dataset="mnist"):
+def run(*, full=False, seeds=(0, 1), dataset="mnist", engine="loop"):
     rows = sweep("privacy_sigma", VALUES, dataset=dataset, seeds=seeds,
-                 full=full)
+                 full=full, engine=engine)
     print_table("Table IV — privacy heterogeneity (sigma)", rows, VALUES)
     return rows
 

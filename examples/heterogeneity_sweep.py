@@ -6,6 +6,12 @@ Reproduces the Table III/IV phenomenon at laptop scale: with 50% stragglers
 AND per-client privacy noise, Shapley-guided selection degrades least,
 because noisy/partial contributors earn low cumulative SV and stop being
 selected after the round-robin phase.
+
+The whole 4-setting x 3-selector sweep is ONE `repro.grid` run: each
+(setting, selector) pair is a GridCell whose knob overrides become
+per-replica scan operands, the cells are partitioned by capability (the
+fedavg column skips GTG-Shapley entirely), and every partition executes
+as a single fused dispatch (DESIGN.md §12).
 """
 import sys
 
@@ -13,30 +19,38 @@ sys.path.insert(0, "src")
 
 from repro.data.synth import make_dataset
 from repro.federated.client import ClientConfig
-from repro.federated.server import FLConfig, run_federated
+from repro.federated.server import FLConfig
+from repro.grid import GridCell, GridSpec, run_grid
+
+SETTINGS = [
+    ("clean", {}),
+    ("stragglers x=0.5", {"straggler_frac": 0.5}),
+    ("noise sigma=0.1", {"privacy_sigma": 0.1}),
+    ("both", {"straggler_frac": 0.5, "privacy_sigma": 0.1}),
+]
+SELECTORS = ("greedyfed", "ucb", "fedavg")
 
 
 def main() -> None:
     data = make_dataset("mnist", n_train=2500, n_val=300, n_test=500,
                         difficulty=3.0, seed=1)
-    common = dict(
+    base = FLConfig(
         dataset="mnist", n_clients=20, m=3, rounds=25, dirichlet_alpha=1e-4,
         seed=1, n_train=2500, n_val=300, n_test=500, eval_every=25,
         client=ClientConfig(epochs=3, batches_per_epoch=3, batch_size=32),
     )
+    spec = GridSpec(base, tuple(
+        GridCell(sel, seed=1, overrides=knobs)
+        for _, knobs in SETTINGS for sel in SELECTORS))
+
+    out = run_grid(spec, data=data)
+    print(f"{len(spec.cells)} cells, {len(out.partitions)} partitions, "
+          f"{out.dispatches} dispatches, {out.wall_time_s:.1f}s")
 
     print("setting           | greedyfed | ucb   | fedavg")
-    for name, knobs in [
-        ("clean", {}),
-        ("stragglers x=0.5", {"straggler_frac": 0.5}),
-        ("noise sigma=0.1", {"privacy_sigma": 0.1}),
-        ("both", {"straggler_frac": 0.5, "privacy_sigma": 0.1}),
-    ]:
-        accs = {}
-        for sel in ("greedyfed", "ucb", "fedavg"):
-            res = run_federated(FLConfig(selector=sel, **common, **knobs),
-                                data=data)
-            accs[sel] = res.final_acc
+    results = iter(out.results)
+    for name, _ in SETTINGS:
+        accs = {sel: next(results).final_acc for sel in SELECTORS}
         print(f"{name:17s} | {accs['greedyfed']:9.3f} | {accs['ucb']:.3f} "
               f"| {accs['fedavg']:.3f}")
 

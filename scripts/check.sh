@@ -20,3 +20,9 @@ if [[ "${CHECK_BENCH_SMOKE:-0}" == "1" ]]; then
   echo "== engine bench smoke (BENCH_selection.json) =="
   make bench-smoke
 fi
+
+if [[ "${CHECK_GRID_SMOKE:-0}" == "1" ]]; then
+  echo
+  echo "== grid runner smoke (BENCH_grid.json) =="
+  make grid-smoke
+fi

@@ -61,6 +61,37 @@ def load_pytree(path: str, like: PyTree) -> PyTree:
     return jax.tree.unflatten(treedef, new_leaves)
 
 
+def _is_prng_key(x) -> bool:
+    dtype = getattr(x, "dtype", None)
+    return dtype is not None and jax.dtypes.issubdtype(dtype,
+                                                       jax.dtypes.prng_key)
+
+
+def encode_prng_keys(tree: PyTree) -> PyTree:
+    """Replace typed PRNG-key leaves by their uint32 key data (npz-able)."""
+    return jax.tree.map(
+        lambda x: jax.random.key_data(x) if _is_prng_key(x) else x, tree)
+
+
+def decode_prng_keys(tree: PyTree, like: PyTree) -> PyTree:
+    """Re-wrap key data back into typed keys wherever `like` holds one."""
+    return jax.tree.map(
+        lambda x, l: jax.random.wrap_key_data(jnp.asarray(x))
+        if _is_prng_key(l) else x, tree, like)
+
+
+def save_carry(path: str, carry: PyTree) -> None:
+    """Checkpoint a scan-segment carry (params + selector state + typed
+    rng key) — `save_pytree` with the key leaves made serialisable."""
+    save_pytree(path, encode_prng_keys(carry))
+
+
+def load_carry(path: str, like: PyTree) -> PyTree:
+    """Inverse of `save_carry`: bit-exact roundtrip including typed keys."""
+    data = load_pytree(path, encode_prng_keys(like))
+    return decode_prng_keys(data, like)
+
+
 def save_server_state(path: str, *, params: PyTree, sv: np.ndarray,
                       counts: np.ndarray, round_idx: int, seed: int) -> None:
     save_pytree(path, {"params": params})

@@ -1,16 +1,18 @@
 """repro.engine — fused round/run execution engines (DESIGN.md §6, §11).
 
     batch_client  vmapped ClientUpdate over the selected cohort
-    round_engine  fused single-dispatch `round_step` + whole-run `run_scan`
+    round_engine  fused single-dispatch `round_step`, whole-run `run_scan`,
+                  and the K-round `segment_step` carry contract (§12)
     scan_engine   engine="scan" orchestration: T rounds as ONE dispatch
     replicated    replica vmaps: per-round (seeds) and whole-run
-                  (strategies x seeds, lax.switch-dispatched)
+                  (strategies x seeds — delegates to repro.grid)
     schedule      virtual clock: latencies, deadlines, time-derived E_k
 """
 from repro.engine.batch_client import batched_client_update, cohort_update
 from repro.engine.round_engine import (
     RoundEngine, RoundOutput, RoundSpec, ScanRunOutput, ScanSpec,
-    jitted_run_scan, make_run_scan,
+    SegmentCarry, SegmentOutput, jitted_run_scan, jitted_segment_step,
+    make_run_scan, make_segment_step,
 )
 from repro.engine.schedule import (
     ClientClock, ScheduleConfig, VirtualClock, deadline_epochs,
@@ -21,7 +23,9 @@ from repro.engine.schedule import (
 __all__ = [
     "batched_client_update", "cohort_update",
     "RoundEngine", "RoundOutput", "RoundSpec",
-    "ScanRunOutput", "ScanSpec", "jitted_run_scan", "make_run_scan",
+    "ScanRunOutput", "ScanSpec", "SegmentCarry", "SegmentOutput",
+    "jitted_run_scan", "jitted_segment_step", "make_run_scan",
+    "make_segment_step",
     "ClientClock", "ScheduleConfig", "VirtualClock", "deadline_epochs",
     "deadline_epochs_table", "make_client_clock", "round_duration_s",
     "straggler_epochs_table",

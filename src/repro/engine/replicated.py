@@ -11,13 +11,13 @@ Two fused paths live here:
     Python, keeping each replica's rng/key streams identical to a solo
     `run_federated(..., engine="batched")` run at the same seed.
 
-  * `run_replicated_scan` — the whole-run `lax.scan` program
-    (round_engine.make_run_scan) vmapped over the replica axis, selector
-    state included: a T-round, R-replica table is ONE dispatch total.
-    Replicas may differ in *strategy* as well as seed — the device
-    selectors share one state/ctx signature, so a `lax.switch` on a
-    per-replica strategy id lets a single executable serve a whole
-    strategies × seeds benchmark grid (DESIGN.md §11).
+  * `run_replicated_scan` — the whole-run `lax.scan` program vmapped over
+    the replica axis, selector state included: a T-round, R-replica table
+    is ONE dispatch per capability partition.  Replicas may differ in
+    *strategy* as well as seed — since PR-3 this delegates to
+    `repro.grid.run_grid` (DESIGN.md §12), which partitions the grid so
+    non-SV strategies skip GTG-Shapley, segments the scan for
+    checkpoint/resume, and shards the replica axis over local devices.
 
 Replicas may have different per-client capacities (each seed re-partitions
 its data); stacks are padded to the max capacity — padding is never read
@@ -34,11 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import tree_stack
-from repro.core.selection import selector_spec
-from repro.core.selection_jax import init_device_state, poc_d_schedule
-from repro.engine.round_engine import (
-    RoundSpec, jitted_round_step, jitted_run_scan,
-)
+from repro.engine.round_engine import RoundSpec, jitted_round_step
 from repro.engine.schedule import VirtualClock, round_duration_s
 from repro.federated.client import local_loss
 from repro.federated.compression import codec_nbytes
@@ -129,7 +125,7 @@ def run_replicated(cfg, seeds, data=None, model=None):
             sel = np.asarray(sel, np.int64)
             selections[i].append(sel)
             sel_rows.append(sel)
-            epoch_rows.append(round_epochs(cfg, s, sel))
+            epoch_rows.append(round_epochs(cfg, s, sel, t))
             key_rows.append(round_key)
             upload_bytes[i] += codec_bytes * len(sel)
             download_bytes[i] += model_bytes * len(sel)
@@ -186,79 +182,27 @@ def run_replicated(cfg, seeds, data=None, model=None):
 
 
 def run_replicated_scan(cfg, seeds, selectors: Optional[Sequence[str]] = None,
-                        data=None, model=None):
-    """Seeds × strategies, each a full T-round run, as ONE scan dispatch.
+                        data=None, model=None, **grid_kwargs):
+    """Seeds × strategies, each a full T-round run, fused on-device.
 
     `selectors=None` replicates `cfg.selector` across `seeds` (each replica
     reproduces a solo `run_federated(..., engine="scan")` at its seed).
     With a list of registry names the replica batch becomes the full
-    strategies × seeds grid dispatched through `lax.switch` on a traced
-    per-replica strategy id — one compilation, one executable, one
-    dispatch for the whole benchmark table.  Mixed batches run with
-    superset semantics (Shapley/local losses are computed if ANY strategy
-    needs them); non-SV replicas report shapley_evals = 0.
+    strategies × seeds grid.  Since PR-3 this is a thin wrapper over
+    `repro.grid.run_grid` (DESIGN.md §12): cells are partitioned by
+    capability, so FedAvg/random replicas of a mixed grid no longer pay
+    the GTG-Shapley superset cost — each partition is one scan dispatch
+    (per segment), and non-SV replicas report shapley_evals = 0.
+    `grid_kwargs` (rounds_per_segment, checkpoint_dir, shard, ...) pass
+    through to `run_grid`.
 
     Returns a flat list of FLResults in (selector-major, seed-minor) order.
     """
-    from repro.engine.scan_engine import (
-        build_epochs_table, make_scan_spec, results_from_scan,
-    )
-    from repro.federated.server import setup_run
+    from repro.grid import GridSpec, run_grid
 
-    t_start = time.time()
     seeds = list(seeds)
     if not seeds:
         raise ValueError("run_replicated_scan needs at least one seed")
-    names = list(selectors) if selectors else [cfg.selector]
-
-    rep_cfgs = [dataclasses.replace(cfg, selector=name, seed=s)
-                for name in names for s in seeds]
-    setups = [setup_run(c, data, model) for c in rep_cfgs]
-    model = setups[0].model
-
-    # one spec per strategy name (shared by its seeds); replica i dispatches
-    # through strategy_id = i // len(seeds)
-    specs = tuple(selector_spec(setups[j * len(seeds)].selector)
-                  for j in range(len(names)))
-    spec = make_scan_spec(cfg, specs)
-
-    cap = max(int(s.xs.shape[1]) for s in setups)
-    xs = jnp.asarray(np.stack([_pad_cap(np.asarray(s.xs), cap)
-                               for s in setups]))
-    ys = jnp.asarray(np.stack([_pad_cap(np.asarray(s.ys), cap)
-                               for s in setups]))
-    nv = jnp.asarray(np.stack([np.asarray(s.n_valid) for s in setups]))
-    sigma = jnp.asarray(np.stack([s.sigma_k_all for s in setups]))
-    x_val = jnp.asarray(np.stack([np.asarray(s.x_val) for s in setups]))
-    y_val = jnp.asarray(np.stack([np.asarray(s.y_val) for s in setups]))
-    x_test = jnp.asarray(np.stack([np.asarray(s.x_test) for s in setups]))
-    y_test = jnp.asarray(np.stack([np.asarray(s.y_test) for s in setups]))
-    fractions = jnp.asarray(np.stack([np.asarray(s.fractions, np.float32)
-                                      for s in setups]))
-    params = tree_stack([s.params for s in setups])
-    keys = jnp.stack([s.key for s in setups])
-
-    epochs_tables = jnp.asarray(np.stack([
-        build_epochs_table(c, s) for c, s in zip(rep_cfgs, setups)]))
-    d_scheds = jnp.asarray(np.stack([
-        poc_d_schedule(specs[i // len(seeds)], cfg.rounds)
-        for i in range(len(setups))]))
-    strategy_ids = jnp.asarray(
-        [i // len(seeds) for i in range(len(setups))], jnp.int32)
-    sel_states = tree_stack([
-        init_device_state(specs[i // len(seeds)], rep_cfgs[i].seed)
-        for i in range(len(setups))])
-
-    run = jitted_run_scan(model, cfg.client, spec, vmapped=True)
-    out = run(params, xs, ys, nv, sigma, x_val, y_val, x_test, y_test,
-              fractions, epochs_tables, d_scheds, strategy_ids, sel_states,
-              keys)
-
-    wall = time.time() - t_start
-    results = []
-    for i, (c, s) in enumerate(zip(rep_cfgs, setups)):
-        out_i = jax.tree.map(lambda x: x[i], out)
-        results.append(results_from_scan(
-            c, s, out_i, wall_time_s=wall, seed=c.seed, dispatches=1,
-            uses_shapley=specs[i // len(seeds)].uses_shapley))
-    return results
+    gspec = GridSpec.product(cfg, selectors=selectors, seeds=seeds)
+    out = run_grid(gspec, data=data, model=model, **grid_kwargs)
+    return out.results

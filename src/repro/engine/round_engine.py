@@ -140,11 +140,19 @@ class ScanSpec(NamedTuple):
     statically; longer tuples compile a `lax.switch` over strategies so one
     executable serves a mixed-strategy replica batch (all entries must
     share n_clients / m for shapes to agree).
+
+    `rounds_per_segment` (DESIGN.md §12) sets the trip count of ONE
+    compiled segment: 0 means the whole run (`rounds`) is a single scan;
+    K > 0 compiles a K-round segment whose carry is surfaced to the host
+    between dispatches so `repro.grid.segments` can checkpoint/resume.
+    `rounds` stays the run's TOTAL length either way — the eval cadence
+    and the final-round eval are defined against the global round index.
     """
     round: RoundSpec
     selectors: tuple            # tuple[SelectorSpec, ...]
-    rounds: int                 # T: scan length
+    rounds: int                 # T: total rounds of the run
     eval_every: int             # eval cadence (lax.cond inside the scan)
+    rounds_per_segment: int = 0  # K: segment scan length (0 = whole run)
 
 
 class ScanRunOutput(NamedTuple):
@@ -159,33 +167,40 @@ class ScanRunOutput(NamedTuple):
     val_loss: jax.Array         # (T,) NaN on non-eval rounds
 
 
-def make_run_scan(model: ClassifierModel, ccfg: ClientConfig,
-                  spec: ScanSpec) -> Callable[..., ScanRunOutput]:
-    """Build the traceable whole-run function: T rounds in ONE `lax.scan`.
+class SegmentCarry(NamedTuple):
+    """Everything a scan run threads between rounds — and therefore the
+    exact state that crosses a segment boundary (DESIGN.md §12).  A
+    checkpoint of this pytree (plus the global round index t0 of the next
+    segment) is sufficient to resume a killed run bit-identically."""
+    params: PyTree
+    sel_state: DeviceSelectorState
+    key: jax.Array              # typed PRNG key (per replica when vmapped)
 
-    Selection, the straggler E_k gather, local training, GTG-Shapley, the
-    valuation update, and the (cond-gated) eval all live inside the scan
-    body, so a full T-round run — strategy logic included — executes as a
-    single dispatch.  Per-round key-splitting matches the host engines
-    (`split(key, 3)` then `cohort_update`'s `split(round_key, M+1)`), so
-    selections are bit-identical to `engine="batched"` at the same seed.
 
-    Signature of the returned fn:
-        (params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
-         x_test, y_test, fractions, epochs_table, d_sched, strategy_id,
-         sel_state, key) -> ScanRunOutput
-    where epochs_table is (T, N) int32 (see engine.schedule tables),
-    d_sched is (T,) int32 Power-of-Choice candidate counts, and
-    strategy_id picks from spec.selectors (ignored when len == 1).
-    """
+class SegmentOutput(NamedTuple):
+    """One segment's carry-out plus its stacked (K, ...) round outputs."""
+    carry: SegmentCarry
+    selections: jax.Array       # (K, M) int32
+    epochs: jax.Array           # (K, M) int32
+    sv: jax.Array               # (K, M)
+    utility_evals: jax.Array    # (K,) int32
+    sv_truncated: jax.Array     # (K,) bool
+    test_acc: jax.Array         # (K,) NaN on non-eval rounds
+    val_loss: jax.Array         # (K,) NaN on non-eval rounds
+
+
+def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
+                    spec: ScanSpec):
+    """The shared per-round scan body: selection, training, GTG-Shapley,
+    valuation update, cond-gated eval.  `make_run_scan` (whole run) and
+    `make_segment_step` (K-round segment) scan the SAME body, which is
+    what makes segmented execution bit-identical to the fused run."""
     round_step = make_round_step(model, ccfg, spec.round)
     uses_losses = any(sp.uses_local_losses for sp in spec.selectors)
     n_clients = spec.selectors[0].n_clients
 
-    def run_scan(params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
-                 x_test, y_test, fractions, epochs_table, d_sched,
-                 strategy_id, sel_state, key) -> ScanRunOutput:
-
+    def bind(xs_all, ys_all, nv_all, sigma_all, x_val, y_val, x_test,
+             y_test, fractions, strategy_id):
         def body(carry, per_round):
             params, sstate, key = carry
             t, epochs_row, d_t = per_round
@@ -211,8 +226,8 @@ def make_run_scan(model: ClassifierModel, ccfg: ClientConfig,
                 out.sv if spec.round.needs_sv else None)
 
             # eval on cadence only: the predicate depends on nothing but t
-            # (unbatched under the seed vmap), so the cond survives as a
-            # real branch and off-rounds skip the eval entirely
+            # (unbatched under the seed vmap — t0 is shared), so the cond
+            # survives as a real branch and off-rounds skip the eval
             do_eval = jnp.logical_or((t + 1) % spec.eval_every == 0,
                                      t == spec.rounds - 1)
             nan = jnp.full((), jnp.nan, jnp.float32)
@@ -227,12 +242,78 @@ def make_run_scan(model: ClassifierModel, ccfg: ClientConfig,
                   out.sv_truncated, acc, vloss)
             return (out.params, sstate, key), ys
 
-        xs = (jnp.arange(spec.rounds), epochs_table, d_sched)
-        (params, sel_state, _), ys = jax.lax.scan(
-            body, (params, sel_state, key), xs)
+        return body
+
+    return bind
+
+
+def make_segment_step(model: ClassifierModel, ccfg: ClientConfig,
+                      spec: ScanSpec) -> Callable[..., SegmentOutput]:
+    """Build the traceable K-round segment: the carry-in/carry-out contract.
+
+    Signature of the returned fn:
+        (carry: SegmentCarry, t0, xs_all, ys_all, nv_all, sigma_all,
+         x_val, y_val, x_test, y_test, fractions, epochs_seg, d_seg,
+         strategy_id) -> SegmentOutput
+    where K = spec.rounds_per_segment (or spec.rounds when 0), t0 is the
+    () int32 GLOBAL index of the segment's first round, epochs_seg is
+    (K, N) int32 and d_seg (K,) int32 — the [t0, t0+K) slices of the
+    whole-run tables.  Chaining T/K segment calls from t0=0 reproduces
+    `make_run_scan` bit-for-bit: same body, same carry, same key stream.
+    """
+    k_rounds = spec.rounds_per_segment or spec.rounds
+    bind = _make_scan_body(model, ccfg, spec)
+
+    def segment_step(carry, t0, xs_all, ys_all, nv_all, sigma_all,
+                     x_val, y_val, x_test, y_test, fractions, epochs_seg,
+                     d_seg, strategy_id) -> SegmentOutput:
+        body = bind(xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
+                    x_test, y_test, fractions, strategy_id)
+        ts = t0 + jnp.arange(k_rounds)
+        (params, sstate, key), ys = jax.lax.scan(
+            body, (carry.params, carry.sel_state, carry.key),
+            (ts, epochs_seg, d_seg))
         sels, epochs, sv, evals, trunc, acc, vloss = ys
-        return ScanRunOutput(params, sel_state, sels, epochs, sv, evals,
-                             trunc, acc, vloss)
+        return SegmentOutput(SegmentCarry(params, sstate, key), sels,
+                             epochs, sv, evals, trunc, acc, vloss)
+
+    return segment_step
+
+
+def make_run_scan(model: ClassifierModel, ccfg: ClientConfig,
+                  spec: ScanSpec) -> Callable[..., ScanRunOutput]:
+    """Build the traceable whole-run function: T rounds in ONE `lax.scan`.
+
+    Selection, the straggler E_k gather, local training, GTG-Shapley, the
+    valuation update, and the (cond-gated) eval all live inside the scan
+    body, so a full T-round run — strategy logic included — executes as a
+    single dispatch.  Per-round key-splitting matches the host engines
+    (`split(key, 3)` then `cohort_update`'s `split(round_key, M+1)`), so
+    selections are bit-identical to `engine="batched"` at the same seed.
+
+    Signature of the returned fn:
+        (params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
+         x_test, y_test, fractions, epochs_table, d_sched, strategy_id,
+         sel_state, key) -> ScanRunOutput
+    where epochs_table is (T, N) int32 (see engine.schedule tables),
+    d_sched is (T,) int32 Power-of-Choice candidate counts, and
+    strategy_id picks from spec.selectors (ignored when len == 1).
+    """
+    whole = (spec if spec.rounds_per_segment in (0, spec.rounds)
+             else spec._replace(rounds_per_segment=0))
+    segment = make_segment_step(model, ccfg, whole)
+
+    def run_scan(params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
+                 x_test, y_test, fractions, epochs_table, d_sched,
+                 strategy_id, sel_state, key) -> ScanRunOutput:
+        out = segment(SegmentCarry(params, sel_state, key),
+                      jnp.asarray(0, jnp.int32), xs_all, ys_all, nv_all,
+                      sigma_all, x_val, y_val, x_test, y_test, fractions,
+                      epochs_table, d_sched, strategy_id)
+        return ScanRunOutput(out.carry.params, out.carry.sel_state,
+                             out.selections, out.epochs, out.sv,
+                             out.utility_evals, out.sv_truncated,
+                             out.test_acc, out.val_loss)
 
     return run_scan
 
@@ -243,6 +324,26 @@ def _jitted_run_scan_cached(model, ccfg, spec, donate, vmapped):
     if vmapped:
         fn = jax.vmap(fn)
     return jax.jit(fn, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=16)
+def _jitted_segment_step_cached(model, ccfg, spec, donate, vmapped):
+    fn = make_segment_step(model, ccfg, spec)
+    if vmapped:
+        # the carry and every operand are replica-stacked; only t0 (the
+        # global round offset) is shared, keeping the eval cond unbatched
+        fn = jax.vmap(fn, in_axes=(0, None) + (0,) * 12)
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def jitted_segment_step(model: ClassifierModel, ccfg: ClientConfig,
+                        spec: ScanSpec, *, vmapped: bool = False):
+    """Process-wide (bounded) cache of compiled K-round segment steps —
+    one executable serves every segment of every replica batch sharing
+    (model, client cfg, spec), so a T/K-segment run still pays exactly
+    one trace+compile and one dispatch per segment."""
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+    return _jitted_segment_step_cached(model, ccfg, spec, donate, vmapped)
 
 
 def jitted_run_scan(model: ClassifierModel, ccfg: ClientConfig,

@@ -46,10 +46,17 @@ PyTree = Any
 
 
 def build_epochs_table(cfg, s) -> np.ndarray:
-    """(T, N) int32 local-epoch budgets for every round of a scan run."""
+    """(T, N) int32 local-epoch budgets for every round of a scan run.
+
+    At straggler_rev >= 1 the random-straggler table was already drawn by
+    `setup_run` (same rng position, same values) and is shared with the
+    loop/batched engines — all three are stream-identical.  The lazy draw
+    below only serves the legacy straggler_rev=0 path."""
     e = cfg.client.epochs
     if s.clock is not None:
         return deadline_epochs_table(s.clock, cfg.schedule, cfg.rounds, e)
+    if s.epochs_table is not None:
+        return s.epochs_table
     if s.straggler_ids:
         return straggler_epochs_table(s.rng, cfg.rounds, cfg.n_clients,
                                       s.straggler_ids, e)

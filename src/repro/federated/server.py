@@ -66,6 +66,14 @@ class FLConfig:
     dirichlet_alpha: float = 1e-4
     straggler_frac: float = 0.0  # x
     privacy_sigma: float = 0.0   # sigma
+    # random-straggler E_k stream revision (DESIGN.md §12):
+    #   1 (default) — all engines draw the whole (T, N) budget table up
+    #     front (engine.schedule.straggler_epochs_table), so loop/batched/
+    #     scan are STREAM-identical under straggler_frac > 0;
+    #   0 — legacy: loop/batched lazily draw per selected straggler in
+    #     selection order (the paper-faithful stream the seed shipped
+    #     with); scan stays table-driven, distribution-identical only.
+    straggler_rev: int = 1
     # virtual-clock timing model; when set, E_k is deadline-derived and
     # straggler_frac is ignored (DESIGN.md §9)
     schedule: Optional[ScheduleConfig] = None
@@ -142,6 +150,9 @@ class RunSetup(NamedTuple):
     y_test: jax.Array
     model_bytes: int
     clock: Any                # engine.schedule.ClientClock | None
+    # (T, N) pre-drawn random-straggler budgets (straggler_rev >= 1 only;
+    # None under a schedule, without stragglers, or at straggler_rev=0)
+    epochs_table: Any = None
 
 
 def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
@@ -199,6 +210,18 @@ def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
         clock = make_client_clock(cfg.schedule, cfg.n_clients, model_bytes,
                                   rng, n_k=np.asarray(n_valid))
 
+    # ---- straggler_rev >= 1: pre-draw the (T, N) budget table -----------
+    # Drawn at the exact stream position where the scan engine used to
+    # draw it (first consumption of rng after setup), so rev=1 keeps the
+    # scan engine's tables bitwise unchanged while making loop/batched
+    # consume the SAME table — all three engines stream-identical.
+    epochs_table = None
+    if cfg.straggler_rev >= 1 and clock is None and straggler_ids:
+        from repro.engine.schedule import straggler_epochs_table
+        epochs_table = straggler_epochs_table(
+            rng, cfg.rounds, cfg.n_clients, straggler_ids,
+            cfg.client.epochs)
+
     return RunSetup(
         data=data, model=model, rng=rng, key=key, fractions=fractions,
         xs=xs, ys=ys, n_valid=n_valid, n_k_all=n_k_all,
@@ -206,20 +229,24 @@ def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
         selector=selector, state=state,
         x_val=jnp.asarray(data.x_val), y_val=jnp.asarray(data.y_val),
         x_test=jnp.asarray(data.x_test), y_test=jnp.asarray(data.y_test),
-        model_bytes=model_bytes, clock=clock,
+        model_bytes=model_bytes, clock=clock, epochs_table=epochs_table,
     )
 
 
-def round_epochs(cfg: FLConfig, s: RunSetup, sel: np.ndarray) -> np.ndarray:
-    """(M,) int32 local-epoch budget E_k for the selected cohort.
+def round_epochs(cfg: FLConfig, s: RunSetup, sel: np.ndarray,
+                 t: int = 0) -> np.ndarray:
+    """(M,) int32 local-epoch budget E_k for the selected cohort at round t.
 
-    Deadline-derived when a schedule is set (DESIGN.md §9); otherwise the
-    paper's random straggler draw, consumed from `s.rng` in selection order
-    (the legacy stream — identical across engines).
+    Deadline-derived when a schedule is set (DESIGN.md §9); otherwise a
+    gather from the pre-drawn (T, N) straggler table (straggler_rev >= 1,
+    stream-identical across all engines), falling back to the legacy
+    per-selection draw from `s.rng` at straggler_rev=0.
     """
     e = cfg.client.epochs
     if s.clock is not None:
         return deadline_epochs(s.clock, cfg.schedule, sel, e)
+    if s.epochs_table is not None:
+        return s.epochs_table[t][np.asarray(sel)].astype(np.int32)
     out = np.full(len(sel), e, np.int32)
     for i, k_id in enumerate(sel):
         if int(k_id) in s.straggler_ids:
@@ -293,7 +320,7 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
         sel, state = selector.select(state, sel_key, ctx)
         sel = np.asarray(sel, np.int64)
         selections.append(sel)
-        epochs_k = round_epochs(cfg, s, sel)
+        epochs_k = round_epochs(cfg, s, sel, t)
 
         sv_round = None
         if engine is not None:
@@ -381,20 +408,25 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
 def run_federated_replicated(cfg: FLConfig, seeds,
                              data: Optional[SynthDataset] = None,
                              model: Optional[ClassifierModel] = None,
-                             selectors=None) -> list[FLResult]:
+                             selectors=None, **grid_kwargs) -> list[FLResult]:
     """Run a replica batch with ONE fused program (repro.engine.replicated).
 
     With ``cfg.engine != "scan"`` and no `selectors`, this is the PR-1
     per-round vmap: the fused round step advances all seeds per dispatch
     (DESIGN.md §6).  With ``cfg.engine == "scan"`` (or a `selectors` list
     of registry names) the whole strategies × seeds table — selection and
-    valuation included — runs as a single `lax.scan` dispatch
-    (DESIGN.md §11); results come back selector-major, seed-minor.
+    valuation included — runs through `repro.grid.run_grid`
+    (DESIGN.md §12): one whole-run `lax.scan` dispatch per capability
+    partition, optionally segmented/checkpointed and replica-sharded via
+    keyword passthrough; results come back selector-major, seed-minor.
     """
     if cfg.engine == "scan" or selectors is not None:
         from repro.engine.replicated import run_replicated_scan
         return run_replicated_scan(cfg, seeds, selectors=selectors,
-                                   data=data, model=model)
+                                   data=data, model=model, **grid_kwargs)
+    if grid_kwargs:
+        raise ValueError("grid options (rounds_per_segment, "
+                         "checkpoint_dir, ...) require engine='scan'")
     from repro.engine.replicated import run_replicated
     return run_replicated(cfg, seeds, data=data, model=model)
 

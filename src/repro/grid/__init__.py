@@ -1,0 +1,23 @@
+"""repro.grid — the sharded, segmented, resumable experiment-grid runner.
+
+The paper's headline results are grids: every table sweeps strategies x
+seeds x heterogeneity/timing/privacy knobs under a fixed round budget.
+This package turns `run_replicated_scan`'s whole-run `lax.scan` from a
+benchmark trick into the production execution path for such grids
+(DESIGN.md §12):
+
+  * `spec`      — GridSpec/GridCell/GridResult: the declarative grid API;
+  * `partition` — replicas grouped by capability (needs_sv / local
+                  losses) so FedAvg-family cells stop paying GTG-Shapley
+                  superset cost;
+  * `segments`  — the scan-of-scans: one compiled K-round segment chained
+                  T/K times, carry checkpointed at every boundary for
+                  bit-identical resume;
+  * `shard`     — the replica axis placed on a mesh axis so grid memory
+                  scales with replicas / n_devices;
+  * `runner`    — `run_grid`, the single entry point.
+"""
+from repro.grid.runner import run_grid
+from repro.grid.spec import GridCell, GridResult, GridSpec
+
+__all__ = ["GridCell", "GridResult", "GridSpec", "run_grid"]

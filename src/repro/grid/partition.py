@@ -1,0 +1,101 @@
+"""Partitioned dispatch: group grid cells by execution capability.
+
+`run_replicated_scan`'s single mixed batch runs with superset semantics —
+GTG-Shapley (and Power-of-Choice local losses) are traced and executed
+for EVERY replica whenever ANY strategy needs them, so the FedAvg/random
+cells of a benchmark table pay the full Shapley cost for values they
+discard (ROADMAP "mixed-strategy superset cost").  Here cells are grouped
+by the capability pair `(uses_shapley, uses_local_losses)`: each group
+compiles its own executable whose RoundSpec only contains what the group
+needs, and per-group results are re-interleaved into grid order.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+from repro.core.selection_jax import SelectorSpec
+
+
+class PartitionKey(NamedTuple):
+    needs_sv: bool
+    uses_local_losses: bool
+
+    @property
+    def label(self) -> str:
+        if self.needs_sv:
+            return "sv"
+        return "losses" if self.uses_local_losses else "plain"
+
+
+class Partition(NamedTuple):
+    """One capability group of a grid, in replica-batch form."""
+    key: PartitionKey
+    cell_indices: tuple          # positions in the grid's flat cell order
+    specs: tuple                 # deduped SelectorSpecs (lax.switch table)
+    strategy_ids: tuple          # per replica: index into `specs`
+
+
+class PartitionReport(NamedTuple):
+    """Host-side execution evidence per partition (BENCH_grid.json)."""
+    label: str
+    cell_indices: tuple
+    needs_sv: bool
+    uses_local_losses: bool
+    n_strategies: int
+    dispatches: int              # segment dispatches issued (resume: fewer)
+    shapley_evals: int           # total utility evals across the partition
+    bytes_resident: int          # replica-stacked operand + carry bytes
+    flops_per_dispatch: float = float("nan")   # compiled cost, if available
+
+
+def partition_key(spec: SelectorSpec) -> PartitionKey:
+    return PartitionKey(bool(spec.uses_shapley),
+                        bool(spec.uses_local_losses))
+
+
+def partition_cells(specs: Sequence[SelectorSpec]) -> list:
+    """Group cell selector-specs into Partitions (stable order: first
+    appearance of each capability class; cells keep grid order within).
+
+    Identical SelectorSpecs share one switch branch, so a partition of R
+    seeds x one strategy dispatches statically (len(specs) == 1)."""
+    groups: dict = {}
+    order: list = []
+    for i, spec in enumerate(specs):
+        k = partition_key(spec)
+        if k not in groups:
+            groups[k] = []
+            order.append(k)
+        groups[k].append((i, spec))
+    parts = []
+    for k in order:
+        uniq: list = []
+        sids = []
+        for _, spec in groups[k]:
+            if spec not in uniq:
+                uniq.append(spec)
+            sids.append(uniq.index(spec))
+        parts.append(Partition(
+            key=k,
+            cell_indices=tuple(i for i, _ in groups[k]),
+            specs=tuple(uniq),
+            strategy_ids=tuple(sids)))
+    return parts
+
+
+def interleave(n_cells: int, partitions: Sequence[Partition],
+               per_partition: Sequence[list]) -> list:
+    """Scatter per-partition result lists back into grid cell order."""
+    out = [None] * n_cells
+    for part, results in zip(partitions, per_partition):
+        if len(part.cell_indices) != len(results):
+            raise ValueError(
+                f"partition {part.key.label!r} returned {len(results)} "
+                f"results for {len(part.cell_indices)} cells")
+        for idx, res in zip(part.cell_indices, results):
+            out[idx] = res
+    missing = [i for i, r in enumerate(out) if r is None]
+    if missing:
+        raise ValueError(f"grid cells {missing} were not covered by any "
+                         "partition")
+    return out

@@ -1,0 +1,198 @@
+"""run_grid — the experiment-grid executor (DESIGN.md §12).
+
+Pipeline: validate the GridSpec -> set up every cell (same rng/key
+streams as a solo run at that cell's config) -> partition cells by
+capability -> per partition, stack the replica operands, place them on
+the replica mesh, and drive the segmented scan -> rebuild per-cell
+FLResults and re-interleave them into grid order.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import tree_stack
+from repro.core.selection import selector_spec
+from repro.core.selection_jax import init_device_state, poc_d_schedule
+from repro.engine.round_engine import SegmentCarry
+from repro.grid.partition import (
+    Partition, PartitionReport, interleave, partition_cells,
+)
+from repro.grid.segments import ReplicaBatch, run_segments, segment_plan
+from repro.grid.spec import GridResult, GridSpec
+
+
+def _pad_cap(arr: np.ndarray, cap: int) -> np.ndarray:
+    """Zero-pad axis 1 (per-client capacity) of (N, cap_i, ...) to `cap`."""
+    if arr.shape[1] == cap:
+        return arr
+    widths = [(0, 0), (0, cap - arr.shape[1])] + [(0, 0)] * (arr.ndim - 2)
+    return np.pad(arr, widths)
+
+
+def _build_batch(part: Partition, cfgs, setups, sel_specs,
+                 rounds: int) -> ReplicaBatch:
+    """Stack one partition's cells along a leading replica axis.  Replicas
+    may have different per-client capacities (each seed re-partitions its
+    data); stacks pad to the partition max — padding is never read because
+    minibatch indices are sampled below each client's n_valid."""
+    from repro.engine.scan_engine import build_epochs_table
+
+    idxs = part.cell_indices
+    sub = [setups[i] for i in idxs]
+    cap = max(int(s.xs.shape[1]) for s in sub)
+    stack = np.stack
+    return ReplicaBatch(
+        carry=SegmentCarry(
+            params=tree_stack([s.params for s in sub]),
+            sel_state=tree_stack([
+                init_device_state(sel_specs[i], cfgs[i].seed)
+                for i in idxs]),
+            key=jnp.stack([s.key for s in sub])),
+        xs=jnp.asarray(stack([_pad_cap(np.asarray(s.xs), cap)
+                              for s in sub])),
+        ys=jnp.asarray(stack([_pad_cap(np.asarray(s.ys), cap)
+                              for s in sub])),
+        nv=jnp.asarray(stack([np.asarray(s.n_valid) for s in sub])),
+        sigma=jnp.asarray(stack([s.sigma_k_all for s in sub])),
+        x_val=jnp.asarray(stack([np.asarray(s.x_val) for s in sub])),
+        y_val=jnp.asarray(stack([np.asarray(s.y_val) for s in sub])),
+        x_test=jnp.asarray(stack([np.asarray(s.x_test) for s in sub])),
+        y_test=jnp.asarray(stack([np.asarray(s.y_test) for s in sub])),
+        fractions=jnp.asarray(stack([np.asarray(s.fractions, np.float32)
+                                     for s in sub])),
+        epochs_tables=jnp.asarray(stack([
+            build_epochs_table(cfgs[i], setups[i]) for i in idxs])),
+        d_scheds=jnp.asarray(stack([
+            poc_d_schedule(sel_specs[i], rounds) for i in idxs])),
+        strategy_ids=jnp.asarray(part.strategy_ids, jnp.int32),
+    )
+
+
+def _check_fingerprint(checkpoint_dir: str, spec: GridSpec,
+                       rounds_per_segment: int, resume: bool) -> None:
+    """Refuse to resume another grid's checkpoints: segment snapshots are
+    only distinguished by tree structure/shapes, so a config change that
+    keeps shapes (seeds, knobs, a same-capability selector swap) would
+    otherwise silently restore the previous experiment's results."""
+    import hashlib
+    import json
+    import os
+
+    fp = hashlib.sha256(repr(
+        (spec.base, spec.cells, rounds_per_segment)).encode()).hexdigest()
+    path = os.path.join(checkpoint_dir, "grid.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            saved = json.load(f).get("fingerprint")
+        if resume and saved != fp:
+            raise ValueError(
+                f"checkpoint_dir {checkpoint_dir!r} holds segments of a "
+                "DIFFERENT grid (config fingerprint mismatch); point the "
+                "run at a fresh directory or pass resume=False to "
+                "overwrite")
+    os.makedirs(checkpoint_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"fingerprint": fp}, f)
+
+
+def run_grid(spec: GridSpec, *, data=None, model=None,
+             rounds_per_segment: int = 0,
+             checkpoint_dir: Optional[str] = None, resume: bool = True,
+             shard: bool = True, max_segments: Optional[int] = None,
+             compile_stats: bool = False) -> Optional[GridResult]:
+    """Execute a grid.  Returns None if `max_segments` stopped the run
+    before completion (the checkpoints on disk are the resume point).
+
+    * `rounds_per_segment=K` chains T/K dispatches of one compiled
+      K-round segment per partition instead of a single whole-run scan —
+      bit-identical results, checkpointable at every boundary.
+    * `checkpoint_dir` snapshots each segment (carry + outputs); with
+      `resume=True` a rerun restores the checkpointed prefix and only
+      dispatches what is missing.
+    * `shard=True` places the replica axis on a 1-D device mesh
+      (repro.grid.shard) whenever >1 local device divides the partition's
+      replica count; with one device it is the plain vmap path.
+    * `data` may be one dataset (shared by every cell) or a sequence with
+      one dataset per cell (e.g. per-seed datasets of a benchmark table).
+    """
+    from repro.engine.scan_engine import make_scan_spec, results_from_scan
+    from repro.federated.server import setup_run
+    from repro.launch.mesh import make_replica_mesh
+
+    t_start = time.time()
+    cfgs = spec.validate()
+    segment_plan(spec.base.rounds, rounds_per_segment)  # fail fast
+    # a per-cell sequence is a plain list/tuple; SynthDataset itself is a
+    # NamedTuple (hence a tuple), so ``_fields`` distinguishes the two
+    if isinstance(data, (list, tuple)) and not hasattr(data, "_fields"):
+        if len(data) != len(cfgs):
+            raise ValueError(f"got {len(data)} datasets for "
+                             f"{len(cfgs)} grid cells")
+        cell_data = list(data)
+    else:
+        cell_data = [data] * len(cfgs)
+    setups = [setup_run(c, d, model) for c, d in zip(cfgs, cell_data)]
+    model = setups[0].model
+    sel_specs = [selector_spec(s.selector) for s in setups]
+    partitions = partition_cells(sel_specs)
+
+    if checkpoint_dir:
+        _check_fingerprint(checkpoint_dir, spec, rounds_per_segment,
+                           resume)
+
+    per_partition: list = []
+    reports: list = []
+    n_segments = 1
+    for pi, part in enumerate(partitions):
+        t_part = time.time()
+        scan_spec = make_scan_spec(
+            cfgs[part.cell_indices[0]], part.specs)._replace(
+                rounds_per_segment=rounds_per_segment)
+        batch = _build_batch(part, cfgs, setups, sel_specs,
+                             spec.base.rounds)
+        mesh = (make_replica_mesh(len(part.cell_indices))
+                if shard else None)
+        out, report = run_segments(
+            model, cfgs[part.cell_indices[0]].client, scan_spec, batch,
+            checkpoint_dir=checkpoint_dir, tag=f"p{pi}-", resume=resume,
+            max_segments=max_segments, mesh=mesh,
+            compile_stats=compile_stats)
+        if out is None:
+            return None
+        n_segments = report.n_segments
+        # the partition's cells ran fused: they share ITS duration (not
+        # the grid's running total, which would bill later partitions
+        # for earlier ones' work)
+        wall = time.time() - t_part
+        results = []
+        evals_total = 0
+        for j, idx in enumerate(part.cell_indices):
+            out_j = jax.tree.map(lambda x: x[j], out)
+            res = results_from_scan(
+                cfgs[idx], setups[idx], out_j, wall_time_s=wall,
+                seed=cfgs[idx].seed, dispatches=report.n_segments,
+                uses_shapley=part.key.needs_sv)
+            evals_total += res.shapley_evals
+            results.append(res)
+        per_partition.append(results)
+        reports.append(PartitionReport(
+            label=part.key.label, cell_indices=part.cell_indices,
+            needs_sv=part.key.needs_sv,
+            uses_local_losses=part.key.uses_local_losses,
+            n_strategies=len(part.specs), dispatches=report.dispatches,
+            shapley_evals=evals_total,
+            bytes_resident=report.bytes_resident,
+            flops_per_dispatch=report.flops_per_dispatch))
+
+    return GridResult(
+        spec=spec,
+        results=interleave(len(spec.cells), partitions, per_partition),
+        partitions=reports,
+        rounds_per_segment=rounds_per_segment,
+        n_segments=n_segments,
+        wall_time_s=time.time() - t_start)

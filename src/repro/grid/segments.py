@@ -1,0 +1,205 @@
+"""Segmented execution: one compiled K-round segment, chained T/K times.
+
+The whole-run scan returns only final state — a killed 400-round grid
+restarts from zero (ROADMAP "checkpoint/restart of scan runs").  The
+segment step (`round_engine.make_segment_step`) scans the SAME per-round
+body for K = `rounds_per_segment` rounds and surfaces the carry (params,
+selector state, rng key) to the host between dispatches, so:
+
+  * execution stays O(1) dispatch per segment (T/K dispatches per run,
+    ONE compiled executable reused across segments and across runs);
+  * `checkpoint/ckpt.py` snapshots the carry — and the segment's stacked
+    outputs — at every boundary;
+  * a killed run resumes from the last complete segment bit-identically:
+    the carry is the exact scan state, so selections, params, and the key
+    stream continue as if never interrupted.
+
+Chaining is bit-identical to the unsegmented scan because both scan the
+same body over the same (t, epochs_row, d) sequence — segmentation only
+changes where the host observes the carry.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import load_carry, save_carry
+from repro.engine.round_engine import (
+    ScanRunOutput, ScanSpec, SegmentCarry, jitted_segment_step,
+)
+
+PyTree = Any
+
+
+class ReplicaBatch(NamedTuple):
+    """A partition's replica-stacked scan operands (leading axis R)."""
+    carry: SegmentCarry          # stacked params / selector state / keys
+    xs: jax.Array                # (R, N, cap, ...)
+    ys: jax.Array
+    nv: jax.Array
+    sigma: jax.Array
+    x_val: jax.Array
+    y_val: jax.Array
+    x_test: jax.Array
+    y_test: jax.Array
+    fractions: jax.Array
+    epochs_tables: jax.Array     # (R, T, N) int32
+    d_scheds: jax.Array          # (R, T) int32
+    strategy_ids: jax.Array      # (R,) int32 index into the partition specs
+
+
+class SegmentRunReport(NamedTuple):
+    n_segments: int
+    dispatches: int              # segments dispatched by THIS call
+    resumed_segments: int        # segments restored from checkpoints
+    bytes_resident: int
+    flops_per_dispatch: float
+
+
+def segment_plan(rounds: int, rounds_per_segment: int) -> tuple[int, int]:
+    """(K, n_segments); K=0 means unsegmented.  K must divide T so every
+    segment reuses the one compiled executable."""
+    k = rounds_per_segment or rounds
+    if k <= 0 or rounds % k != 0:
+        raise ValueError(
+            f"rounds_per_segment={rounds_per_segment} must divide "
+            f"rounds={rounds} (one executable serves every segment)")
+    return k, rounds // k
+
+
+def batch_bytes(batch: ReplicaBatch) -> int:
+    """Device-resident bytes of the stacked operands + carry."""
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(batch)
+               if hasattr(x, "shape") and hasattr(x, "dtype"))
+
+
+def _out_like(spec: ScanSpec, n_replicas: int, k_rounds: int) -> dict:
+    m = spec.selectors[0].m
+    r, k = n_replicas, k_rounds
+    return {
+        "selections": np.zeros((r, k, m), np.int32),
+        "epochs": np.zeros((r, k, m), np.int32),
+        "sv": np.zeros((r, k, m), np.float32),
+        "utility_evals": np.zeros((r, k), np.int32),
+        "sv_truncated": np.zeros((r, k), bool),
+        "test_acc": np.zeros((r, k), np.float32),
+        "val_loss": np.zeros((r, k), np.float32),
+    }
+
+
+def _seg_path(checkpoint_dir: str, tag: str, seg: int) -> str:
+    return os.path.join(checkpoint_dir, f"{tag}seg{seg:04d}.npz")
+
+
+def saved_segments(checkpoint_dir: str, tag: str) -> int:
+    """Length of the contiguous checkpointed-segment prefix on disk."""
+    pat = re.compile(re.escape(tag) + r"seg(\d{4})\.npz$")
+    have = set()
+    for p in glob.glob(os.path.join(checkpoint_dir, f"{tag}seg*.npz")):
+        mt = pat.search(os.path.basename(p))
+        if mt:
+            have.add(int(mt.group(1)))
+    n = 0
+    while n in have:
+        n += 1
+    return n
+
+
+def _to_out_dict(out) -> dict:
+    return {
+        "selections": out.selections, "epochs": out.epochs, "sv": out.sv,
+        "utility_evals": out.utility_evals,
+        "sv_truncated": out.sv_truncated,
+        "test_acc": out.test_acc, "val_loss": out.val_loss,
+    }
+
+
+def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
+                 checkpoint_dir: Optional[str] = None, tag: str = "",
+                 resume: bool = True, max_segments: Optional[int] = None,
+                 mesh=None, compile_stats: bool = False
+                 ) -> tuple[Optional[ScanRunOutput], SegmentRunReport]:
+    """Drive one partition's replica batch through all T/K segments.
+
+    Returns (ScanRunOutput, report); the output is None when
+    `max_segments` stopped the run early (the checkpoint prefix on disk
+    is then the resume point — used by the kill/restart tests and by any
+    externally killed run).
+    """
+    k_rounds, n_segments = segment_plan(spec.rounds,
+                                        spec.rounds_per_segment)
+    n_replicas = int(batch.strategy_ids.shape[0])
+    seg_spec = spec._replace(rounds_per_segment=k_rounds)
+
+    if mesh is not None:
+        from repro.grid.shard import sharded_segment_step
+        step = sharded_segment_step(model, ccfg, seg_spec, mesh)
+    else:
+        step = jitted_segment_step(model, ccfg, seg_spec, vmapped=True)
+
+    carry = batch.carry
+    operands = (batch.xs, batch.ys, batch.nv, batch.sigma, batch.x_val,
+                batch.y_val, batch.x_test, batch.y_test, batch.fractions)
+
+    # ---- resume: restore the contiguous checkpointed prefix --------------
+    outs: list[dict] = []
+    start = 0
+    out_like = _out_like(seg_spec, n_replicas, k_rounds)
+    if checkpoint_dir and resume:
+        start = min(saved_segments(checkpoint_dir, tag), n_segments)
+        for seg in range(start):
+            snap = load_carry(_seg_path(checkpoint_dir, tag, seg),
+                              {"carry": carry, "out": out_like})
+            outs.append(snap["out"])
+            carry = snap["carry"]
+
+    flops = float("nan")
+    dispatched = 0
+    for seg in range(start, n_segments):
+        if max_segments is not None and dispatched >= max_segments:
+            return None, SegmentRunReport(
+                n_segments, dispatched, start, batch_bytes(batch), flops)
+        t0 = jnp.asarray(seg * k_rounds, jnp.int32)
+        sl = slice(seg * k_rounds, (seg + 1) * k_rounds)
+        args = (carry, t0, *operands, batch.epochs_tables[:, sl],
+                batch.d_scheds[:, sl], batch.strategy_ids)
+        if compile_stats and seg == start:
+            flops = _compiled_flops(step, args)
+        out = step(*args)
+        carry = out.carry
+        dispatched += 1
+        if checkpoint_dir:
+            save_carry(_seg_path(checkpoint_dir, tag, seg),
+                       {"carry": out.carry, "out": _to_out_dict(out)})
+        outs.append(_to_out_dict(out))
+
+    stacked = {k: jnp.concatenate([o[k] for o in outs], axis=1)
+               for k in outs[0]}
+    result = ScanRunOutput(
+        params=carry.params, sel_state=carry.sel_state,
+        selections=stacked["selections"], epochs=stacked["epochs"],
+        sv=stacked["sv"], utility_evals=stacked["utility_evals"],
+        sv_truncated=stacked["sv_truncated"],
+        test_acc=stacked["test_acc"], val_loss=stacked["val_loss"])
+    report = SegmentRunReport(n_segments, dispatched, start,
+                              batch_bytes(batch), flops)
+    return result, report
+
+
+def _compiled_flops(step, args) -> float:
+    """Compiled-cost evidence for BENCH_grid.json (best effort: the AOT
+    cost-analysis API varies across jax versions/backends)."""
+    try:
+        cost = step.lower(*args).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost.get("flops", float("nan")))
+    except Exception:
+        return float("nan")

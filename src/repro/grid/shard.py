@@ -1,0 +1,51 @@
+"""Sharded replicas: the grid's replica axis placed on a mesh axis.
+
+One scan program holds the full (R, N, cap, ...) client stacks plus the
+(R, T, M) outputs resident; replica batches multiply the PR-2 footprint,
+so "millions of users" grids need memory that scales with
+replicas / n_devices (ROADMAP "scan memory at paper scale").  Replicas
+are embarrassingly parallel — every operand of the vmapped segment step
+carries a leading replica axis and replicas never communicate — so a
+sharding-annotated jit over a 1-D replica mesh partitions everything:
+each device holds R / n_devices whole replicas, XLA inserts no
+collectives, and the executable is the same segment program placed
+`n_devices` times.  Only `t0` (the shared global round offset) stays
+replicated, which also keeps the in-scan eval cond a real branch.
+
+CI validates the path on the forced-host 8-device debug mesh
+(tests/test_grid.py, subprocess — the main pytest process must keep
+seeing one CPU device).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.engine.round_engine import ScanSpec, make_segment_step
+from repro.launch.mesh import REPLICA_AXIS, make_replica_mesh  # re-export
+
+__all__ = ["REPLICA_AXIS", "make_replica_mesh", "sharded_segment_step"]
+
+
+@functools.lru_cache(maxsize=8)
+def _sharded_segment_step_cached(model, ccfg, spec: ScanSpec, mesh):
+    fn = jax.vmap(make_segment_step(model, ccfg, spec),
+                  in_axes=(0, None) + (0,) * 12)
+    rep = NamedSharding(mesh, P(REPLICA_AXIS))   # leading-axis shard …
+    full = NamedSharding(mesh, P())              # … t0 stays replicated
+    # pytree-prefix shardings: one leaf sharding covers a whole operand
+    # subtree (carry pytree included)
+    in_shardings = (rep, full) + (rep,) * 12
+    return jax.jit(fn, in_shardings=in_shardings, out_shardings=rep)
+
+
+def sharded_segment_step(model, ccfg, spec: ScanSpec, mesh):
+    """Compiled segment step with every replica-stacked operand sharded
+    over `mesh`'s replica axis; cached like `jitted_segment_step` so all
+    segments (and repeat runs) share one executable."""
+    if mesh.shape[REPLICA_AXIS] <= 1:
+        from repro.engine.round_engine import jitted_segment_step
+        return jitted_segment_step(model, ccfg, spec, vmapped=True)
+    return _sharded_segment_step_cached(model, ccfg, spec, mesh)

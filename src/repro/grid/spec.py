@@ -1,0 +1,143 @@
+"""GridSpec/GridResult — the declarative experiment-grid API.
+
+A grid is a tuple of `(strategy, seed, knob-overrides)` cells over one
+base FLConfig.  Cells may vary anything that becomes a *per-replica
+operand* of the scan program (seed, selector, selector kwargs, Dirichlet
+alpha, straggler fraction, privacy sigma, timing schedule); everything
+that is baked into the trace as a static — shapes, round budget, client
+config, Shapley/codec settings, eval cadence — must be uniform, and
+`validate()` rejects mixed values with a precise error before anything
+compiles.  `repro.grid.runner.run_grid` is the executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
+
+import numpy as np
+
+# FLConfig fields that are compiled into the partition executable (shapes
+# or jit-static spec fields): every cell of a grid must agree on them.
+STATIC_FIELDS = (
+    "dataset", "n_clients", "m", "rounds", "client",
+    "n_train", "n_val", "n_test",
+    "shapley_eps", "shapley_max_iters", "shapley_impl", "upload_codec",
+)
+
+# ROADMAP "eval under the replica vmap": the in-scan eval is cond-gated on
+# the shared round index, so per-replica cadences cannot be honoured —
+# guarded here with a pinned message (tests/test_grid.py).
+EVAL_CADENCE_ERROR = (
+    "per-replica eval cadences are unsupported under the replica vmap: the "
+    "in-scan eval is lax.cond-gated on the shared round index, so every "
+    "grid cell must use the base config's eval_every"
+)
+
+
+def _freeze_overrides(ov) -> tuple:
+    if ov is None:
+        return ()
+    if isinstance(ov, Mapping):
+        items = ov.items()
+    else:
+        items = tuple(ov)
+    return tuple(sorted((str(k), v) for k, v in items))
+
+
+@dataclasses.dataclass(frozen=True)
+class GridCell:
+    """One grid cell: a strategy at a seed, plus FLConfig knob overrides."""
+    selector: str
+    seed: int
+    overrides: Any = ()          # mapping | items; frozen to sorted items
+
+    def __post_init__(self):
+        object.__setattr__(self, "overrides",
+                           _freeze_overrides(self.overrides))
+
+    def config(self, base):
+        """The cell's concrete FLConfig (engine pinned to 'scan')."""
+        kw = dict(self.overrides)
+        kw.update(selector=self.selector, seed=self.seed, engine="scan")
+        return dataclasses.replace(base, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """A declarative grid: base FLConfig + cells, validated before compile."""
+    base: Any                    # FLConfig
+    cells: tuple                 # tuple[GridCell, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "cells", tuple(self.cells))
+        if not self.cells:
+            raise ValueError("GridSpec needs at least one cell")
+
+    @staticmethod
+    def product(base, selectors: Optional[Sequence[str]] = None,
+                seeds: Sequence[int] = (0,),
+                overrides=None) -> "GridSpec":
+        """The benchmark-table grid: selectors x seeds (selector-major,
+        seed-minor — the `run_replicated_scan` result order), with one
+        shared overrides mapping applied to every cell."""
+        names = list(selectors) if selectors else [base.selector]
+        seeds = list(seeds)
+        if not seeds:
+            raise ValueError("GridSpec.product needs at least one seed")
+        return GridSpec(base, tuple(
+            GridCell(name, seed, overrides)
+            for name in names for seed in seeds))
+
+    def cell_configs(self) -> list:
+        return [cell.config(self.base) for cell in self.cells]
+
+    def validate(self) -> list:
+        """Check grid-wide static uniformity; returns the cell FLConfigs."""
+        cfgs = self.cell_configs()
+        for i, cfg in enumerate(cfgs):
+            if cfg.eval_every != self.base.eval_every:
+                raise ValueError(
+                    f"{EVAL_CADENCE_ERROR} (cell {i} requested "
+                    f"eval_every={cfg.eval_every}, base has "
+                    f"{self.base.eval_every})")
+            for f in STATIC_FIELDS:
+                if getattr(cfg, f) != getattr(self.base, f):
+                    raise ValueError(
+                        f"grid cells must agree on jit-static FLConfig "
+                        f"field {f!r}: cell {i} has {getattr(cfg, f)!r}, "
+                        f"base has {getattr(self.base, f)!r}")
+        return cfgs
+
+
+@dataclasses.dataclass
+class GridResult:
+    """Grid outputs in cell order, plus execution-shape bookkeeping."""
+    spec: GridSpec
+    results: list                # FLResult per cell, same order as cells
+    partitions: list             # repro.grid.partition.PartitionReport
+    rounds_per_segment: int
+    n_segments: int
+    wall_time_s: float
+
+    def cell(self, selector: str, seed: int):
+        """The FLResult of one (selector, seed) cell (first match)."""
+        for c, r in zip(self.spec.cells, self.results):
+            if c.selector == selector and c.seed == seed:
+                return r
+        raise KeyError(f"no grid cell ({selector!r}, seed={seed})")
+
+    def select(self, selector: str) -> list:
+        return [r for c, r in zip(self.spec.cells, self.results)
+                if c.selector == selector]
+
+    def acc_summary(self) -> dict:
+        """selector -> (mean, std) of final accuracy across its cells."""
+        out: dict = {}
+        for c, r in zip(self.spec.cells, self.results):
+            out.setdefault(c.selector, []).append(r.final_acc)
+        return {k: (float(np.mean(v)), float(np.std(v)))
+                for k, v in out.items()}
+
+    @property
+    def dispatches(self) -> int:
+        return sum(p.dispatches for p in self.partitions)

@@ -36,5 +36,24 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
 
 
+REPLICA_AXIS = "replicas"
+
+
+def make_replica_mesh(n_replicas: int, *, max_devices=None):
+    """1-D mesh for the grid runner's replica axis (repro.grid.shard).
+
+    Uses the largest device count that divides `n_replicas` so every
+    device holds whole replicas (replicas never communicate — no
+    collectives, no padding).  Returns None when only one device would be
+    used (the caller falls back to the unsharded vmap path)."""
+    devices = jax.devices()
+    limit = min(len(devices), max_devices or len(devices), n_replicas)
+    n = max((d for d in range(1, limit + 1) if n_replicas % d == 0),
+            default=1)
+    if n <= 1:
+        return None
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (REPLICA_AXIS,))
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)

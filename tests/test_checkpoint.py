@@ -28,6 +28,43 @@ def test_structure_mismatch_raises(tmp_path, key):
         load_pytree(path, {"b": jnp.zeros(3)})
 
 
+def test_segment_carry_roundtrip(tmp_path, key):
+    """A scan-segment carry — params + device selector state + typed rng
+    key — survives save/load bit-exactly (the resume contract of
+    DESIGN.md §12), including the typed-PRNG-key encode/decode."""
+    from repro.checkpoint.ckpt import load_carry, save_carry
+    from repro.core.selection_jax import (
+        init_device_state, make_selector_spec,
+    )
+    from repro.engine.round_engine import SegmentCarry
+
+    spec = make_selector_spec("greedyfed", n_clients=6, m=2)
+    state = init_device_state(spec, seed=3)
+    state = state._replace(
+        valuation=state.valuation._replace(
+            sv=jax.random.normal(key, (6,))))
+    carry = SegmentCarry(
+        params={"w": jax.random.normal(key, (4, 2)), "b": jnp.zeros(2)},
+        sel_state=state,
+        key=jax.random.split(jax.random.key(7), 3))
+    path = str(tmp_path / "carry.npz")
+    save_carry(path, carry)
+    out = load_carry(path, carry)
+    assert jax.dtypes.issubdtype(out.key.dtype, jax.dtypes.prng_key)
+    np.testing.assert_array_equal(jax.random.key_data(out.key),
+                                  jax.random.key_data(carry.key))
+    for a, b in zip(jax.tree.leaves(carry), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(a) if hasattr(a, "dtype")
+                       and jax.dtypes.issubdtype(a.dtype,
+                                                 jax.dtypes.prng_key)
+                       else a),
+            np.asarray(jax.random.key_data(b) if hasattr(b, "dtype")
+                       and jax.dtypes.issubdtype(b.dtype,
+                                                 jax.dtypes.prng_key)
+                       else b))
+
+
 def test_server_state_roundtrip(tmp_path, key):
     params = {"w": jax.random.normal(key, (3, 3))}
     path = str(tmp_path / "server.npz")

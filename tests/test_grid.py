@@ -1,0 +1,241 @@
+"""repro.grid: partitioned / segmented / resumable / sharded grid runner
+(DESIGN.md §12), plus the straggler-stream unification (straggler_rev)."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_federated
+from repro.grid import GridCell, GridSpec, run_grid
+from repro.grid.spec import EVAL_CADENCE_ERROR
+
+TINY = dict(n_clients=8, m=3, rounds=6, n_train=600, n_val=100, n_test=100,
+            eval_every=3,
+            client=ClientConfig(epochs=2, batches_per_epoch=2, batch_size=16))
+
+
+def _flat(params):
+    return np.concatenate([np.ravel(np.asarray(l))
+                           for l in jax.tree.leaves(params)])
+
+
+def _base(**kw):
+    kw = dict(selector="greedyfed", engine="scan", shapley_max_iters=10,
+              **TINY) | kw
+    return FLConfig(**kw)
+
+
+def _assert_bitwise(a, b):
+    assert len(a.selections) == len(b.selections)
+    for t, (sa, sb) in enumerate(zip(a.selections, b.selections)):
+        np.testing.assert_array_equal(sa, sb, err_msg=f"round {t}")
+    np.testing.assert_array_equal(_flat(a.params), _flat(b.params))
+
+
+# ------------------------------------------------------------------ spec --
+def test_eval_cadence_guard():
+    """ROADMAP 'eval under the replica vmap': per-replica cadences raise a
+    pinned, actionable error instead of silently mis-evaluating."""
+    spec = GridSpec(_base(), (GridCell("fedavg", 0),
+                              GridCell("fedavg", 1,
+                                       overrides={"eval_every": 2})))
+    with pytest.raises(ValueError,
+                       match="per-replica eval cadences are unsupported"):
+        run_grid(spec)
+    assert "replica vmap" in EVAL_CADENCE_ERROR
+
+
+def test_static_field_mismatch_rejected():
+    spec = GridSpec(_base(), (GridCell("fedavg", 0),
+                              GridCell("fedavg", 1,
+                                       overrides={"upload_codec": "quant8"})))
+    with pytest.raises(ValueError, match="jit-static FLConfig field"):
+        run_grid(spec)
+
+
+def test_segment_plan_must_divide():
+    with pytest.raises(ValueError, match="must divide"):
+        run_grid(GridSpec.product(_base(), seeds=(0,)),
+                 rounds_per_segment=4)   # 4 does not divide rounds=6
+
+
+# ------------------------------------------------------- partitioned grid --
+def test_partitioned_mixed_grid_matches_solo():
+    """A greedyfed+power_of_choice+fedavg grid splits into 3 capability
+    partitions; every cell still reproduces its solo scan run, results
+    come back in cell order, and the fedavg partition never computes SV."""
+    base = _base()
+    grid = run_grid(GridSpec.product(
+        base, selectors=["greedyfed", "power_of_choice", "fedavg"],
+        seeds=(0,)))
+    assert [p.label for p in grid.partitions] == ["sv", "losses", "plain"]
+    assert [r.config.selector for r in grid.results] == [
+        "greedyfed", "power_of_choice", "fedavg"]
+    for r in grid.results:
+        solo = run_federated(dataclasses.replace(
+            base, selector=r.config.selector))
+        _assert_bitwise(solo, r)
+        assert r.dispatches == 1
+    evals = {r.config.selector: r.shapley_evals for r in grid.results}
+    assert evals["greedyfed"] > 0
+    assert evals["power_of_choice"] == 0 and evals["fedavg"] == 0
+    sv, losses, plain = grid.partitions
+    assert sv.needs_sv and not plain.needs_sv
+    assert losses.uses_local_losses and not losses.needs_sv
+    assert plain.shapley_evals == 0
+
+
+def test_grid_knob_overrides_match_solo():
+    """Per-cell knob overrides (privacy sigma here) become per-replica
+    operands: each cell reproduces the solo run at its knob value."""
+    base = _base(selector="fedavg")
+    spec = GridSpec(base, (
+        GridCell("fedavg", 0),
+        GridCell("fedavg", 0, overrides={"privacy_sigma": 0.1})))
+    grid = run_grid(spec)
+    clean = run_federated(base)
+    noisy = run_federated(dataclasses.replace(base, privacy_sigma=0.1))
+    _assert_bitwise(clean, grid.results[0])
+    _assert_bitwise(noisy, grid.results[1])
+    assert not np.allclose(_flat(grid.results[0].params),
+                           _flat(grid.results[1].params))
+
+
+# -------------------------------------------------------- segmented scan --
+@pytest.mark.parametrize("k", [2, 3])
+def test_segmented_grid_bit_identical(k):
+    """Any K dividing T chains T/K dispatches of one compiled segment and
+    reproduces the unsegmented run bit-for-bit (selections, params, eval
+    history) — the acceptance contract of DESIGN.md §12."""
+    spec = GridSpec.product(_base(), selectors=["greedyfed", "fedavg"],
+                            seeds=(0,))
+    whole = run_grid(spec)
+    seg = run_grid(spec, rounds_per_segment=k)
+    assert seg.n_segments == TINY["rounds"] // k
+    for a, b in zip(whole.results, seg.results):
+        _assert_bitwise(a, b)
+        assert a.test_acc == b.test_acc
+        assert b.dispatches == seg.n_segments
+        assert a.shapley_evals == b.shapley_evals
+
+
+def test_kill_at_segment_boundary_resumes_bit_identical(tmp_path):
+    """max_segments simulates a kill after the first segment dispatch; the
+    rerun restores the checkpointed prefix and finishes bit-identically —
+    without re-dispatching the restored segments."""
+    spec = GridSpec.product(_base(), selectors=["greedyfed", "fedavg"],
+                            seeds=(0,))
+    ckpt = str(tmp_path)
+    whole = run_grid(spec)
+    partial = run_grid(spec, rounds_per_segment=2, checkpoint_dir=ckpt,
+                       max_segments=1)
+    assert partial is None                      # killed mid-run
+    assert any(f.endswith(".npz") for f in os.listdir(ckpt))
+    resumed = run_grid(spec, rounds_per_segment=2, checkpoint_dir=ckpt)
+    for a, b in zip(whole.results, resumed.results):
+        _assert_bitwise(a, b)
+        assert a.test_acc == b.test_acc
+    # the sv partition dispatched 1 segment pre-kill, so the resumed run
+    # only paid for what was missing
+    assert resumed.partitions[0].dispatches == resumed.n_segments - 1
+    # a DIFFERENT grid must not silently adopt these checkpoints (segment
+    # snapshots only differ by shapes, which a knob change preserves)
+    other = GridSpec.product(_base(privacy_sigma=0.1),
+                             selectors=["greedyfed", "fedavg"], seeds=(0,))
+    with pytest.raises(ValueError, match="DIFFERENT grid"):
+        run_grid(other, rounds_per_segment=2, checkpoint_dir=ckpt)
+
+
+# ------------------------------------------------- straggler stream parity --
+def test_straggler_stream_identical_across_engines():
+    """straggler_rev=1 (default) routes every engine through the pre-drawn
+    (T, N) table: loop, batched, and scan are now STREAM-identical under
+    straggler_frac > 0 (ROADMAP 'scan + random stragglers stream parity')."""
+    cfg = dict(TINY, selector="greedyfed", shapley_max_iters=10,
+               straggler_frac=0.5)
+    loop = run_federated(FLConfig(engine="loop", **cfg))
+    batched = run_federated(FLConfig(engine="batched", **cfg))
+    scan = run_federated(FLConfig(engine="scan", **cfg))
+    _assert_bitwise_allclose(loop, batched)
+    _assert_bitwise_allclose(loop, scan)
+    assert loop.shapley_evals == scan.shapley_evals
+
+
+def _assert_bitwise_allclose(a, b, atol=1e-5):
+    for t, (sa, sb) in enumerate(zip(a.selections, b.selections)):
+        np.testing.assert_array_equal(sa, sb, err_msg=f"round {t}")
+    np.testing.assert_allclose(_flat(a.params), _flat(b.params), atol=atol)
+
+
+def test_straggler_rev0_keeps_legacy_stream():
+    """The paper-faithful lazy per-selection draw survives behind
+    straggler_rev=0: loop and batched still agree with each other (same
+    host stream), budgets stay in U{1..E}, and the stream genuinely
+    differs from the rev=1 table path (distribution-level fork)."""
+    cfg = dict(TINY, selector="fedavg", straggler_frac=0.5)
+    legacy = run_federated(FLConfig(engine="loop", straggler_rev=0, **cfg))
+    legacy_b = run_federated(FLConfig(engine="batched", straggler_rev=0,
+                                      **cfg))
+    _assert_bitwise_allclose(legacy, legacy_b)
+    assert np.isfinite(_flat(legacy.params)).all()
+    rev1 = run_federated(FLConfig(engine="loop", **cfg))
+    for sa, sb in zip(legacy.selections, rev1.selections):
+        np.testing.assert_array_equal(sa, sb)   # selection keys unchanged
+    assert not np.array_equal(_flat(legacy.params), _flat(rev1.params))
+
+
+# ------------------------------------------------------- sharded replicas --
+def test_sharded_grid_on_debug_mesh():
+    """The replica axis shards over the forced-host 8-device debug mesh
+    (subprocess: the main pytest process must keep seeing 1 CPU device);
+    a 4-replica partition lands on 4 devices and matches the unsharded
+    run bit-for-bit on selections."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = """
+import numpy as np, jax
+assert len(jax.devices()) == 8
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig
+from repro.grid import GridSpec, run_grid
+from repro.launch.mesh import REPLICA_AXIS, make_replica_mesh
+base = FLConfig(selector="fedavg", engine="scan", n_clients=8, m=3,
+                rounds=4, n_train=400, n_val=80, n_test=80, eval_every=2,
+                client=ClientConfig(epochs=1, batches_per_epoch=2,
+                                    batch_size=16))
+mesh = make_replica_mesh(4)
+assert mesh is not None and mesh.shape[REPLICA_AXIS] == 4
+spec = GridSpec.product(base, seeds=(0, 1, 2, 3))
+sharded = run_grid(spec, rounds_per_segment=2, shard=True)
+plain = run_grid(spec, shard=False)
+def flat(p):
+    return np.concatenate([np.ravel(np.asarray(l))
+                           for l in jax.tree.leaves(p)])
+for a, b in zip(sharded.results, plain.results):
+    for sa, sb in zip(a.selections, b.selections):
+        np.testing.assert_array_equal(sa, sb)
+    np.testing.assert_allclose(flat(a.params), flat(b.params), atol=1e-6)
+print("SHARDED_GRID_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=src)
+    p = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "SHARDED_GRID_OK" in p.stdout, p.stdout + p.stderr
+
+
+# ------------------------------------------------------------- accessors --
+def test_grid_result_accessors():
+    spec = GridSpec.product(_base(selector="fedavg"), seeds=(0, 1))
+    grid = run_grid(spec)
+    assert grid.cell("fedavg", 1).config.seed == 1
+    assert len(grid.select("fedavg")) == 2
+    mean, std = grid.acc_summary()["fedavg"]
+    assert 0.0 <= mean <= 1.0 and std >= 0.0
+    with pytest.raises(KeyError):
+        grid.cell("ucb", 0)
