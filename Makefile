@@ -1,10 +1,17 @@
-.PHONY: check test bench-kernels bench-engine bench-smoke grid-smoke
+.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke
 
 check:
 	./scripts/check.sh
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# the parity contract in one command: host-vs-device selector parity plus
+# loop/batched/scan engine parity (selections bit-identical, params to
+# jit-fusion tolerance).  Opt into the check gate with
+# CHECK_PARITY=1 ./scripts/check.sh
+parity:
+	PYTHONPATH=src python -m pytest -x -q tests/test_selection.py tests/test_engine.py
 
 bench-kernels:
 	PYTHONPATH=src python -m benchmarks.run --only kernels

@@ -246,11 +246,13 @@ def run_grid_bench(*, full: bool = False,
     the replica mesh (4 of the forced-host 8 devices in CI), emitting
     BENCH_grid.json — per-partition dispatch counts and compiled-flops
     evidence that the non-SV partition no longer traces GTG-Shapley,
-    segment latency, and bytes resident per partition/device.
+    segment latency, bytes resident per partition/device, and a
+    mixed-`eval_every` grid row (DESIGN.md §13: per-cell cadences, still
+    one dispatch per partition per segment).
     """
     import jax
 
-    from repro.grid import GridSpec, run_grid
+    from repro.grid import GridCell, GridSpec, run_grid
 
     base_kw = BASE if full else SMOKE
     rounds, k = (8, 4) if full else (4, 2)
@@ -292,6 +294,19 @@ def run_grid_bench(*, full: bool = False,
                 f"per_device={bytes_total // max(shard_dev, 1)}"
                 f"_devices={n_dev}")
 
+    # mixed per-cell eval cadences (DESIGN.md §13): one partition, one
+    # dispatch per segment, every replica on its own eval curve
+    mixed = GridSpec(cfg, (
+        GridCell("fedavg", 0),                                 # base cadence
+        GridCell("fedavg", 0, overrides={"eval_every": 1}),    # every round
+        GridCell("fedavg", 1, overrides={"eval_every": rounds + 1})))
+    mg = run_grid(mixed, rounds_per_segment=k)
+    evals_per_cell = [len(r.test_acc) for r in mg.results]
+    mg_dispatches = sum(p.dispatches for p in mg.partitions)
+    rows.append(f"grid_mixed_eval_cadence,{mg_dispatches},"
+                f"cells={len(mixed.cells)}_evals_per_cell="
+                f"{'/'.join(map(str, evals_per_cell))}")
+
     sv = next(p for p in cold.partitions if p.needs_sv)
     plain = next(p for p in cold.partitions if not p.needs_sv)
     report = {
@@ -303,6 +318,13 @@ def run_grid_bench(*, full: bool = False,
                  "rounds": rounds, "rounds_per_segment": k,
                  "n_segments": n_segments},
         "partitions": parts,
+        "mixed_eval_cadence": {
+            "cells": len(mixed.cells),
+            "eval_every": [c.eval_every for c in mixed.cell_configs()],
+            "evals_per_cell": evals_per_cell,
+            "dispatches": mg_dispatches,
+            "n_segments": mg.n_segments,
+        },
         "segment_latency_us": seg_us,
         "bytes_resident_total": bytes_total,
         "bytes_resident_per_device": bytes_total // max(shard_dev, 1),

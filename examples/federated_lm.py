@@ -26,7 +26,10 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.aggregation import normalized_weights, tree_stack, weighted_average
-from repro.core.selection import SelectionContext, make_selector
+from repro.core.selection_jax import (
+    DeviceSelectionContext, device_select, device_update, init_device_state,
+    make_selector_spec, poc_d_schedule,
+)
 from repro.core.shapley import gtg_shapley
 from repro.models.lm import model as M
 
@@ -105,27 +108,39 @@ def main() -> None:
     def utility_fn(p):
         return -M.loss_fn(cfg, p, val_batch)
 
-    selector = make_selector(args.selector, args.clients, args.select, seed=0)
-    state = selector.init_state()
-    ctx = SelectionContext(data_fractions=jnp.ones(args.clients) / args.clients)
+    # the runtime selector stack (repro.core.selection_jax): a static spec
+    # plus a fixed-shape device state — the same pair every engine uses
+    spec = make_selector_spec(args.selector, args.clients, args.select)
+    state = init_device_state(spec, seed=0)
+    d_sched = poc_d_schedule(spec, args.rounds)
+    fractions = jnp.ones(args.clients) / args.clients
     n_k = jnp.ones(args.select)
 
     t0 = time.time()
     print("round,val_loss,selected")
     for t in range(args.rounds):
-        key, ks, kr = jax.random.split(key, 3)
-        sel, state = selector.select(state, ks, ctx)
+        key, ks, kl, kr = jax.random.split(key, 4)
+        losses = jnp.zeros(args.clients)
+        if spec.uses_local_losses:   # Power-of-Choice ranks by w^t loss
+            losses = jnp.stack([M.loss_fn(cfg, params, sample_batch(
+                streams[c], jax.random.fold_in(kl, c)))
+                for c in range(args.clients)])
+        ctx = DeviceSelectionContext(data_fractions=fractions,
+                                     local_losses=losses,
+                                     poc_d=jnp.asarray(d_sched[t]))
+        sel, state = device_select(spec, state, ks, ctx)
         updates = [client_update(params, streams[int(c)],
                                  jax.random.fold_in(kr, int(c)))
                    for c in sel]
         stacked = tree_stack(updates)
         sv_round = None
-        if selector.uses_shapley:
+        if spec.uses_shapley:
             sv_round, _ = gtg_shapley(stacked, n_k, params, utility_fn,
                                       jax.random.fold_in(kr, 999),
                                       max_iters=20)
         params = weighted_average(stacked, normalized_weights(n_k))
-        state = selector.update(state, np.asarray(sel), sv_round=sv_round)
+        state = device_update(spec, state, jnp.asarray(sel),
+                              sv_round=sv_round)
         if t % 5 == 0 or t == args.rounds - 1:
             vl = float(-utility_fn(params))
             print(f"{t},{vl:.4f},{list(map(int, sel))}")

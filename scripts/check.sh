@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the full pytest suite plus a kernel-bench smoke run.
 # Usage: scripts/check.sh  (or `make check`)
+#   CHECK_PARITY=1 scripts/check.sh  additionally runs the selector/engine
+#   parity suites as one command (`make parity`).
 #   CHECK_BENCH_SMOKE=1 scripts/check.sh  additionally runs the engine
 #   bench smoke and refreshes BENCH_selection.json (perf trajectory).
 set -euo pipefail
@@ -14,6 +16,12 @@ python -m pytest -x -q
 echo
 echo "== kernel bench smoke =="
 python -m benchmarks.run --only kernels
+
+if [[ "${CHECK_PARITY:-0}" == "1" ]]; then
+  echo
+  echo "== selector/engine parity =="
+  make parity
+fi
 
 if [[ "${CHECK_BENCH_SMOKE:-0}" == "1" ]]; then
   echo

@@ -1,4 +1,11 @@
-"""Client selection strategies — host-side reference implementations.
+"""Client selection strategies — the TESTS-ONLY host parity oracle.
+
+This module is NOT on any runtime path (DESIGN.md §13): every engine
+selects through `repro.core.selection_jax`, the single runtime selector
+implementation, and the only importer of this file is
+`tests/test_selection.py`.  The classes survive as an independently
+written reference whose per-round selections the device stack must
+reproduce bit-for-bit.
 
 Common interface (python-level orchestration; inner math is jnp):
 
@@ -7,15 +14,13 @@ Common interface (python-level orchestration; inner math is jnp):
     state = strategy.update(state, sel, sv_round=...)
 
 `ctx` is a SelectionContext carrying everything any strategy may need
-(data fractions, local losses of the current global model, ...) so the
-server loop is strategy-agnostic.
+(data fractions, local losses of the current global model, ...).
 
-These classes are the *parity oracle* for the device-resident selector
-stack (`repro.core.selection_jax`, used by the `engine="scan"` whole-run
-path): scores and sampling probabilities are computed with the shared jnp
-helpers and all top-M cuts use stable argsorts, so a host selector and its
-device twin produce bit-identical selections from the same key
-(tests/test_selection.py pins this for every registry entry).
+Parity mechanics: scores and sampling probabilities are computed with the
+shared jnp helpers of `selection_jax` and all top-M cuts use stable
+argsorts, so a host selector and its device twin produce bit-identical
+selections from the same key (tests/test_selection.py pins this for every
+registry entry x 2 seeds).
 
 Implemented strategies (paper Section IV baselines + ours):
   * RandomSelector           — FedAvg / FedProx uniform sampling
@@ -258,7 +263,8 @@ def make_selector(name: str, n_clients: int, m: int, seed: int = 0, **kw) -> Sel
     try:
         cls = SELECTORS[name]
     except KeyError:
-        raise ValueError(f"unknown selector {name!r}; options: {sorted(SELECTORS)}")
+        raise ValueError(f"unknown selector {name!r}; "
+                         f"options: {sorted(SELECTORS)}") from None
     return cls(n_clients=n_clients, m=m, seed=seed, **kw)
 
 

@@ -1,10 +1,10 @@
-"""Device-resident client selection — the pure-JAX selector stack.
+"""Device-resident client selection — THE runtime selector stack.
 
-The host selectors in `repro.core.selection` orchestrate per-round python
-(`np.argsort`, host RNG, a python `dict` of extras), so every round of a
-strategy-driven run pays a device→host→device sync and the whole-run
-`lax.scan` engine (DESIGN.md §11) cannot trace them.  This module is the
-same six strategies as fixed-shape, jittable pure functions:
+Every engine (`loop`, `batched`, `scan`, the replica vmaps, and the grid
+runner) selects through this module; the host classes in
+`repro.core.selection` survive only as the tests' parity oracle
+(DESIGN.md §13).  The six strategies are fixed-shape, jittable pure
+functions:
 
     spec  = make_selector_spec("greedyfed", n_clients=N, m=M)
     state = init_device_state(spec, seed)
@@ -119,17 +119,72 @@ def init_device_state(spec: SelectorSpec, seed: int = 0) -> DeviceSelectorState:
     )
 
 
+# Runtime strategy registry: canonical name -> accepted kwargs + defaults.
+# This is THE selector registry (the host classes in `core.selection` are a
+# tests-only parity oracle); `STRATEGY_ALIASES` maps the paper's baseline
+# names onto their canonical strategy.
+_STRATEGY_KWARGS = {
+    "random": {},
+    "power_of_choice": {"decay": 0.9, "d0": None},
+    "s_fedavg": {"beta": 0.5, "temperature": 1.0},
+    "ucb": {"c": 0.1},
+    "greedyfed": {"averaging": "mean", "alpha": 0.5},
+    "greedyfed_dropout": {"averaging": "mean", "alpha": 0.5,
+                          "drop_frac": 0.5},
+}
+STRATEGY_ALIASES = {
+    "fedavg": "random",
+    "fedprox": "random",   # the prox term lives in the client update
+}
+
+
+def strategy_names() -> list:
+    """Every accepted `make_selector_spec` name (aliases included)."""
+    return sorted(set(_STRATEGY_KWARGS) | set(STRATEGY_ALIASES))
+
+
 def make_selector_spec(name: str, n_clients: int, m: int,
                        **kw) -> SelectorSpec:
     """Build a SelectorSpec from a registry name + selector kwargs.
 
-    Accepts the same kwargs as `selection.make_selector` for each strategy
-    (PoC: decay/d0; S-FedAvg: beta/temperature; UCB: c; GreedyFed:
-    averaging/alpha; dropout: + drop_frac).
+    Accepts the same kwargs as the host oracle's `make_selector` for each
+    strategy (PoC: decay/d0; S-FedAvg: beta/temperature; UCB: c; GreedyFed:
+    averaging/alpha; dropout: + drop_frac), and the same registry names
+    ("fedavg"/"fedprox" alias the canonical "random").  Raises ValueError
+    listing the valid names on an unknown strategy.
     """
-    # one source of truth: construct the host selector and read its fields
-    from repro.core.selection import make_selector, selector_spec
-    return selector_spec(make_selector(name, n_clients, m, **kw))
+    canon = STRATEGY_ALIASES.get(name, name)
+    try:
+        accepted = _STRATEGY_KWARGS[canon]
+    except KeyError:
+        raise ValueError(f"unknown selector {name!r}; "
+                         f"options: {strategy_names()}") from None
+    bad = sorted(set(kw) - set(accepted))
+    if bad:
+        raise TypeError(f"selector {name!r} got unexpected kwargs {bad}; "
+                        f"accepts {sorted(accepted)}")
+    p = {**accepted, **kw}
+    # d0 resolves to n_clients for every strategy (the host oracle's
+    # None-means-N default), keeping specs comparable across factories
+    spec = SelectorSpec(name=canon, n_clients=n_clients, m=m, d0=n_clients)
+    if canon == "power_of_choice":
+        # resolve the None-means-N default here so an explicit d0=0
+        # (clamps to m every round) survives
+        d0 = p["d0"]
+        spec = spec._replace(decay=float(p["decay"]),
+                             d0=int(d0) if d0 is not None else n_clients)
+    elif canon == "s_fedavg":
+        spec = spec._replace(sv_mode="exponential",
+                             sv_alpha=float(p["beta"]),
+                             temperature=float(p["temperature"]))
+    elif canon == "ucb":
+        spec = spec._replace(c=float(p["c"]))
+    elif canon in ("greedyfed", "greedyfed_dropout"):
+        spec = spec._replace(sv_mode=str(p["averaging"]),
+                             sv_alpha=float(p["alpha"]))
+        if canon == "greedyfed_dropout":
+            spec = spec._replace(drop_frac=float(p["drop_frac"]))
+    return spec
 
 
 def poc_d_schedule(spec: SelectorSpec, rounds: int) -> np.ndarray:
@@ -292,6 +347,20 @@ def device_update(spec: SelectorSpec, state: DeviceSelectorState,
             initialised=val.initialised.at[sel].set(True),
         )
     return state._replace(valuation=val, round=state.round + 1)
+
+
+@functools.lru_cache(maxsize=64)
+def jitted_selector(spec: SelectorSpec):
+    """Compiled `(select, update)` pair for one spec, cached process-wide.
+
+    The host-driven engines (`engine="loop"`/`"batched"`, and the
+    per-round replica vmap) call selection once per round from python;
+    jitting per spec keeps every round after the first a single cached
+    executable launch instead of a retrace.
+    """
+    select = jax.jit(functools.partial(device_select, spec))
+    update = jax.jit(functools.partial(device_update, spec))
+    return select, update
 
 
 def device_select_any(specs: tuple[SelectorSpec, ...], strategy_id: jax.Array,

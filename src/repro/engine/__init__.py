@@ -16,7 +16,7 @@ from repro.engine.round_engine import (
 )
 from repro.engine.schedule import (
     ClientClock, ScheduleConfig, VirtualClock, deadline_epochs,
-    deadline_epochs_table, make_client_clock, round_duration_s,
+    deadline_epochs_table, eval_mask, make_client_clock, round_duration_s,
     straggler_epochs_table,
 )
 
@@ -27,6 +27,7 @@ __all__ = [
     "jitted_run_scan", "jitted_segment_step", "make_run_scan",
     "make_segment_step",
     "ClientClock", "ScheduleConfig", "VirtualClock", "deadline_epochs",
-    "deadline_epochs_table", "make_client_clock", "round_duration_s",
+    "deadline_epochs_table", "eval_mask", "make_client_clock",
+    "round_duration_s",
     "straggler_epochs_table",
 ]

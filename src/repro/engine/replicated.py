@@ -6,10 +6,10 @@ Two fused paths live here:
 
   * `run_replicated` — the PR-1 contract: the fused `round_step`
     (round_engine.py) is vmapped over a leading seed axis and jitted ONCE;
-    per round, a single dispatch advances all S replicas.  Host-side
-    strategy logic (selection, E_k draws, SV bookkeeping) stays per-seed
-    Python, keeping each replica's rng/key streams identical to a solo
-    `run_federated(..., engine="batched")` run at the same seed.
+    per round, a single dispatch advances all S replicas.  Strategy calls
+    (the `selection_jax` select/update pair, E_k draws) stay per-seed
+    host orchestration, keeping each replica's rng/key streams identical
+    to a solo `run_federated(..., engine="batched")` run at the same seed.
 
   * `run_replicated_scan` — the whole-run `lax.scan` program vmapped over
     the replica axis, selector state included: a T-round, R-replica table
@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core.aggregation import tree_stack
 from repro.engine.round_engine import RoundSpec, jitted_round_step
-from repro.engine.schedule import VirtualClock, round_duration_s
+from repro.engine.schedule import VirtualClock, eval_mask, round_duration_s
 from repro.federated.client import local_loss
 from repro.federated.compression import codec_nbytes
 
@@ -50,7 +50,9 @@ def _pad_cap(arr: np.ndarray, cap: int) -> np.ndarray:
 
 def run_replicated(cfg, seeds, data=None, model=None):
     """See `federated.server.run_federated_replicated` (the public alias)."""
-    from repro.core.selection import SelectionContext
+    from repro.core.selection_jax import (
+        DeviceSelectionContext, jitted_selector, poc_d_schedule,
+    )
     from repro.federated.server import (
         FLResult, round_epochs, setup_run,
     )
@@ -78,16 +80,21 @@ def run_replicated(cfg, seeds, data=None, model=None):
     y_test = jnp.asarray(np.stack([np.asarray(s.y_test) for s in setups]))
     params = tree_stack([s.params for s in setups])
     keys = [s.key for s in setups]
-    states = [s.state for s in setups]
+    states = [s.sel_state for s in setups]
 
-    needs_sv = setups[0].selector.uses_shapley
+    # one cfg replicated across seeds => one spec shared by every replica
+    sel_spec = setups[0].sel_spec
+    dev_select, dev_update = jitted_selector(sel_spec)
+    d_sched = poc_d_schedule(sel_spec, cfg.rounds)
+    emask = eval_mask(cfg.rounds, cfg.eval_every)
+    needs_sv = sel_spec.uses_shapley
     max_iters = cfg.shapley_max_iters or 50 * cfg.m
     spec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
                      shapley_eps=cfg.shapley_eps, shapley_max_iters=max_iters,
                      upload_codec=cfg.upload_codec)
     step_rep = jitted_round_step(model, cfg.client, spec, vmapped=True)
 
-    uses_losses = setups[0].selector.uses_local_losses
+    uses_losses = sel_spec.uses_local_losses
     losses_rep = jax.jit(jax.vmap(jax.vmap(
         lambda p, x, y, n: local_loss(model, p, x, y, n),
         in_axes=(None, 0, 0, 0))))
@@ -96,8 +103,8 @@ def run_replicated(cfg, seeds, data=None, model=None):
 
     codec_bytes = codec_nbytes(cfg.upload_codec, setups[0].params)
     model_bytes = setups[0].model_bytes
-    ctxs = [SelectionContext(data_fractions=jnp.asarray(s.fractions))
-            for s in setups]
+    fractions_rep = [jnp.asarray(s.fractions) for s in setups]
+    zero_losses = jnp.zeros((cfg.n_clients,), jnp.float32)
     vclocks = [VirtualClock() if s.clock is not None else None
                for s in setups]
 
@@ -118,11 +125,12 @@ def run_replicated(cfg, seeds, data=None, model=None):
             dispatches += 1
         for i, s in enumerate(setups):
             keys[i], sel_key, round_key = jax.random.split(keys[i], 3)
-            ctx = ctxs[i]
-            if uses_losses:
-                ctx = ctx._replace(local_losses=losses_all[i])
-            sel, states[i] = s.selector.select(states[i], sel_key, ctx)
-            sel = np.asarray(sel, np.int64)
+            ctx = DeviceSelectionContext(
+                data_fractions=fractions_rep[i],
+                local_losses=losses_all[i] if uses_losses else zero_losses,
+                poc_d=jnp.asarray(d_sched[t]))
+            sel_dev, states[i] = dev_select(states[i], sel_key, ctx)
+            sel = np.asarray(sel_dev, np.int64)
             selections[i].append(sel)
             sel_rows.append(sel)
             epoch_rows.append(round_epochs(cfg, s, sel, t))
@@ -143,14 +151,14 @@ def run_replicated(cfg, seeds, data=None, model=None):
 
         sv_rows = np.asarray(out.sv) if needs_sv else None
         evals_rows = np.asarray(out.utility_evals)
-        for i, s in enumerate(setups):
+        for i in range(n_seeds):
             sv_i = jnp.asarray(sv_rows[i]) if needs_sv else None
             if needs_sv:
                 total_evals[i] += int(evals_rows[i])
-            states[i] = s.selector.update(states[i], sel_rows[i],
-                                          sv_round=sv_i)
+            states[i] = dev_update(states[i], jnp.asarray(sel_rows[i]),
+                                   sv_i)
 
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+        if emask[t]:
             accs = np.asarray(eval_rep(params, x_test, y_test))
             vls = np.asarray(vloss_rep(params, x_val, y_val))
             dispatches += 2

@@ -145,13 +145,17 @@ class ScanSpec(NamedTuple):
     compiled segment: 0 means the whole run (`rounds`) is a single scan;
     K > 0 compiles a K-round segment whose carry is surfaced to the host
     between dispatches so `repro.grid.segments` can checkpoint/resume.
-    `rounds` stays the run's TOTAL length either way — the eval cadence
-    and the final-round eval are defined against the global round index.
+    `rounds` stays the run's TOTAL length either way.
+
+    The eval cadence is NOT part of the spec: evals are driven by the
+    precomputed `(T,)` bool table from `engine.schedule.eval_mask`
+    (DESIGN.md §13), passed as a scan operand — one executable serves
+    every cadence, and under the replica vmap the stacked `(R, T)` rows
+    give each replica its own per-cell cadence.
     """
     round: RoundSpec
     selectors: tuple            # tuple[SelectorSpec, ...]
     rounds: int                 # T: total rounds of the run
-    eval_every: int             # eval cadence (lax.cond inside the scan)
     rounds_per_segment: int = 0  # K: segment scan length (0 = whole run)
 
 
@@ -165,6 +169,7 @@ class ScanRunOutput(NamedTuple):
     sv_truncated: jax.Array     # (T,) bool
     test_acc: jax.Array         # (T,) NaN on non-eval rounds
     val_loss: jax.Array         # (T,) NaN on non-eval rounds
+    eval_count: jax.Array       # () int32 evals THIS replica performed
 
 
 class SegmentCarry(NamedTuple):
@@ -175,6 +180,11 @@ class SegmentCarry(NamedTuple):
     params: PyTree
     sel_state: DeviceSelectorState
     key: jax.Array              # typed PRNG key (per replica when vmapped)
+    # per-replica eval-slot counter (DESIGN.md §13): how many eval slots
+    # this replica has filled so far — under the replica vmap the shared
+    # eval round runs for everyone, so the counter (not the round index)
+    # is the replica's position in ITS own eval curve
+    eval_slot: jax.Array        # () int32
 
 
 class SegmentOutput(NamedTuple):
@@ -202,8 +212,8 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
     def bind(xs_all, ys_all, nv_all, sigma_all, x_val, y_val, x_test,
              y_test, fractions, strategy_id):
         def body(carry, per_round):
-            params, sstate, key = carry
-            t, epochs_row, d_t = per_round
+            params, sstate, key, eval_slot = carry
+            t, epochs_row, d_t, do_any, do_mine = per_round
             key, sel_key, round_key = jax.random.split(key, 3)
 
             if uses_losses:   # Power-of-Choice ranks clients by w^t loss
@@ -225,22 +235,26 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
                 spec.selectors, strategy_id, sstate, sel,
                 out.sv if spec.round.needs_sv else None)
 
-            # eval on cadence only: the predicate depends on nothing but t
-            # (unbatched under the seed vmap — t0 is shared), so the cond
-            # survives as a real branch and off-rounds skip the eval
-            do_eval = jnp.logical_or((t + 1) % spec.eval_every == 0,
-                                     t == spec.rounds - 1)
+            # table-driven eval (DESIGN.md §13): `do_any` is the OR of the
+            # replicas' eval-mask rows and reaches the trace UNBATCHED, so
+            # the cond survives the replica vmap as a real branch — the
+            # round evaluates only where some replica's mask is set;
+            # `do_mine` (this replica's row) masks out the writes of
+            # replicas whose own cadence is off this round
             nan = jnp.full((), jnp.nan, jnp.float32)
             acc, vloss = jax.lax.cond(
-                do_eval,
+                do_any,
                 lambda p: (model.accuracy(p, x_test, y_test),
                            model.loss(p, x_val, y_val)),
                 lambda p: (nan, nan),
                 out.params)
+            acc = jnp.where(do_mine, acc, nan)
+            vloss = jnp.where(do_mine, vloss, nan)
+            eval_slot = eval_slot + do_mine.astype(jnp.int32)
 
             ys = (sel, epochs_k, out.sv, out.utility_evals,
                   out.sv_truncated, acc, vloss)
-            return (out.params, sstate, key), ys
+            return (out.params, sstate, key, eval_slot), ys
 
         return body
 
@@ -252,30 +266,36 @@ def make_segment_step(model: ClassifierModel, ccfg: ClientConfig,
     """Build the traceable K-round segment: the carry-in/carry-out contract.
 
     Signature of the returned fn:
-        (carry: SegmentCarry, t0, xs_all, ys_all, nv_all, sigma_all,
-         x_val, y_val, x_test, y_test, fractions, epochs_seg, d_seg,
-         strategy_id) -> SegmentOutput
+        (carry: SegmentCarry, t0, eval_any_seg, xs_all, ys_all, nv_all,
+         sigma_all, x_val, y_val, x_test, y_test, fractions, epochs_seg,
+         d_seg, eval_seg, strategy_id) -> SegmentOutput
     where K = spec.rounds_per_segment (or spec.rounds when 0), t0 is the
     () int32 GLOBAL index of the segment's first round, epochs_seg is
-    (K, N) int32 and d_seg (K,) int32 — the [t0, t0+K) slices of the
-    whole-run tables.  Chaining T/K segment calls from t0=0 reproduces
-    `make_run_scan` bit-for-bit: same body, same carry, same key stream.
+    (K, N) int32, d_seg (K,) int32, and eval_seg (K,) bool — the
+    [t0, t0+K) slices of the whole-run tables (`schedule.eval_mask`).
+    `eval_any_seg` is the (K,) bool OR of ALL replicas' eval rows and,
+    like t0, stays UNBATCHED under the replica vmap so the in-scan eval
+    cond remains a real branch.  Chaining T/K segment calls from t0=0
+    reproduces `make_run_scan` bit-for-bit: same body, same carry, same
+    key stream.
     """
     k_rounds = spec.rounds_per_segment or spec.rounds
     bind = _make_scan_body(model, ccfg, spec)
 
-    def segment_step(carry, t0, xs_all, ys_all, nv_all, sigma_all,
-                     x_val, y_val, x_test, y_test, fractions, epochs_seg,
-                     d_seg, strategy_id) -> SegmentOutput:
+    def segment_step(carry, t0, eval_any_seg, xs_all, ys_all, nv_all,
+                     sigma_all, x_val, y_val, x_test, y_test, fractions,
+                     epochs_seg, d_seg, eval_seg,
+                     strategy_id) -> SegmentOutput:
         body = bind(xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
                     x_test, y_test, fractions, strategy_id)
         ts = t0 + jnp.arange(k_rounds)
-        (params, sstate, key), ys = jax.lax.scan(
-            body, (carry.params, carry.sel_state, carry.key),
-            (ts, epochs_seg, d_seg))
+        (params, sstate, key, eval_slot), ys = jax.lax.scan(
+            body, (carry.params, carry.sel_state, carry.key,
+                   carry.eval_slot),
+            (ts, epochs_seg, d_seg, eval_any_seg, eval_seg))
         sels, epochs, sv, evals, trunc, acc, vloss = ys
-        return SegmentOutput(SegmentCarry(params, sstate, key), sels,
-                             epochs, sv, evals, trunc, acc, vloss)
+        return SegmentOutput(SegmentCarry(params, sstate, key, eval_slot),
+                             sels, epochs, sv, evals, trunc, acc, vloss)
 
     return segment_step
 
@@ -293,11 +313,12 @@ def make_run_scan(model: ClassifierModel, ccfg: ClientConfig,
 
     Signature of the returned fn:
         (params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
-         x_test, y_test, fractions, epochs_table, d_sched, strategy_id,
-         sel_state, key) -> ScanRunOutput
+         x_test, y_test, fractions, epochs_table, d_sched, eval_table,
+         strategy_id, sel_state, key) -> ScanRunOutput
     where epochs_table is (T, N) int32 (see engine.schedule tables),
-    d_sched is (T,) int32 Power-of-Choice candidate counts, and
-    strategy_id picks from spec.selectors (ignored when len == 1).
+    d_sched is (T,) int32 Power-of-Choice candidate counts, eval_table is
+    the (T,) bool `schedule.eval_mask` row, and strategy_id picks from
+    spec.selectors (ignored when len == 1).
     """
     whole = (spec if spec.rounds_per_segment in (0, spec.rounds)
              else spec._replace(rounds_per_segment=0))
@@ -305,15 +326,18 @@ def make_run_scan(model: ClassifierModel, ccfg: ClientConfig,
 
     def run_scan(params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
                  x_test, y_test, fractions, epochs_table, d_sched,
-                 strategy_id, sel_state, key) -> ScanRunOutput:
-        out = segment(SegmentCarry(params, sel_state, key),
-                      jnp.asarray(0, jnp.int32), xs_all, ys_all, nv_all,
-                      sigma_all, x_val, y_val, x_test, y_test, fractions,
-                      epochs_table, d_sched, strategy_id)
+                 eval_table, strategy_id, sel_state, key) -> ScanRunOutput:
+        carry = SegmentCarry(params, sel_state, key,
+                             jnp.zeros((), jnp.int32))
+        out = segment(carry, jnp.asarray(0, jnp.int32), eval_table,
+                      xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
+                      x_test, y_test, fractions, epochs_table, d_sched,
+                      eval_table, strategy_id)
         return ScanRunOutput(out.carry.params, out.carry.sel_state,
                              out.selections, out.epochs, out.sv,
                              out.utility_evals, out.sv_truncated,
-                             out.test_acc, out.val_loss)
+                             out.test_acc, out.val_loss,
+                             out.carry.eval_slot)
 
     return run_scan
 
@@ -331,8 +355,9 @@ def _jitted_segment_step_cached(model, ccfg, spec, donate, vmapped):
     fn = make_segment_step(model, ccfg, spec)
     if vmapped:
         # the carry and every operand are replica-stacked; only t0 (the
-        # global round offset) is shared, keeping the eval cond unbatched
-        fn = jax.vmap(fn, in_axes=(0, None) + (0,) * 12)
+        # global round offset) and eval_any_seg (the OR of the replicas'
+        # eval rows) are shared, keeping the eval cond unbatched
+        fn = jax.vmap(fn, in_axes=(0, None, None) + (0,) * 13)
     return jax.jit(fn, donate_argnums=donate)
 
 

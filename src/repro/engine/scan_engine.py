@@ -33,11 +33,10 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.selection import selector_spec
-from repro.core.selection_jax import init_device_state, poc_d_schedule
+from repro.core.selection_jax import poc_d_schedule
 from repro.engine.round_engine import RoundSpec, ScanSpec, jitted_run_scan
 from repro.engine.schedule import (
-    VirtualClock, deadline_epochs_table, round_duration_s,
+    VirtualClock, deadline_epochs_table, eval_mask, round_duration_s,
     straggler_epochs_table,
 )
 from repro.federated.compression import codec_nbytes
@@ -73,8 +72,10 @@ def make_scan_spec(cfg, selector_specs: tuple) -> ScanSpec:
                       shapley_eps=cfg.shapley_eps,
                       shapley_max_iters=max_iters,
                       upload_codec=cfg.upload_codec)
+    # eval_every is NOT in the spec: the cadence is a (T,) bool operand
+    # (schedule.eval_mask), so one executable serves every cadence
     return ScanSpec(round=rspec, selectors=tuple(selector_specs),
-                    rounds=cfg.rounds, eval_every=cfg.eval_every)
+                    rounds=cfg.rounds)
 
 
 def results_from_scan(cfg, s, out, *, wall_time_s: float, seed: int,
@@ -99,11 +100,21 @@ def results_from_scan(cfg, s, out, *, wall_time_s: float, seed: int,
 
     acc = np.asarray(out.test_acc)
     vloss = np.asarray(out.val_loss)
+    emask = eval_mask(cfg.rounds, cfg.eval_every)
+    # the in-scan eval-slot counter (SegmentCarry.eval_slot) must agree
+    # with the host-side mask the curve is rebuilt from — a mismatch means
+    # the replica ran a different cadence than this cell's config says
+    # (e.g. a mis-stacked eval table under the replica vmap)
+    n_evals = int(np.asarray(out.eval_count))
+    if n_evals != int(emask.sum()):
+        raise RuntimeError(
+            f"eval-slot counter recorded {n_evals} in-scan evals but the "
+            f"cell's eval mask (rounds={cfg.rounds}, "
+            f"eval_every={cfg.eval_every}) expects {int(emask.sum())}")
     test_acc, val_loss_hist = [], []
-    for t in range(cfg.rounds):
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            test_acc.append((t + 1, float(acc[t])))
-            val_loss_hist.append((t + 1, float(vloss[t])))
+    for t in np.flatnonzero(emask):
+        test_acc.append((int(t) + 1, float(acc[t])))
+        val_loss_hist.append((int(t) + 1, float(vloss[t])))
 
     total_evals = int(np.asarray(out.utility_evals).sum()) if uses_shapley else 0
     final_cfg = cfg if cfg.seed == seed else dataclasses.replace(cfg, seed=seed)
@@ -132,18 +143,18 @@ def run_federated_scan(cfg, s, t_start: float):
     consumed match the other engines, so the scan starts from identical
     partitions, params, and selector order.
     """
-    spec_sel = selector_spec(s.selector)
+    spec_sel = s.sel_spec
     spec = make_scan_spec(cfg, (spec_sel,))
 
     epochs_table = jnp.asarray(build_epochs_table(cfg, s))
     d_sched = jnp.asarray(poc_d_schedule(spec_sel, cfg.rounds))
-    sel_state = init_device_state(spec_sel, cfg.seed)
+    eval_table = jnp.asarray(eval_mask(cfg.rounds, cfg.eval_every))
 
     run = jitted_run_scan(s.model, cfg.client, spec)
     out = run(s.params, s.xs, s.ys, s.n_valid, jnp.asarray(s.sigma_k_all),
               s.x_val, s.y_val, s.x_test, s.y_test,
-              jnp.asarray(s.fractions), epochs_table, d_sched,
-              jnp.asarray(0, jnp.int32), sel_state, s.key)
+              jnp.asarray(s.fractions), epochs_table, d_sched, eval_table,
+              jnp.asarray(0, jnp.int32), s.sel_state, s.key)
 
     return results_from_scan(cfg, s, out,
                              wall_time_s=time.time() - t_start,

@@ -114,6 +114,24 @@ def deadline_epochs_table(clock: ClientClock, scfg: ScheduleConfig,
     return np.tile(row, (rounds, 1))
 
 
+def eval_mask(rounds: int, eval_every: int) -> np.ndarray:
+    """(T,) bool eval table: evaluate after round t iff the mask is set.
+
+    THE single definition of the eval cadence (DESIGN.md §13): round t
+    evaluates when ``(t + 1) % eval_every == 0``, and the final round
+    always evaluates — so ``eval_every > rounds`` yields exactly one eval.
+    Every engine consumes this table instead of re-deriving the predicate;
+    under the replica vmap the stacked ``(R, T)`` rows give each replica
+    its own cadence.
+    """
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every}")
+    mask = (np.arange(1, rounds + 1) % eval_every) == 0
+    if rounds > 0:
+        mask[-1] = True
+    return mask
+
+
 def straggler_epochs_table(rng: np.random.Generator, rounds: int,
                            n_clients: int, straggler_ids, max_epochs: int
                            ) -> np.ndarray:

@@ -3,9 +3,11 @@
 One function, `run_federated`, drives T communication rounds:
   select clients -> ClientUpdate at each -> ModelAverage -> GTG-Shapley
   -> cumulative-SV update -> next round.
-Strategy behaviour is fully encapsulated in the selector object, so FedAvg /
-FedProx / Power-of-Choice / S-FedAvg / UCB / GreedyFed all share this loop
-(the paper's experimental protocol).
+Strategy behaviour is fully encapsulated in a `SelectorSpec` + device
+selector state (`repro.core.selection_jax` — the single runtime selector
+implementation, DESIGN.md §13), so FedAvg / FedProx / Power-of-Choice /
+S-FedAvg / UCB / GreedyFed all share this loop (the paper's experimental
+protocol).
 
 Round execution is pluggable (``cfg.engine``, DESIGN.md §6, §11):
   * "loop"    — the paper-faithful per-client Python loop (M dispatches per
@@ -34,12 +36,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import normalized_weights, tree_stack, weighted_average
-from repro.core.selection import SelectionContext, make_selector
+from repro.core.selection_jax import (
+    DeviceSelectionContext, DeviceSelectorState, SelectorSpec,
+    init_device_state, jitted_selector, make_selector_spec, poc_d_schedule,
+)
 from repro.core.shapley import gtg_shapley
 from repro.data.synth import SynthDataset, make_dataset
 from repro.engine.schedule import (
-    ScheduleConfig, VirtualClock, deadline_epochs, make_client_clock,
-    round_duration_s,
+    ScheduleConfig, VirtualClock, deadline_epochs, eval_mask,
+    make_client_clock, round_duration_s,
 )
 from repro.federated.client import ClientConfig, client_update, local_loss
 from repro.federated.compression import compress_update
@@ -142,8 +147,8 @@ class RunSetup(NamedTuple):
     straggler_ids: set
     sigma_k_all: np.ndarray
     params: PyTree
-    selector: Any
-    state: Any
+    sel_spec: SelectorSpec               # the run's selection strategy
+    sel_state: DeviceSelectorState       # its initial device state
     x_val: jax.Array
     y_val: jax.Array
     x_test: jax.Array
@@ -191,15 +196,16 @@ def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
     key, init_key = jax.random.split(key)
     params = model.init(init_key)
     # sv_averaging/sv_alpha reach GreedyFed-family selectors through the
-    # constructor (explicit selector_kwargs win) — never by mutating the
-    # selector after construction
+    # spec (explicit selector_kwargs win) — never by mutating state after
+    # construction.  selection_jax is the single runtime implementation
+    # (DESIGN.md §13); neither call consumes the run's rng/key streams.
     sel_kwargs = dict(cfg.selector_kwargs)
     if cfg.selector in ("greedyfed", "greedyfed_dropout"):
         sel_kwargs.setdefault("averaging", cfg.sv_averaging)
         sel_kwargs.setdefault("alpha", cfg.sv_alpha)
-    selector = make_selector(cfg.selector, cfg.n_clients, cfg.m,
-                             seed=cfg.seed, **sel_kwargs)
-    state = selector.init_state()
+    sel_spec = make_selector_spec(cfg.selector, cfg.n_clients, cfg.m,
+                                  **sel_kwargs)
+    sel_state = init_device_state(sel_spec, cfg.seed)
 
     model_bytes = sum(int(x.size) * x.dtype.itemsize
                       for x in jax.tree.leaves(params))
@@ -226,7 +232,7 @@ def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
         data=data, model=model, rng=rng, key=key, fractions=fractions,
         xs=xs, ys=ys, n_valid=n_valid, n_k_all=n_k_all,
         straggler_ids=straggler_ids, sigma_k_all=sigma_k_all, params=params,
-        selector=selector, state=state,
+        sel_spec=sel_spec, sel_state=sel_state,
         x_val=jnp.asarray(data.x_val), y_val=jnp.asarray(data.y_val),
         x_test=jnp.asarray(data.x_test), y_test=jnp.asarray(data.y_test),
         model_bytes=model_bytes, clock=clock, epochs_table=epochs_table,
@@ -274,8 +280,9 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
     if cfg.engine == "scan":
         from repro.engine.scan_engine import run_federated_scan
         return run_federated_scan(cfg, s, t_start)
-    model, params, state, key = s.model, s.params, s.state, s.key
-    selector = s.selector
+    model, params, key = s.model, s.params, s.key
+    sel_spec, sstate = s.sel_spec, s.sel_state
+    dev_select, dev_update = jitted_selector(sel_spec)
 
     def utility_fn(p):  # U(w) = -L(w; D_val)
         return -model.loss(p, s.x_val, s.y_val)
@@ -285,7 +292,7 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
         from repro.core.shapley_batched import make_batched_mlp_utility
         batched_utility_fn = make_batched_mlp_utility(model, s.x_val, s.y_val)
 
-    needs_sv = selector.uses_shapley
+    needs_sv = sel_spec.uses_shapley
     max_iters = cfg.shapley_max_iters or 50 * cfg.m
 
     engine = None
@@ -300,7 +307,10 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
 
     eval_acc = jax.jit(model.accuracy)
 
-    ctx_base = SelectionContext(data_fractions=jnp.asarray(s.fractions))
+    fractions = jnp.asarray(s.fractions)
+    zero_losses = jnp.zeros((cfg.n_clients,), jnp.float32)
+    d_sched = poc_d_schedule(sel_spec, cfg.rounds)
+    emask = eval_mask(cfg.rounds, cfg.eval_every)
 
     test_acc, val_loss_hist, selections = [], [], []
     total_evals = 0
@@ -311,14 +321,16 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
     for t in range(cfg.rounds):
         key, sel_key, round_key = jax.random.split(key, 3)
 
-        ctx = ctx_base
-        if selector.uses_local_losses:
-            ctx = ctx._replace(
-                local_losses=all_losses_fn(params, s.xs, s.ys, s.n_valid))
+        losses = zero_losses
+        if sel_spec.uses_local_losses:
+            losses = all_losses_fn(params, s.xs, s.ys, s.n_valid)
             dispatches += 1
 
-        sel, state = selector.select(state, sel_key, ctx)
-        sel = np.asarray(sel, np.int64)
+        ctx = DeviceSelectionContext(data_fractions=fractions,
+                                     local_losses=losses,
+                                     poc_d=jnp.asarray(d_sched[t]))
+        sel_dev, sstate = dev_select(sstate, sel_key, ctx)
+        sel = np.asarray(sel_dev, np.int64)
         selections.append(sel)
         epochs_k = round_epochs(cfg, s, sel, t)
 
@@ -377,22 +389,22 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
             vclock.advance(round_duration_s(s.clock, cfg.schedule, sel,
                                             epochs_k))
 
-        state = selector.update(state, sel, sv_round=sv_round)
+        sstate = dev_update(sstate, sel_dev, sv_round)
 
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+        if emask[t]:
             acc = float(eval_acc(params, s.x_test, s.y_test))
             vl = float(-utility_fn(params))
             test_acc.append((t + 1, acc))
             val_loss_hist.append((t + 1, vl))
             dispatches += 2
 
-    counts = np.asarray(state.valuation.counts)
+    counts = np.asarray(sstate.valuation.counts)
     return FLResult(
         config=cfg,
         test_acc=test_acc,
         val_loss=val_loss_hist,
         final_acc=test_acc[-1][1] if test_acc else float("nan"),
-        sv_final=np.asarray(state.valuation.sv),
+        sv_final=np.asarray(sstate.valuation.sv),
         selection_counts=counts,
         selections=selections,
         shapley_evals=total_evals,
@@ -450,12 +462,13 @@ def run_centralized(cfg: FLConfig, data: Optional[SynthDataset] = None,
     test_acc = []
     eval_acc = jax.jit(model.accuracy)
     x_test, y_test = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    emask = eval_mask(cfg.rounds, cfg.eval_every)
     for t in range(cfg.rounds):
         key, k = jax.random.split(key)
         params = client_update(model, cfg.client, params, x, y, n,
                                jnp.asarray(cfg.client.epochs),
                                jnp.asarray(0.0), k)
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+        if emask[t]:
             test_acc.append((t + 1, float(eval_acc(params, x_test, y_test))))
     return FLResult(cfg, test_acc, [], test_acc[-1][1], np.zeros(cfg.n_clients),
                     np.zeros(cfg.n_clients, np.int32), [], 0,

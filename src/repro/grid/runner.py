@@ -16,9 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import tree_stack
-from repro.core.selection import selector_spec
-from repro.core.selection_jax import init_device_state, poc_d_schedule
+from repro.core.selection_jax import poc_d_schedule
 from repro.engine.round_engine import SegmentCarry
+from repro.engine.schedule import eval_mask
 from repro.grid.partition import (
     Partition, PartitionReport, interleave, partition_cells,
 )
@@ -49,10 +49,9 @@ def _build_batch(part: Partition, cfgs, setups, sel_specs,
     return ReplicaBatch(
         carry=SegmentCarry(
             params=tree_stack([s.params for s in sub]),
-            sel_state=tree_stack([
-                init_device_state(sel_specs[i], cfgs[i].seed)
-                for i in idxs]),
-            key=jnp.stack([s.key for s in sub])),
+            sel_state=tree_stack([s.sel_state for s in sub]),
+            key=jnp.stack([s.key for s in sub]),
+            eval_slot=jnp.zeros((len(sub),), jnp.int32)),
         xs=jnp.asarray(stack([_pad_cap(np.asarray(s.xs), cap)
                               for s in sub])),
         ys=jnp.asarray(stack([_pad_cap(np.asarray(s.ys), cap)
@@ -69,8 +68,18 @@ def _build_batch(part: Partition, cfgs, setups, sel_specs,
             build_epochs_table(cfgs[i], setups[i]) for i in idxs])),
         d_scheds=jnp.asarray(stack([
             poc_d_schedule(sel_specs[i], rounds) for i in idxs])),
+        eval_masks=jnp.asarray(stack([
+            eval_mask(rounds, cfgs[i].eval_every) for i in idxs])),
         strategy_ids=jnp.asarray(part.strategy_ids, jnp.int32),
     )
+
+
+# Revision of the segment-snapshot layout (the SegmentCarry pytree): bump
+# whenever the carry structure changes so stale checkpoint dirs fail with
+# an actionable version-skew error instead of an opaque structure
+# mismatch from load_pytree.  1 = PR-3 (params, sel_state, key);
+# 2 = + eval_slot (DESIGN.md §13).
+CARRY_FORMAT = 2
 
 
 def _check_fingerprint(checkpoint_dir: str, spec: GridSpec,
@@ -88,8 +97,15 @@ def _check_fingerprint(checkpoint_dir: str, spec: GridSpec,
     path = os.path.join(checkpoint_dir, "grid.json")
     if os.path.exists(path):
         with open(path) as f:
-            saved = json.load(f).get("fingerprint")
-        if resume and saved != fp:
+            saved = json.load(f)
+        if resume and saved.get("carry_format", 1) != CARRY_FORMAT:
+            raise ValueError(
+                f"checkpoint_dir {checkpoint_dir!r} holds segments in "
+                f"carry format {saved.get('carry_format', 1)} but this "
+                f"version writes format {CARRY_FORMAT} (the SegmentCarry "
+                "layout changed); the snapshots cannot be resumed — "
+                "point the run at a fresh directory")
+        if resume and saved.get("fingerprint") != fp:
             raise ValueError(
                 f"checkpoint_dir {checkpoint_dir!r} holds segments of a "
                 "DIFFERENT grid (config fingerprint mismatch); point the "
@@ -97,7 +113,7 @@ def _check_fingerprint(checkpoint_dir: str, spec: GridSpec,
                 "overwrite")
     os.makedirs(checkpoint_dir, exist_ok=True)
     with open(path, "w") as f:
-        json.dump({"fingerprint": fp}, f)
+        json.dump({"fingerprint": fp, "carry_format": CARRY_FORMAT}, f)
 
 
 def run_grid(spec: GridSpec, *, data=None, model=None,
@@ -138,7 +154,7 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
         cell_data = [data] * len(cfgs)
     setups = [setup_run(c, d, model) for c, d in zip(cfgs, cell_data)]
     model = setups[0].model
-    sel_specs = [selector_spec(s.selector) for s in setups]
+    sel_specs = [s.sel_spec for s in setups]
     partitions = partition_cells(sel_specs)
 
     if checkpoint_dir:

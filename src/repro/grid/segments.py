@@ -51,6 +51,7 @@ class ReplicaBatch(NamedTuple):
     fractions: jax.Array
     epochs_tables: jax.Array     # (R, T, N) int32
     d_scheds: jax.Array          # (R, T) int32
+    eval_masks: jax.Array        # (R, T) bool per-replica eval cadences
     strategy_ids: jax.Array      # (R,) int32 index into the partition specs
 
 
@@ -147,6 +148,9 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
     carry = batch.carry
     operands = (batch.xs, batch.ys, batch.nv, batch.sigma, batch.x_val,
                 batch.y_val, batch.x_test, batch.y_test, batch.fractions)
+    # the in-scan eval cond fires where ANY replica's mask is set; the OR
+    # row stays unbatched under the vmap so the cond remains a real branch
+    eval_any = jnp.asarray(np.asarray(batch.eval_masks).any(axis=0))
 
     # ---- resume: restore the contiguous checkpointed prefix --------------
     outs: list[dict] = []
@@ -168,8 +172,9 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
                 n_segments, dispatched, start, batch_bytes(batch), flops)
         t0 = jnp.asarray(seg * k_rounds, jnp.int32)
         sl = slice(seg * k_rounds, (seg + 1) * k_rounds)
-        args = (carry, t0, *operands, batch.epochs_tables[:, sl],
-                batch.d_scheds[:, sl], batch.strategy_ids)
+        args = (carry, t0, eval_any[sl], *operands,
+                batch.epochs_tables[:, sl], batch.d_scheds[:, sl],
+                batch.eval_masks[:, sl], batch.strategy_ids)
         if compile_stats and seg == start:
             flops = _compiled_flops(step, args)
         out = step(*args)
@@ -187,7 +192,8 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
         selections=stacked["selections"], epochs=stacked["epochs"],
         sv=stacked["sv"], utility_evals=stacked["utility_evals"],
         sv_truncated=stacked["sv_truncated"],
-        test_acc=stacked["test_acc"], val_loss=stacked["val_loss"])
+        test_acc=stacked["test_acc"], val_loss=stacked["val_loss"],
+        eval_count=carry.eval_slot)
     report = SegmentRunReport(n_segments, dispatched, start,
                               batch_bytes(batch), flops)
     return result, report

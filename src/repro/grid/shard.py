@@ -9,8 +9,9 @@ carries a leading replica axis and replicas never communicate — so a
 sharding-annotated jit over a 1-D replica mesh partitions everything:
 each device holds R / n_devices whole replicas, XLA inserts no
 collectives, and the executable is the same segment program placed
-`n_devices` times.  Only `t0` (the shared global round offset) stays
-replicated, which also keeps the in-scan eval cond a real branch.
+`n_devices` times.  Only `t0` (the shared global round offset) and
+`eval_any_seg` (the OR of the replicas' eval-mask rows, DESIGN.md §13)
+stay replicated, which also keeps the in-scan eval cond a real branch.
 
 CI validates the path on the forced-host 8-device debug mesh
 (tests/test_grid.py, subprocess — the main pytest process must keep
@@ -32,12 +33,12 @@ __all__ = ["REPLICA_AXIS", "make_replica_mesh", "sharded_segment_step"]
 @functools.lru_cache(maxsize=8)
 def _sharded_segment_step_cached(model, ccfg, spec: ScanSpec, mesh):
     fn = jax.vmap(make_segment_step(model, ccfg, spec),
-                  in_axes=(0, None) + (0,) * 12)
+                  in_axes=(0, None, None) + (0,) * 13)
     rep = NamedSharding(mesh, P(REPLICA_AXIS))   # leading-axis shard …
-    full = NamedSharding(mesh, P())              # … t0 stays replicated
+    full = NamedSharding(mesh, P())              # … t0 / eval_any replicated
     # pytree-prefix shardings: one leaf sharding covers a whole operand
     # subtree (carry pytree included)
-    in_shardings = (rep, full) + (rep,) * 12
+    in_shardings = (rep, full, full) + (rep,) * 13
     return jax.jit(fn, in_shardings=in_shardings, out_shardings=rep)
 
 

@@ -3,9 +3,10 @@
 A grid is a tuple of `(strategy, seed, knob-overrides)` cells over one
 base FLConfig.  Cells may vary anything that becomes a *per-replica
 operand* of the scan program (seed, selector, selector kwargs, Dirichlet
-alpha, straggler fraction, privacy sigma, timing schedule); everything
-that is baked into the trace as a static — shapes, round budget, client
-config, Shapley/codec settings, eval cadence — must be uniform, and
+alpha, straggler fraction, privacy sigma, timing schedule, and — since
+the eval-mask table of DESIGN.md §13 — the eval cadence `eval_every`);
+everything that is baked into the trace as a static — shapes, round
+budget, client config, Shapley/codec settings — must be uniform, and
 `validate()` rejects mixed values with a precise error before anything
 compiles.  `repro.grid.runner.run_grid` is the executor.
 """
@@ -23,16 +24,6 @@ STATIC_FIELDS = (
     "n_train", "n_val", "n_test",
     "shapley_eps", "shapley_max_iters", "shapley_impl", "upload_codec",
 )
-
-# ROADMAP "eval under the replica vmap": the in-scan eval is cond-gated on
-# the shared round index, so per-replica cadences cannot be honoured —
-# guarded here with a pinned message (tests/test_grid.py).
-EVAL_CADENCE_ERROR = (
-    "per-replica eval cadences are unsupported under the replica vmap: the "
-    "in-scan eval is lax.cond-gated on the shared round index, so every "
-    "grid cell must use the base config's eval_every"
-)
-
 
 def _freeze_overrides(ov) -> tuple:
     if ov is None:
@@ -95,11 +86,6 @@ class GridSpec:
         """Check grid-wide static uniformity; returns the cell FLConfigs."""
         cfgs = self.cell_configs()
         for i, cfg in enumerate(cfgs):
-            if cfg.eval_every != self.base.eval_every:
-                raise ValueError(
-                    f"{EVAL_CADENCE_ERROR} (cell {i} requested "
-                    f"eval_every={cfg.eval_every}, base has "
-                    f"{self.base.eval_every})")
             for f in STATIC_FIELDS:
                 if getattr(cfg, f) != getattr(self.base, f):
                     raise ValueError(

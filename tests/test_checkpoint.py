@@ -46,7 +46,8 @@ def test_segment_carry_roundtrip(tmp_path, key):
     carry = SegmentCarry(
         params={"w": jax.random.normal(key, (4, 2)), "b": jnp.zeros(2)},
         sel_state=state,
-        key=jax.random.split(jax.random.key(7), 3))
+        key=jax.random.split(jax.random.key(7), 3),
+        eval_slot=jnp.asarray(2, jnp.int32))
     path = str(tmp_path / "carry.npz")
     save_carry(path, carry)
     out = load_carry(path, carry)

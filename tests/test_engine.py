@@ -121,16 +121,12 @@ def test_scan_engine_random_stragglers():
 def test_device_selected_round_fuses_selection():
     """sim.device_selected_round: select → gather → train → aggregate in
     one jitted program, with selection counts bumped on-device."""
-    from repro.core.selection import selector_spec
-    from repro.core.selection_jax import (
-        DeviceSelectionContext, init_device_state,
-    )
+    from repro.core.selection_jax import DeviceSelectionContext
     from repro.federated.sim import device_selected_round
 
     cfg = FLConfig(selector="fedavg", **TINY)
     s = setup_run(cfg)
-    spec = selector_spec(s.selector)
-    state = init_device_state(spec, cfg.seed)
+    spec, state = s.sel_spec, s.sel_state
     ctx = DeviceSelectionContext(
         data_fractions=jnp.asarray(s.fractions),
         local_losses=jnp.zeros(cfg.n_clients, jnp.float32),
@@ -149,6 +145,40 @@ def test_device_selected_round_fuses_selection():
 
 
 # ---------------------------------------------------------------- schedule --
+def test_eval_mask_table():
+    """schedule.eval_mask is THE eval-cadence definition: cadence multiples
+    plus the final round, deduped — eval_every > rounds still yields
+    exactly one eval (the final round)."""
+    from repro.engine.schedule import eval_mask
+
+    np.testing.assert_array_equal(
+        eval_mask(6, 3), [False, False, True, False, False, True])
+    # final round always evals, even off-cadence
+    np.testing.assert_array_equal(
+        eval_mask(5, 3), [False, False, True, False, True])
+    # the t == rounds-1 special case is deduped with the cadence hit
+    assert eval_mask(6, 2).sum() == 3
+    # eval_every > rounds: exactly one eval, at the end
+    m = eval_mask(6, 100)
+    assert m.sum() == 1 and m[-1]
+    assert eval_mask(0, 5).shape == (0,)
+    with pytest.raises(ValueError, match="eval_every"):
+        eval_mask(6, 0)
+
+
+def test_eval_every_beyond_rounds_single_eval_end_to_end():
+    """Both host-driven and scan engines honour the single final eval when
+    eval_every exceeds the round budget."""
+    cfg = dict(TINY, selector="fedavg")
+    cfg["eval_every"] = 1000
+    loop = run_federated(FLConfig(engine="loop", **cfg))
+    scan = run_federated(FLConfig(engine="scan", **cfg))
+    for r in (loop, scan):
+        assert [t for t, _ in r.test_acc] == [TINY["rounds"]]
+    np.testing.assert_allclose(loop.test_acc[0][1], scan.test_acc[0][1],
+                               atol=1e-5)
+
+
 def test_deadline_epochs_derivation():
     clock = ClientClock(epoch_time_s=np.array([0.1, 0.2, 1.0, 0.1]),
                         comm_time_s=np.array([0.05, 0.05, 0.05, 2.0]))

@@ -12,7 +12,6 @@ import pytest
 from repro.federated.client import ClientConfig
 from repro.federated.server import FLConfig, run_federated
 from repro.grid import GridCell, GridSpec, run_grid
-from repro.grid.spec import EVAL_CADENCE_ERROR
 
 TINY = dict(n_clients=8, m=3, rounds=6, n_train=600, n_val=100, n_test=100,
             eval_every=3,
@@ -38,16 +37,51 @@ def _assert_bitwise(a, b):
 
 
 # ------------------------------------------------------------------ spec --
-def test_eval_cadence_guard():
-    """ROADMAP 'eval under the replica vmap': per-replica cadences raise a
-    pinned, actionable error instead of silently mis-evaluating."""
-    spec = GridSpec(_base(), (GridCell("fedavg", 0),
-                              GridCell("fedavg", 1,
-                                       overrides={"eval_every": 2})))
-    with pytest.raises(ValueError,
-                       match="per-replica eval cadences are unsupported"):
-        run_grid(spec)
-    assert "replica vmap" in EVAL_CADENCE_ERROR
+def test_per_cell_eval_cadence_matches_solo():
+    """ROADMAP 'eval under the replica vmap', LIFTED (DESIGN.md §13): grid
+    cells may override eval_every.  The replica vmap runs the masked eval
+    round wherever ANY replica's mask is set, masks out the other
+    replicas' writes, and every cell's eval curve reproduces its solo run
+    — still one dispatch per partition."""
+    base = _base(selector="fedavg")
+    spec = GridSpec(base, (
+        GridCell("fedavg", 0),                                # every 3
+        GridCell("fedavg", 0, overrides={"eval_every": 2}),
+        GridCell("fedavg", 1, overrides={"eval_every": 100})))  # final only
+    grid = run_grid(spec)
+    assert len(grid.partitions) == 1 and grid.results[0].dispatches == 1
+    for cell, res in zip(spec.cells, grid.results):
+        solo = run_federated(dataclasses.replace(
+            base, seed=cell.seed, **dict(cell.overrides)))
+        _assert_bitwise(solo, res)
+        assert [t for t, _ in res.test_acc] == [t for t, _ in solo.test_acc]
+        np.testing.assert_allclose([a for _, a in res.test_acc],
+                                   [a for _, a in solo.test_acc],
+                                   atol=1e-6)
+    # per-replica curves genuinely differ in shape
+    assert [len(r.test_acc) for r in grid.results] == [2, 3, 1]
+
+
+def test_per_cell_eval_cadence_segmented_and_resumed(tmp_path):
+    """Mixed cadences survive segmentation + checkpoint/resume: the
+    eval-slot counter crosses segment boundaries in the carry."""
+    base = _base(selector="fedavg")
+    spec = GridSpec(base, (
+        GridCell("fedavg", 0),
+        GridCell("fedavg", 0, overrides={"eval_every": 2})))
+    whole = run_grid(spec)
+    seg = run_grid(spec, rounds_per_segment=2)
+    partial = run_grid(spec, rounds_per_segment=2,
+                       checkpoint_dir=str(tmp_path), max_segments=1)
+    assert partial is None
+    resumed = run_grid(spec, rounds_per_segment=2,
+                       checkpoint_dir=str(tmp_path))
+    for a, b in zip(whole.results, seg.results):
+        _assert_bitwise(a, b)
+        assert a.test_acc == b.test_acc
+    for a, b in zip(whole.results, resumed.results):
+        _assert_bitwise(a, b)
+        assert a.test_acc == b.test_acc
 
 
 def test_static_field_mismatch_rejected():
@@ -149,6 +183,18 @@ def test_kill_at_segment_boundary_resumes_bit_identical(tmp_path):
                              selectors=["greedyfed", "fedavg"], seeds=(0,))
     with pytest.raises(ValueError, match="DIFFERENT grid"):
         run_grid(other, rounds_per_segment=2, checkpoint_dir=ckpt)
+    # checkpoints from an older SegmentCarry layout fail with a version-
+    # skew error, not an opaque structure mismatch (PR-3 dirs carried no
+    # carry_format key => format 1)
+    import json
+    gj = os.path.join(ckpt, "grid.json")
+    with open(gj) as f:
+        meta = json.load(f)
+    del meta["carry_format"]
+    with open(gj, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="carry format"):
+        run_grid(spec, rounds_per_segment=2, checkpoint_dir=ckpt)
 
 
 # ------------------------------------------------- straggler stream parity --

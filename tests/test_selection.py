@@ -81,8 +81,22 @@ def test_sfedavg_returns_valid_distinct_clients():
 
 
 def test_unknown_selector_raises():
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="options"):
         make_selector("nope", 4, 2)
+
+
+def test_unknown_selector_spec_lists_options():
+    """Satellite: the runtime spec factory names every valid strategy in
+    its error instead of surfacing a bare KeyError."""
+    from repro.core.selection_jax import strategy_names
+
+    with pytest.raises(ValueError) as e:
+        make_selector_spec("nope", 4, 2)
+    for name in strategy_names():
+        assert name in str(e.value)
+    assert "KeyError" not in repr(e.value)
+    with pytest.raises(TypeError, match="unexpected"):
+        make_selector_spec("greedyfed", 4, 2, decay=0.5)
 
 
 # ------------------------------------------------- device-resident parity --
@@ -154,6 +168,23 @@ def test_make_selector_spec_matches_host_instance():
     assert spec.rr_rounds == 3 and spec.uses_shapley
 
 
+@pytest.mark.parametrize("name", sorted(SELECTORS))
+def test_spec_factory_agrees_with_host_oracle(name):
+    """The native (host-free) spec registry reproduces selector_spec(host)
+    exactly for every registry name at defaults AND with explicit kwargs —
+    the contract that let selection_jax stop importing core.selection."""
+    assert (make_selector_spec(name, 10, 3)
+            == selector_spec(make_selector(name, 10, 3)))
+    kw = {"power_of_choice": dict(decay=0.8, d0=7),
+          "s_fedavg": dict(beta=0.3, temperature=2.0),
+          "ucb": dict(c=1.5),
+          "greedyfed": dict(averaging="exponential", alpha=0.7),
+          "greedyfed_dropout": dict(averaging="exponential", alpha=0.7,
+                                    drop_frac=0.3)}.get(name, {})
+    assert (make_selector_spec(name, 10, 3, **kw)
+            == selector_spec(make_selector(name, 10, 3, **kw)))
+
+
 # ------------------------------------------------- dropout mask edge cases --
 @pytest.mark.parametrize("drop_frac,expect_keep", [
     (0.0, 10),   # nothing drops: active stays full
@@ -194,19 +225,54 @@ def test_dropout_drop_frac_edges(drop_frac, expect_keep):
     assert all(hstate.active[int(i)] for i in hs)
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+def test_dropout_all_active_dropped_parity(seed):
+    """Satellite: with the active-mask all-False (every remaining client
+    dropped — reachable only by state surgery, since n_keep >= m), the
+    all -inf masked scores fall back to the stable-argsort order on BOTH
+    paths; host and device must still agree bit-for-bit."""
+    n, m = 8, 3
+    host = make_selector("greedyfed_dropout", n, m, seed=seed)
+    spec = selector_spec(host)
+    rng = np.random.default_rng(seed)
+    sv = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    hstate = host.init_state()
+    hstate = hstate._replace(
+        valuation=hstate.valuation._replace(sv=sv),
+        round=spec.rr_rounds + 1,          # past RR: the greedy branch
+        active=np.zeros(n, bool), frozen=True)
+    dstate = init_device_state(spec, seed)
+    dstate = dstate._replace(
+        valuation=dstate.valuation._replace(sv=sv),
+        round=jnp.asarray(spec.rr_rounds + 1, jnp.int32),
+        active=jnp.zeros(n, bool), frozen=jnp.asarray(True))
+    key = jax.random.key(seed + 41)
+    hs, hstate = host.select(hstate, key, _ctx(n))
+    ds, dstate = _jit_select(spec, dstate, key,
+                             DeviceSelectionContext(jnp.ones(n) / n,
+                                                    jnp.zeros(n),
+                                                    jnp.asarray(0)))
+    np.testing.assert_array_equal(np.asarray(hs), np.asarray(ds))
+    assert len(set(int(i) for i in ds)) == m
+    # the frozen all-False mask survives the round untouched on both paths
+    assert not np.asarray(hstate.active).any()
+    assert not np.asarray(dstate.active).any()
+    assert float(device_dropped_fraction(dstate)) == 1.0
+
+
 def test_sv_averaging_routed_through_selector_kwargs():
-    """Satellite: sv_averaging/sv_alpha reach the selector via the
-    constructor, and explicit selector_kwargs win over the FLConfig knobs."""
+    """Satellite: sv_averaging/sv_alpha reach the selector spec via the
+    factory, and explicit selector_kwargs win over the FLConfig knobs."""
     from repro.federated.server import FLConfig, setup_run
     small = dict(n_clients=4, m=2, rounds=1, n_train=120, n_val=40,
                  n_test=40)
     s = setup_run(FLConfig(selector="greedyfed", sv_averaging="exponential",
                            sv_alpha=0.25, **small))
-    assert s.selector.averaging == "exponential"
-    assert s.selector.alpha == 0.25
+    assert s.sel_spec.sv_mode == "exponential"
+    assert s.sel_spec.sv_alpha == 0.25
     s = setup_run(FLConfig(selector="greedyfed_dropout",
                            sv_averaging="exponential", **small))
-    assert s.selector.averaging == "exponential"
+    assert s.sel_spec.sv_mode == "exponential"
     s = setup_run(FLConfig(selector="greedyfed", sv_averaging="exponential",
                            selector_kwargs={"averaging": "mean"}, **small))
-    assert s.selector.averaging == "mean"
+    assert s.sel_spec.sv_mode == "mean"

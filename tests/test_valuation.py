@@ -1,10 +1,13 @@
 """Cumulative-SV tracking (Alg. 1 lines 11-12) and the beyond-paper
-SV-feedback dropout selector."""
+SV-feedback dropout selector (via the runtime selection_jax stack)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.selection import GreedyFedDropoutSelector, SelectionContext
+from repro.core.selection_jax import (
+    DeviceSelectionContext, device_dropped_fraction, device_select,
+    device_update, init_device_state, make_selector_spec,
+)
 from repro.core.valuation import init_valuation, update_valuation
 
 
@@ -37,17 +40,20 @@ def test_unselected_clients_untouched():
 
 def test_dropout_selector_drops_bottom_and_saves_comm():
     n, m = 10, 2
-    sel = GreedyFedDropoutSelector(n_clients=n, m=m, seed=0, drop_frac=0.5)
-    state = sel.init_state()
-    ctx = SelectionContext(data_fractions=jnp.ones(n) / n)
+    spec = make_selector_spec("greedyfed_dropout", n, m, drop_frac=0.5)
+    state = init_device_state(spec, seed=0)
+    ctx = DeviceSelectionContext(data_fractions=jnp.ones(n) / n,
+                                 local_losses=jnp.zeros(n),
+                                 poc_d=jnp.asarray(0))
     rr = int(np.ceil(n / m))
     for t in range(rr):
-        s, state = sel.select(state, jax.random.key(t), ctx)
+        s, state = device_select(spec, state, jax.random.key(t), ctx)
         # client k earns SV == k
-        state = sel.update(state, s, sv_round=jnp.asarray([float(i) for i in s]))
-    s, state = sel.select(state, jax.random.key(99), ctx)
-    active = np.flatnonzero(state.active)
+        state = device_update(spec, state, s,
+                              jnp.asarray([float(i) for i in s]))
+    s, state = device_select(spec, state, jax.random.key(99), ctx)
+    active = np.flatnonzero(np.asarray(state.active))
     assert len(active) == 5
     assert set(active.tolist()) == {5, 6, 7, 8, 9}, "bottom half must drop"
     assert set(int(i) for i in s) == {8, 9}
-    assert sel.dropped_fraction(state) == 0.5
+    assert float(device_dropped_fraction(state)) == 0.5
