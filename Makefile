@@ -1,4 +1,4 @@
-.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke
+.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke bench-shapley
 
 check:
 	./scripts/check.sh
@@ -24,6 +24,13 @@ bench-engine:
 # CHECK_BENCH_SMOKE=1 ./scripts/check.sh
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.engine_bench --smoke --json BENCH_selection.json
+
+# dense-vs-streaming device GTG-Shapley smoke (DESIGN.md §8 vs §14):
+# e2e SV latency, compiled-flops evidence of the M-fold construction
+# reduction, peak-model-bytes estimates; refreshes BENCH_shapley.json.
+# Opt into the check gate with CHECK_BENCH_SHAPLEY=1 ./scripts/check.sh
+bench-shapley:
+	PYTHONPATH=src python -m benchmarks.engine_bench --shapley --json BENCH_shapley.json
 
 # grid-runner smoke: a 2-partition, 2-segment, 4-replica grid sharded over
 # the forced-host 8-device debug mesh; refreshes BENCH_grid.json (per-

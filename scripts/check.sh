@@ -5,6 +5,8 @@
 #   parity suites as one command (`make parity`).
 #   CHECK_BENCH_SMOKE=1 scripts/check.sh  additionally runs the engine
 #   bench smoke and refreshes BENCH_selection.json (perf trajectory).
+#   CHECK_BENCH_SHAPLEY=1 scripts/check.sh  additionally runs the dense-
+#   vs-streaming Shapley bench and refreshes BENCH_shapley.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -27,6 +29,12 @@ if [[ "${CHECK_BENCH_SMOKE:-0}" == "1" ]]; then
   echo
   echo "== engine bench smoke (BENCH_selection.json) =="
   make bench-smoke
+fi
+
+if [[ "${CHECK_BENCH_SHAPLEY:-0}" == "1" ]]; then
+  echo
+  echo "== shapley bench smoke (BENCH_shapley.json) =="
+  make bench-shapley
 fi
 
 if [[ "${CHECK_GRID_SMOKE:-0}" == "1" ]]; then

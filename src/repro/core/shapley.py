@@ -32,7 +32,9 @@ UtilityFn = Callable[[PyTree], jax.Array]  # pytree params -> scalar utility
 
 
 class ShapleyStats(NamedTuple):
-    iterations: jax.Array      # MC rounds actually executed
+    # MC rounds (serial) / permutations (batched, streaming) actually
+    # walked — 0 when between-round truncation skipped the whole MC run
+    iterations: jax.Array
     utility_evals: jax.Array   # number of non-truncated utility evaluations
     v0: jax.Array              # U(w^t)
     vM: jax.Array              # U(w^{t+1})

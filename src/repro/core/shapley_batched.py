@@ -1,20 +1,33 @@
-"""Batched GTG-Shapley — the TPU-native adaptation (DESIGN.md §3).
+"""Batched GTG-Shapley — the TPU-native adaptations (DESIGN.md §8, §14).
 
 Alg. 2 as published is *serial*: it truncates inside each permutation walk,
 saving utility evals at the cost of a sequential dependency chain.  On TPU
-the economics invert: one pass of the fused `weighted_avg` kernel evaluates
-EVERY prefix subset of R permutations against a single HBM read of the
-stacked client models, and the `ce_loss` kernel evaluates all resulting
-models' utilities in one batched forward.
+the economics invert: evaluating EVERY prefix subset of R permutations in
+one pass amortises the HBM read of the stacked client models, and the
+`ce_loss` kernel evaluates all resulting models' utilities in one batched
+forward.  Two device estimators share that structure:
 
-    serial GTG:   O(T * M^2) kernel launches, each re-reading W (M, D)
-    batched GTG:  ceil(T/R) passes, W read once per pass
+  * `gtg_shapley_batched` (§8, the dense oracle) — materialises the
+    (R*M, M) prefix-weight matrix and contracts it against the stacked
+    updates with the `weighted_avg` kernel: O(R*M^2*D) FLOPs and all
+    R*M prefix models resident at once.
+  * `gtg_shapley_streaming` (§14, the default) — exploits that along a
+    walk the prefix ModelAverage is a running sum
+    (S_j = S_{j-1} + n_{pi(j)} w_{pi(j)}, wbar_j = S_j / N_j): the
+    `prefix_avg` kernel gathers client rows in walk order and
+    cumulative-sums them per D-block — O(R*M*D) FLOPs, an M-fold
+    reduction — and an optional chunked evaluator (`sv_chunk`) walks the
+    permutations `lax.map`-wise so peak memory is O(chunk * D) instead
+    of all R*M models.
 
-Between-round truncation (|v_M - v_0| < eps) is kept (it gates the whole
-round); within-round truncation is dropped — its savings are recovered by
-bandwidth amortisation.  The estimator is the same Monte-Carlo permutation
-average, so it converges to the identical SV (tests/test_shapley.py checks
-both against the exact oracle).
+Both draw the SAME permutations from the same key (`_draw_perms`), so they
+compute the same Monte-Carlo average and differ only in floating-point
+association; `tests/test_shapley.py` pins streaming == dense at f32
+tolerance and chunked == unchunked bitwise.  Between-round truncation
+(|v_M - v_0| < eps) is kept (it gates the whole round); within-round
+truncation is dropped — its savings are recovered by bandwidth
+amortisation.  The estimator is the same Monte-Carlo permutation average,
+so it converges to the identical SV (checked against the exact oracle).
 """
 from __future__ import annotations
 
@@ -24,7 +37,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import normalized_weights, subset_average
+from repro.core.aggregation import subset_average
 from repro.core.shapley import ShapleyStats, _permutation_batch
 
 PyTree = Any
@@ -42,6 +55,47 @@ def prefix_weight_matrix(perms: jax.Array, n_k: jax.Array) -> jax.Array:
     return w / jnp.maximum(w.sum(-1, keepdims=True), 1e-12)
 
 
+def _draw_perms(key: jax.Array, m: int, n_perms: int) -> jax.Array:
+    """(R, M) permutation walks, shared by the dense and streaming paths.
+
+    Balanced sampling: draw whole (M, M) batches (each client first
+    exactly once per batch) so first-position marginals are stratified —
+    strictly lower variance than R independent permutations.  The row
+    shuffle keeps truncation to n_perms unbiased when n_perms % M != 0
+    (otherwise low-index clients would always keep their first-position
+    rows and high-index clients never would).  Identical key discipline on
+    both estimators => identical walks => they differ only in
+    floating-point association.
+    """
+    n_batches = -(-n_perms // m)
+    bkey, skey = jax.random.split(key)
+    keys = jax.random.split(bkey, n_batches)
+    perms = jax.vmap(lambda k: _permutation_batch(k, m))(keys)
+    perms = perms.reshape(n_batches * m, m)
+    return jax.random.permutation(skey, perms, axis=0)[:n_perms]
+
+
+def _walk_sv(vs: jax.Array, perms: jax.Array, v0: jax.Array,
+             n_perms: int, m: int) -> jax.Array:
+    """(R, M) walk utilities -> (M,) SV: marginals along each walk,
+    scattered back to client slots and averaged over permutations."""
+    v_prev = jnp.concatenate(
+        [jnp.full((n_perms, 1), v0), vs[:, :-1]], axis=1)
+    marginals = vs - v_prev                              # (R, M) along walk
+    return jnp.zeros((m,)).at[perms.reshape(-1)].add(
+        marginals.reshape(-1)) / n_perms
+
+
+def _round_stats(truncated: jax.Array, n_evals: jax.Array, n_perms: int,
+                 v0: jax.Array, v_m: jax.Array) -> ShapleyStats:
+    """Stats shared by both device estimators.  `iterations` reports the
+    permutations actually walked — 0 when between-round truncation skipped
+    the whole MC run (pinned in tests/test_shapley.py)."""
+    return ShapleyStats(
+        iterations=jnp.where(truncated, 0, n_perms).astype(jnp.int32),
+        utility_evals=n_evals + 2, v0=v0, vM=v_m, truncated_round=truncated)
+
+
 @partial(jax.jit, static_argnames=("batched_utility_fn", "utility_fn",
                                    "n_perms", "use_kernel"))
 def gtg_shapley_batched(
@@ -56,8 +110,10 @@ def gtg_shapley_batched(
     n_perms: int = 64,
     use_kernel: bool = True,
 ) -> tuple[jax.Array, ShapleyStats]:
-    """SV estimate from `n_perms` permutations evaluated in one batch.
+    """Dense SV estimate: all R*M prefix models in one contraction (§8).
 
+    Kept as the parity oracle for `gtg_shapley_streaming`; the engines
+    reach it via `shapley_impl="batched"`.
     batched_utility_fn: pytree with leaves (R*, ...) -> (R*,) utilities.
     """
     m = n_k.shape[0]
@@ -66,18 +122,7 @@ def gtg_shapley_batched(
     v_m = utility_fn(w_full)
 
     def run():
-        # Balanced sampling: draw whole (M, M) batches (each client first
-        # exactly once per batch) so first-position marginals are stratified
-        # — strictly lower variance than R independent permutations.  The
-        # row shuffle keeps truncation to n_perms unbiased when
-        # n_perms % M != 0 (otherwise low-index clients would always keep
-        # their first-position rows and high-index clients never would).
-        n_batches = -(-n_perms // m)
-        bkey, skey = jax.random.split(key)
-        keys = jax.random.split(bkey, n_batches)
-        perms = jax.vmap(lambda k: _permutation_batch(k, m))(keys)
-        perms = perms.reshape(n_batches * m, m)
-        perms = jax.random.permutation(skey, perms, axis=0)[:n_perms]  # (R, M)
+        perms = _draw_perms(key, m, n_perms)              # (R, M)
         weights = prefix_weight_matrix(perms, n_k)        # (R, M, M)
         flat_w = weights.reshape(n_perms * m, m)          # (R*M, M)
 
@@ -91,11 +136,7 @@ def gtg_shapley_batched(
                     stacked_updates))(flat_w)
 
         vs = batched_utility_fn(models).reshape(n_perms, m)
-        v_prev = jnp.concatenate(
-            [jnp.full((n_perms, 1), v0), vs[:, :-1]], axis=1)
-        marginals = vs - v_prev                           # (R, M) along walk
-        sv = jnp.zeros((m,)).at[perms.reshape(-1)].add(
-            marginals.reshape(-1)) / n_perms
+        sv = _walk_sv(vs, perms, v0, n_perms, m)
         return sv, jnp.array(n_perms * m, jnp.int32)
 
     def skip():
@@ -103,10 +144,93 @@ def gtg_shapley_batched(
 
     truncated = jnp.abs(v_m - v0) < eps
     sv, n_evals = jax.lax.cond(truncated, skip, run)
-    stats = ShapleyStats(
-        iterations=jnp.array(n_perms, jnp.int32),
-        utility_evals=n_evals + 2, v0=v0, vM=v_m, truncated_round=truncated)
-    return sv, stats
+    return sv, _round_stats(truncated, n_evals, n_perms, v0, v_m)
+
+
+@partial(jax.jit, static_argnames=("batched_utility_fn", "utility_fn",
+                                   "n_perms", "sv_chunk", "use_kernel"))
+def gtg_shapley_streaming(
+    stacked_updates: PyTree,
+    n_k: jax.Array,
+    w_prev: PyTree,
+    utility_fn: Callable[[PyTree], jax.Array],
+    batched_utility_fn: Callable[[PyTree], jax.Array],
+    key: jax.Array,
+    *,
+    eps: float = 1e-4,
+    n_perms: int = 64,
+    sv_chunk: int = 0,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, ShapleyStats]:
+    """Streaming SV estimate: incremental prefix walks (§14, the default).
+
+    Same Monte-Carlo average as `gtg_shapley_batched` over the same
+    permutations, but prefix models come from the `prefix_avg` running-sum
+    kernel (O(R*M*D) FLOPs, an M-fold reduction over the dense path) and
+    utilities are evaluated `sv_chunk` models at a time:
+
+      sv_chunk = c > 0  — `lax.map` over ceil(c / M)-walk chunks, peak
+                          model memory O(max(c, M) * D);
+      sv_chunk = 0      — auto (the default): one walk (M models) per
+                          step off-TPU, where the chunk staying
+                          cache-resident beats the dense matmul ~2x
+                          (BENCH_shapley.json); all R*M on TPU, where the
+                          kernel streams construction anyway and the full
+                          batch keeps the utility evals wide for the MXU;
+      sv_chunk < 0      — force the single all-resident pass.
+
+    Chunking is numerics-invariant: boundaries fall on whole walks and
+    the walk accumulation is strictly left-to-right, so every chunking —
+    auto included — is bit-identical (pinned in tests/test_shapley.py).
+    """
+    m = int(n_k.shape[0])
+    w_full = subset_average(stacked_updates, n_k, jnp.ones((m,)))
+    v0 = utility_fn(w_prev)
+    v_m = utility_fn(w_full)
+
+    if sv_chunk == 0:   # auto, resolved at trace time
+        chunk_walks = 1 if jax.default_backend() != "tpu" else n_perms
+    elif sv_chunk < 0:
+        chunk_walks = n_perms
+    else:
+        chunk_walks = min(max(1, -(-sv_chunk // m)), n_perms)
+    n_chunks = -(-n_perms // chunk_walks)
+    pad_walks = n_chunks * chunk_walks - n_perms
+
+    def run():
+        from repro.kernels.prefix_avg.ops import prefix_avg
+
+        perms = _draw_perms(key, m, n_perms)              # (R, M)
+        if pad_walks:
+            filler = jnp.tile(jnp.arange(m, dtype=perms.dtype)[None, :],
+                              (pad_walks, 1))
+            perms_padded = jnp.concatenate([perms, filler], axis=0)
+        else:
+            perms_padded = perms
+
+        def eval_chunk(perm_chunk):                       # (c, M) walks
+            models = prefix_avg(stacked_updates, perm_chunk, n_k,
+                                use_kernel=use_kernel)
+            return batched_utility_fn(models)             # (c*M,)
+
+        if n_chunks == 1:
+            vs = eval_chunk(perms_padded)
+        else:
+            vs = jax.lax.map(
+                eval_chunk,
+                perms_padded.reshape(n_chunks, chunk_walks, m))
+            vs = vs.reshape(-1)[: n_perms * m]
+        sv = _walk_sv(vs.reshape(n_perms, m), perms, v0, n_perms, m)
+        # honest accounting: filler walks of a non-dividing chunk are
+        # evaluated too (their utilities are just discarded)
+        return sv, jnp.array(n_chunks * chunk_walks * m, jnp.int32)
+
+    def skip():
+        return jnp.zeros((m,)), jnp.array(0, jnp.int32)
+
+    truncated = jnp.abs(v_m - v0) < eps
+    sv, n_evals = jax.lax.cond(truncated, skip, run)
+    return sv, _round_stats(truncated, n_evals, n_perms, v0, v_m)
 
 
 def make_batched_mlp_utility(model, x_val: jax.Array, y_val: jax.Array):

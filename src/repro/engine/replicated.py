@@ -91,7 +91,7 @@ def run_replicated(cfg, seeds, data=None, model=None):
     max_iters = cfg.shapley_max_iters or 50 * cfg.m
     spec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
                      shapley_eps=cfg.shapley_eps, shapley_max_iters=max_iters,
-                     upload_codec=cfg.upload_codec)
+                     sv_chunk=cfg.sv_chunk, upload_codec=cfg.upload_codec)
     step_rep = jitted_round_step(model, cfg.client, spec, vmapped=True)
 
     uses_losses = sel_spec.uses_local_losses

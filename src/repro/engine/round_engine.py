@@ -39,12 +39,25 @@ from repro.models.mlp_cnn import ClassifierModel
 PyTree = Any
 
 
+SHAPLEY_IMPLS = ("streaming", "batched", "serial")
+
+
 class RoundSpec(NamedTuple):
     """Static (hashable) round-execution config baked into the trace."""
     needs_sv: bool = False
-    shapley_impl: str = "serial"   # "serial" (Alg. 2) | "batched" (§8)
+    # "streaming" (§14 prefix walk, the default) | "batched" (§8 dense
+    # oracle) | "serial" (Alg. 2 truncation — degrades under vmap: the
+    # within-round lax.cond runs both branches, worst-case cost with none
+    # of the savings)
+    shapley_impl: str = "streaming"
     shapley_eps: float = 1e-4
     shapley_max_iters: int = 250
+    # streaming SV only: prefix models materialised + evaluated per step,
+    # rounded up to whole M-model walks; bounds peak SV memory at
+    # O(max(sv_chunk, M) * D) for replica-sharded grids.  0 = auto (one
+    # walk off-TPU, all R*M on TPU), < 0 forces the all-resident pass.
+    # Numerics-invariant: every chunking is bit-identical.
+    sv_chunk: int = 0
     upload_codec: str = "identity"
 
 
@@ -63,6 +76,9 @@ def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
         (params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
          sel, epochs_k, round_key) -> RoundOutput
     """
+    if spec.shapley_impl not in SHAPLEY_IMPLS:
+        raise ValueError(f"unknown shapley_impl {spec.shapley_impl!r}; "
+                         f"options: {SHAPLEY_IMPLS}")
 
     def round_step(params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
                    sel, epochs_k, round_key) -> RoundOutput:
@@ -83,18 +99,26 @@ def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
             def utility_fn(p):  # U(w) = -L(w; D_val), as in the loop engine
                 return -model.loss(p, x_val, y_val)
 
-            if spec.shapley_impl == "batched":
+            if spec.shapley_impl in ("batched", "streaming"):
                 from repro.core.shapley_batched import (
-                    gtg_shapley_batched, make_batched_mlp_utility,
+                    gtg_shapley_batched, gtg_shapley_streaming,
+                    make_batched_mlp_utility,
                 )
                 # the same helper the loop engine uses (works on traced
                 # x_val/y_val), so loop and fused engines agree bitwise
                 batched_utility_fn = make_batched_mlp_utility(
                     model, x_val, y_val)
-                sv, stats = gtg_shapley_batched(
-                    stacked, n_k_sel, params, utility_fn,
-                    batched_utility_fn, sv_key, eps=spec.shapley_eps,
-                    n_perms=spec.shapley_max_iters)
+                if spec.shapley_impl == "streaming":
+                    sv, stats = gtg_shapley_streaming(
+                        stacked, n_k_sel, params, utility_fn,
+                        batched_utility_fn, sv_key, eps=spec.shapley_eps,
+                        n_perms=spec.shapley_max_iters,
+                        sv_chunk=spec.sv_chunk)
+                else:
+                    sv, stats = gtg_shapley_batched(
+                        stacked, n_k_sel, params, utility_fn,
+                        batched_utility_fn, sv_key, eps=spec.shapley_eps,
+                        n_perms=spec.shapley_max_iters)
             else:
                 sv, stats = gtg_shapley(
                     stacked, n_k_sel, params, utility_fn, sv_key,

@@ -62,6 +62,20 @@ def build_epochs_table(cfg, s) -> np.ndarray:
     return np.full((cfg.rounds, cfg.n_clients), e, np.int32)
 
 
+def scan_operands(cfg, s) -> tuple:
+    """The positional operands of a solo run's `jitted_run_scan` call,
+    everything after the leading `params`: (xs, ..., sel_state, key).
+    The single source of that call contract — `run_federated_scan` and
+    `benchmarks/engine_bench._scan_steady_state` both build their calls
+    from it, so an operand reorder cannot silently desynchronise them."""
+    return (s.xs, s.ys, s.n_valid, jnp.asarray(s.sigma_k_all),
+            s.x_val, s.y_val, s.x_test, s.y_test, jnp.asarray(s.fractions),
+            jnp.asarray(build_epochs_table(cfg, s)),
+            jnp.asarray(poc_d_schedule(s.sel_spec, cfg.rounds)),
+            jnp.asarray(eval_mask(cfg.rounds, cfg.eval_every)),
+            jnp.asarray(0, jnp.int32), s.sel_state, s.key)
+
+
 def make_scan_spec(cfg, selector_specs: tuple) -> ScanSpec:
     """ScanSpec for an FLConfig; `selector_specs` may hold several
     strategies for a switch-dispatched mixed batch (superset semantics:
@@ -71,6 +85,7 @@ def make_scan_spec(cfg, selector_specs: tuple) -> ScanSpec:
     rspec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
                       shapley_eps=cfg.shapley_eps,
                       shapley_max_iters=max_iters,
+                      sv_chunk=cfg.sv_chunk,
                       upload_codec=cfg.upload_codec)
     # eval_every is NOT in the spec: the cadence is a (T,) bool operand
     # (schedule.eval_mask), so one executable serves every cadence
@@ -146,15 +161,8 @@ def run_federated_scan(cfg, s, t_start: float):
     spec_sel = s.sel_spec
     spec = make_scan_spec(cfg, (spec_sel,))
 
-    epochs_table = jnp.asarray(build_epochs_table(cfg, s))
-    d_sched = jnp.asarray(poc_d_schedule(spec_sel, cfg.rounds))
-    eval_table = jnp.asarray(eval_mask(cfg.rounds, cfg.eval_every))
-
     run = jitted_run_scan(s.model, cfg.client, spec)
-    out = run(s.params, s.xs, s.ys, s.n_valid, jnp.asarray(s.sigma_k_all),
-              s.x_val, s.y_val, s.x_test, s.y_test,
-              jnp.asarray(s.fractions), epochs_table, d_sched, eval_table,
-              jnp.asarray(0, jnp.int32), s.sel_state, s.key)
+    out = run(s.params, *scan_operands(cfg, s))
 
     return results_from_scan(cfg, s, out,
                              wall_time_s=time.time() - t_start,

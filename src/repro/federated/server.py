@@ -85,8 +85,18 @@ class FLConfig:
     # GTG-Shapley
     shapley_eps: float = 1e-4
     shapley_max_iters: Optional[int] = None   # default 50*M
-    shapley_impl: str = "serial"  # "serial" (Alg. 2, truncation) |
-                                  # "batched" (TPU-native, DESIGN.md §8)
+    # "streaming" (DESIGN.md §14 incremental prefix walk — the default
+    # device SV path for every engine) | "batched" (§8 dense oracle) |
+    # "serial" (Alg. 2, within-round truncation; degrades under the
+    # scan/replica-vmap engines, where lax.cond runs both branches)
+    shapley_impl: str = "streaming"
+    # streaming SV: prefix models materialised + evaluated per step,
+    # rounded up to whole M-model walks — the memory knob that lets GTG
+    # run inside replica-sharded grids at paper scale (peak SV memory
+    # O(max(sv_chunk, M) * D) instead of O(R*M*D)).  0 = auto (one walk
+    # off-TPU, all R*M on TPU), < 0 forces the all-resident pass; every
+    # chunking is bit-identical, so the knob never changes results.
+    sv_chunk: int = 0
     sv_averaging: str = "mean"   # "mean" | "exponential"
     sv_alpha: float = 0.5
     # upload compression (paper Related-Work contrast; see
@@ -265,7 +275,7 @@ def _make_round_engine(cfg: FLConfig, s: RunSetup, needs_sv: bool,
     from repro.engine.round_engine import RoundEngine, RoundSpec
     spec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
                      shapley_eps=cfg.shapley_eps, shapley_max_iters=max_iters,
-                     upload_codec=cfg.upload_codec)
+                     sv_chunk=cfg.sv_chunk, upload_codec=cfg.upload_codec)
     return RoundEngine(s.model, cfg.client, spec, s.xs, s.ys, s.n_valid,
                        jnp.asarray(s.sigma_k_all), s.x_val, s.y_val)
 
@@ -276,6 +286,10 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
     if cfg.engine not in ("loop", "batched", "scan"):
         raise ValueError(f"unknown engine {cfg.engine!r}; "
                          "options: 'loop', 'batched', 'scan'")
+    from repro.engine.round_engine import SHAPLEY_IMPLS
+    if cfg.shapley_impl not in SHAPLEY_IMPLS:
+        raise ValueError(f"unknown shapley_impl {cfg.shapley_impl!r}; "
+                         f"options: {SHAPLEY_IMPLS}")
     s = setup_run(cfg, data, model)
     if cfg.engine == "scan":
         from repro.engine.scan_engine import run_federated_scan
@@ -288,7 +302,7 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
         return -model.loss(p, s.x_val, s.y_val)
 
     batched_utility_fn = None
-    if cfg.shapley_impl == "batched":
+    if cfg.shapley_impl in ("batched", "streaming"):
         from repro.core.shapley_batched import make_batched_mlp_utility
         batched_utility_fn = make_batched_mlp_utility(model, s.x_val, s.y_val)
 
@@ -365,9 +379,17 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
             stacked = tree_stack(updates)
             n_k_sel = s.n_k_all[jnp.asarray(sel)]
 
-            # ---- GTG-Shapley at the PS (Alg. 2 / batched variant) --------
+            # ---- GTG-Shapley at the PS (Alg. 2 / device variants) --------
             if needs_sv:
-                if cfg.shapley_impl == "batched":
+                if cfg.shapley_impl == "streaming":
+                    from repro.core.shapley_batched import (
+                        gtg_shapley_streaming,
+                    )
+                    sv_round, stats = gtg_shapley_streaming(
+                        stacked, n_k_sel, params, utility_fn,
+                        batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
+                        n_perms=max_iters, sv_chunk=cfg.sv_chunk)
+                elif cfg.shapley_impl == "batched":
                     from repro.core.shapley_batched import gtg_shapley_batched
                     sv_round, stats = gtg_shapley_batched(
                         stacked, n_k_sel, params, utility_fn,

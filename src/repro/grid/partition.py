@@ -8,6 +8,14 @@ discard (ROADMAP "mixed-strategy superset cost").  Here cells are grouped
 by the capability pair `(uses_shapley, uses_local_losses)`: each group
 compiles its own executable whose RoundSpec only contains what the group
 needs, and per-group results are re-interleaved into grid order.
+
+Cost of the "sv" partition (compiled-flops evidence in BENCH_grid.json):
+with the default streaming prefix-Shapley path (DESIGN.md §14) the SV
+step adds O(R_perms * M * D) FLOPs per round — the prefix models are
+running sums, not the dense O(R_perms * M^2 * D) contraction of the §8
+oracle — and `FLConfig.sv_chunk` bounds its peak memory at
+O(max(sv_chunk, M) * D) per replica, so partitioning decides *who pays
+the SV step*, while the streaming path decides *how small that step is*.
 """
 from __future__ import annotations
 

@@ -33,6 +33,7 @@ from repro.checkpoint.ckpt import load_carry, save_carry
 from repro.engine.round_engine import (
     ScanRunOutput, ScanSpec, SegmentCarry, jitted_segment_step,
 )
+from repro.launch.compat import compiled_flops
 
 PyTree = Any
 
@@ -176,7 +177,7 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
                 batch.epochs_tables[:, sl], batch.d_scheds[:, sl],
                 batch.eval_masks[:, sl], batch.strategy_ids)
         if compile_stats and seg == start:
-            flops = _compiled_flops(step, args)
+            flops = compiled_flops(step, *args)
         out = step(*args)
         carry = out.carry
         dispatched += 1
@@ -197,15 +198,3 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
     report = SegmentRunReport(n_segments, dispatched, start,
                               batch_bytes(batch), flops)
     return result, report
-
-
-def _compiled_flops(step, args) -> float:
-    """Compiled-cost evidence for BENCH_grid.json (best effort: the AOT
-    cost-analysis API varies across jax versions/backends)."""
-    try:
-        cost = step.lower(*args).compile().cost_analysis()
-        if isinstance(cost, (list, tuple)):
-            cost = cost[0]
-        return float(cost.get("flops", float("nan")))
-    except Exception:
-        return float("nan")

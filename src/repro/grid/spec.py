@@ -22,7 +22,8 @@ import numpy as np
 STATIC_FIELDS = (
     "dataset", "n_clients", "m", "rounds", "client",
     "n_train", "n_val", "n_test",
-    "shapley_eps", "shapley_max_iters", "shapley_impl", "upload_codec",
+    "shapley_eps", "shapley_max_iters", "shapley_impl", "sv_chunk",
+    "upload_codec",
 )
 
 def _freeze_overrides(ov) -> tuple:

@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.ce_loss.kernel import ce_loss_kernel
 from repro.kernels.ce_loss.ref import ce_loss_ref
 
@@ -14,13 +15,17 @@ NEG_INF = -1e30
 
 @partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_v"))
 def ce_loss(logits: jax.Array, labels: jax.Array, *,
-            use_kernel: bool = True, interpret: bool = True,
+            use_kernel: bool = True, interpret: bool | None = None,
             block_v: int = 2048) -> jax.Array:
     """Mean CE over rows; (R, V) logits, (R,) int labels -> scalar f32.
 
     Pads the vocab axis to the kernel tile (padded logits masked to -inf,
-    which contribute exp(-inf)=0 to the denominator).
+    which contribute exp(-inf)=0 to the denominator).  `interpret=None`
+    derives from the backend (compile natively on TPU, interpret
+    elsewhere).
     """
+    if interpret is None:
+        interpret = default_interpret()
     r, v = logits.shape
     if not use_kernel or v < block_v:
         return jnp.mean(ce_loss_ref(logits, labels))

@@ -12,6 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -22,8 +23,14 @@ def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: int = 0,
                         block_q: int = 512, block_k: int = 512,
                         use_kernel: bool = True,
-                        interpret: bool = True) -> jax.Array:
-    """q (B, S, Hq, hd); k/v (B, T, Kh, hd) -> (B, S, Hq, hd)."""
+                        interpret: bool | None = None) -> jax.Array:
+    """q (B, S, Hq, hd); k/v (B, T, Kh, hd) -> (B, S, Hq, hd).
+
+    `interpret=None` derives from the backend (compile natively on TPU,
+    interpret elsewhere).
+    """
+    if interpret is None:
+        interpret = default_interpret()
     b, s_len, hq, hd = q.shape
     t_len, kh = k.shape[1], k.shape[2]
     g = hq // kh

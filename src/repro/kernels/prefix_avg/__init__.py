@@ -1,0 +1,4 @@
+from repro.kernels.prefix_avg.ops import prefix_avg
+from repro.kernels.prefix_avg.ref import prefix_avg_ref
+
+__all__ = ["prefix_avg", "prefix_avg_ref"]

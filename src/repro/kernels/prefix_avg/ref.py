@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the prefix_avg kernel.
+
+The walk accumulation is an explicit left-to-right `lax.scan` (NOT a
+cumsum, whose reduction tree XLA may reassociate): the per-position add
+order is the bitwise contract shared with the Pallas kernel's j-loop and
+relied on by the chunked streaming evaluator.  The gather lands directly
+in walk-axis-leading (M, R, D) layout so the scan consumes contiguous
+slices without transposing the big intermediate (the single output
+transpose back to walk-major order is the only full copy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def prefix_avg_ref(stacked: jax.Array, perms: jax.Array,
+                   n_k: jax.Array) -> jax.Array:
+    """stacked (M, D) x perms (R, M) x n_k (M,) -> (R*M, D) prefix models
+    in f32 accumulation; row r*M + j averages the prefix perms[r, :j+1]."""
+    r, m = perms.shape
+    perms_t = perms.T                                     # (M, R)
+    scale = jnp.take(n_k, perms_t).astype(jnp.float32)    # (M, R)
+    ncum = jnp.cumsum(scale, axis=0)                      # (M, R)
+    rows = jnp.take(stacked, perms_t,
+                    axis=0).astype(jnp.float32)           # (M, R, D)
+
+    def step(acc, x):
+        g, s, n = x                                       # (R, D), (R,), (R,)
+        acc = acc + s[:, None] * g
+        return acc, acc / n[:, None]
+
+    _, out = jax.lax.scan(
+        step, jnp.zeros((r, stacked.shape[1]), jnp.float32),
+        (rows, scale, ncum))                              # out (M, R, D)
+    return out.swapaxes(0, 1).reshape(r * m, -1).astype(stacked.dtype)

@@ -11,26 +11,25 @@ from functools import partial
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import default_interpret, pad_to
 from repro.kernels.weighted_avg.kernel import weighted_avg_kernel
 from repro.kernels.weighted_avg.ref import weighted_avg_ref
 
 PyTree = Any
 
 
-def _pad_to(x: jax.Array, mult: int) -> jax.Array:
-    pad = (-x.shape[-1]) % mult
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad)))
-    return x
-
-
 @partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_d"))
 def weighted_avg(stacked_tree: PyTree, weights: jax.Array, *,
-                 use_kernel: bool = True, interpret: bool = True,
+                 use_kernel: bool = True, interpret: bool | None = None,
                  block_d: int = 2048) -> PyTree:
-    """stacked_tree leaves (M, *s); weights (R, M) -> leaves (R, *s)."""
+    """stacked_tree leaves (M, *s); weights (R, M) -> leaves (R, *s).
+
+    `interpret=None` derives from the backend (compile natively on TPU,
+    interpret elsewhere).
+    """
+    if interpret is None:
+        interpret = default_interpret()
 
     def one(leaf: jax.Array) -> jax.Array:
         m = leaf.shape[0]
@@ -39,7 +38,7 @@ def weighted_avg(stacked_tree: PyTree, weights: jax.Array, *,
         if not use_kernel or d < block_d:
             out = weighted_avg_ref(flat, weights.astype(flat.dtype))
         else:
-            padded = _pad_to(flat, block_d)
+            padded = pad_to(flat, block_d)
             out = weighted_avg_kernel(padded, weights.astype(flat.dtype),
                                       block_d=block_d, interpret=interpret)
             out = out[:, :d]

@@ -35,6 +35,21 @@ def set_mesh(mesh):
     return mesh
 
 
+def compiled_flops(jitted, *args, **kwargs) -> float:
+    """Best-effort compiled-cost probe: the flops `jitted` would execute
+    for these args, NaN when unavailable.  Lives here because the AOT
+    cost-analysis API varies across jax versions/backends (list-of-dicts
+    on some, missing keys on others); `grid/segments.py` and the benches
+    share this one implementation."""
+    try:
+        cost = jitted.lower(*args, **kwargs).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost.get("flops", float("nan")))
+    except Exception:
+        return float("nan")
+
+
 def named_shardings(mesh, specs: PyTree) -> PyTree:
     """Normalise a pytree of PartitionSpec / None / Sharding leaves into
     `NamedSharding`s on `mesh` (None -> fully replicated).

@@ -9,10 +9,18 @@ from repro.kernels.ce_loss.ops import ce_loss
 from repro.kernels.ce_loss.ref import ce_loss_ref
 from repro.kernels.flash_attention.ops import flash_attention_tpu
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.prefix_avg.kernel import prefix_avg_kernel
+from repro.kernels.prefix_avg.ops import prefix_avg
+from repro.kernels.prefix_avg.ref import prefix_avg_ref
 from repro.kernels.weighted_avg.kernel import weighted_avg_kernel
 from repro.kernels.weighted_avg.ops import weighted_avg
 from repro.kernels.weighted_avg.ref import weighted_avg_ref
 from repro.models.lm.attention import dense_attention
+
+
+def _perms(key, r, m):
+    return jnp.stack([jax.random.permutation(jax.random.fold_in(key, i), m)
+                      for i in range(r)])
 
 
 # ------------------------------------------------------- weighted_avg ------
@@ -46,6 +54,69 @@ def test_weighted_avg_subset_masks_recover_members(key):
     w = jnp.eye(4)
     got = weighted_avg_kernel(stacked, w, block_d=2048, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(stacked), atol=1e-6)
+
+
+# -------------------------------------------------------- prefix_avg ------
+@pytest.mark.parametrize("m,d,r", [(3, 2048, 4), (5, 4096, 7),
+                                   (8, 2048, 16), (20, 2048, 11)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefix_avg_kernel_matches_ref(m, d, r, dtype, key):
+    stacked = jax.random.normal(key, (m, d), dtype)
+    n_k = jnp.arange(1.0, m + 1.0) * 10
+    perms = _perms(key, r, m)
+    got = prefix_avg_kernel(stacked, perms, n_k, block_d=2048,
+                            interpret=True)
+    want = prefix_avg_ref(stacked, perms, n_k)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_prefix_avg_matches_dense_prefix_weights(key):
+    """The running-sum walk equals the dense prefix-weight contraction —
+    the §8 oracle the streaming estimator replaces."""
+    from repro.core.shapley_batched import prefix_weight_matrix
+
+    m, d, r = 6, 512, 5
+    stacked = jax.random.normal(key, (m, d))
+    n_k = jnp.arange(1.0, m + 1.0) * 7
+    perms = _perms(key, r, m)
+    got = prefix_avg_ref(stacked, perms, n_k)
+    w = prefix_weight_matrix(perms, n_k).reshape(r * m, m)
+    want = weighted_avg_ref(stacked, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_prefix_avg_tree_wrapper_pads_ragged_leaves(key):
+    """Non-divisible D: big leaves are padded to the kernel tile and
+    sliced back; small leaves route to the jnp reference."""
+    from repro.core.shapley_batched import prefix_weight_matrix
+
+    m, r = 4, 6
+    tree = {"a": jax.random.normal(key, (m, 100, 33)),
+            "b": jax.random.normal(key, (m, 5000))}
+    n_k = jnp.array([5.0, 10.0, 15.0, 20.0])
+    perms = _perms(key, r, m)
+    got = prefix_avg(tree, perms, n_k, use_kernel=True, interpret=True)
+    w = prefix_weight_matrix(perms, n_k).reshape(r * m, m)
+    for name, leaf in tree.items():
+        want = jnp.einsum("rm,m...->r...", w, leaf)
+        assert got[name].shape == (r * m,) + leaf.shape[1:]
+        np.testing.assert_allclose(np.asarray(got[name]), np.asarray(want),
+                                   atol=1e-4)
+
+
+def test_prefix_avg_identity_walk_recovers_running_average(key):
+    """First position of every walk must be exactly that client's model."""
+    m, d = 4, 2048
+    stacked = jax.random.normal(key, (m, d))
+    n_k = jnp.ones((m,))
+    perms = jnp.stack([jnp.roll(jnp.arange(m), -i) for i in range(m)])
+    got = prefix_avg_kernel(stacked, perms, n_k, block_d=2048,
+                            interpret=True).reshape(m, m, d)
+    for i in range(m):
+        np.testing.assert_allclose(np.asarray(got[i, 0]),
+                                   np.asarray(stacked[i]), atol=1e-6)
 
 
 # ------------------------------------------------------------ ce_loss ------

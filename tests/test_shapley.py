@@ -11,7 +11,9 @@ except ImportError:                       # offline container
 
 from repro.core.aggregation import subset_average, tree_stack
 from repro.core.shapley import exact_shapley, gtg_shapley
-from repro.core.shapley_batched import gtg_shapley_batched
+from repro.core.shapley_batched import (
+    gtg_shapley_batched, gtg_shapley_streaming,
+)
 
 
 def _toy(m=4, d=3, seed=0):
@@ -47,6 +49,66 @@ def test_batched_gtg_matches_exact_oracle():
                                   n_perms=512, use_kernel=False)
     np.testing.assert_allclose(np.asarray(sv_b), np.asarray(sv_exact),
                                atol=0.25)
+
+
+def test_streaming_gtg_matches_exact_oracle():
+    stacked, n_k, w_prev, utility = _toy()
+    sv_exact = exact_shapley(stacked, n_k, w_prev, utility)
+    sv_s, _ = gtg_shapley_streaming(stacked, n_k, w_prev, utility,
+                                    jax.vmap(utility), jax.random.key(1),
+                                    n_perms=512, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(sv_s), np.asarray(sv_exact),
+                               atol=0.25)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_streaming_matches_dense_batched(seed):
+    """Streaming and dense draw the SAME walks from the same key, so they
+    compute the same MC average — equal to f32 association tolerance —
+    with identical stats."""
+    stacked, n_k, w_prev, utility = _toy(seed=seed)
+    args = (stacked, n_k, w_prev, utility, jax.vmap(utility),
+            jax.random.key(seed))
+    sv_d, st_d = gtg_shapley_batched(*args, n_perms=64, use_kernel=False)
+    sv_s, st_s = gtg_shapley_streaming(*args, n_perms=64, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(sv_s), np.asarray(sv_d),
+                               atol=1e-5)
+    assert int(st_s.utility_evals) == int(st_d.utility_evals)
+    assert int(st_s.iterations) == int(st_d.iterations) == 64
+    assert not bool(st_s.truncated_round)
+
+
+def test_streaming_matches_dense_on_truncated_round():
+    """A constant utility fires between-round truncation on both paths:
+    zero SV, zero walks, only the two gate evaluations."""
+    stacked, n_k, w_prev, _ = _toy()
+    const = lambda p: jnp.array(3.14)  # noqa: E731
+    for fn in (gtg_shapley_batched, gtg_shapley_streaming):
+        sv, st = fn(stacked, n_k, w_prev, const, jax.vmap(const),
+                    jax.random.key(0), n_perms=32, use_kernel=False)
+        assert bool(st.truncated_round)
+        assert np.all(np.asarray(sv) == 0.0)
+        # the pinned stats fix: no permutations were walked
+        assert int(st.iterations) == 0
+        assert int(st.utility_evals) == 2
+
+
+@pytest.mark.parametrize("sv_chunk", [1, 4, 32, 3, 12, -1])
+def test_streaming_chunked_bitwise_identity(sv_chunk):
+    """Every sv_chunk — one model, one walk, everything, a sub-walk
+    non-divisor (3 -> 1 walk/chunk), a padded non-divisor (12 -> 3
+    walks/chunk, which does NOT divide n_perms=8 and exercises the
+    filler-walk pad + truncating slice), and the forced unchunked pass —
+    is BIT-identical to the auto default: chunk boundaries fall on whole
+    walks and the walk accumulation is strictly left-to-right."""
+    stacked, n_k, w_prev, utility = _toy(m=4)
+    args = (stacked, n_k, w_prev, utility, jax.vmap(utility),
+            jax.random.key(2))
+    base, _ = gtg_shapley_streaming(*args, n_perms=8, sv_chunk=0,
+                                    use_kernel=False)
+    sv, _ = gtg_shapley_streaming(*args, n_perms=8, sv_chunk=sv_chunk,
+                                  use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(sv), np.asarray(base))
 
 
 def test_additivity_sums_to_total_gain():
