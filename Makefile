@@ -1,4 +1,4 @@
-.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke bench-shapley
+.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke bench-shapley telemetry-smoke
 
 check:
 	./scripts/check.sh
@@ -31,6 +31,14 @@ bench-smoke:
 # Opt into the check gate with CHECK_BENCH_SHAPLEY=1 ./scripts/check.sh
 bench-shapley:
 	PYTHONPATH=src python -m benchmarks.engine_bench --shapley --json BENCH_shapley.json
+
+# telemetry overhead smoke (DESIGN.md §15): e2e scan runs with telemetry
+# off vs host-side JSONL vs the in-scan live tap (interleaved min-of-reps)
+# plus a schema-validated segmented-grid event stream; refreshes
+# BENCH_telemetry.json.  The host-side stream must stay < 2% overhead.
+# Opt into the check gate with CHECK_TELEMETRY=1 ./scripts/check.sh
+telemetry-smoke:
+	PYTHONPATH=src python -m benchmarks.engine_bench --telemetry --json BENCH_telemetry.json
 
 # grid-runner smoke: a 2-partition, 2-segment, 4-replica grid sharded over
 # the forced-host 8-device debug mesh; refreshes BENCH_grid.json (per-

@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import time
 
 import jax
@@ -54,6 +53,16 @@ from repro.federated.client import ClientConfig, client_update
 from repro.federated.server import (
     FLConfig, run_federated, run_federated_replicated, setup_run,
 )
+from repro.telemetry import write_bench_json
+
+
+def _write_report(json_path: str | None, report: dict,
+                  rows: list[str]) -> None:
+    """Every BENCH_*.json goes through the one provenance-stamping
+    writer (repro.telemetry.events.write_bench_json)."""
+    if json_path:
+        write_bench_json(json_path, report)
+        rows.append(f"json_report,0,{json_path}")
 
 # acceptance config: M=10 of N=50 clients per round
 BASE = dict(
@@ -296,11 +305,7 @@ def run(*, full: bool = False, smoke: bool = False,
         rows.append(f"deadline_tau{tau}s,{r.sim_time_s * 1e6:.0f},"
                     f"sim_time_acc={r.final_acc:.3f}")
 
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True)
-            f.write("\n")
-        rows.append(f"json_report,0,{json_path}")
+    _write_report(json_path, report, rows)
     return rows
 
 
@@ -401,11 +406,7 @@ def run_grid_bench(*, full: bool = False,
             else sv.flops_per_dispatch / plain.flops_per_dispatch,
         },
     }
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True)
-            f.write("\n")
-        rows.append(f"json_report,0,{json_path}")
+    _write_report(json_path, report, rows)
     return rows
 
 
@@ -547,11 +548,103 @@ def run_shapley_bench(*, full: bool = False,
             "streaming_auto_off_tpu": bytes_stream_auto,
         },
     }
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True)
-            f.write("\n")
-        rows.append(f"json_report,0,{json_path}")
+    _write_report(json_path, report, rows)
+    return rows
+
+
+def run_telemetry_bench(*, full: bool = False,
+                        json_path: str | None = "BENCH_telemetry.json"
+                        ) -> list[str]:
+    """The `make telemetry-smoke` payload: telemetry overhead at the
+    engine-bench shape — e2e greedyfed scan runs with telemetry off vs
+    host-side (JSONL to disk) vs the in-scan live tap, min-of-reps on
+    warm executables, into BENCH_telemetry.json.
+
+    Acceptance: the host-side stream (the default observability mode,
+    DESIGN.md §15) costs < 2% e2e — it only unrolls stacked outputs the
+    result rebuild already fetched.  The live tap recompiles the scan
+    with per-round `jax.debug.callback`s, so its overhead is reported as
+    the diagnostic-mode price, not held to the 2% bar.  A segmented grid
+    run with telemetry rides along to exercise (and schema-validate) the
+    segment/heartbeat/checkpoint event path.
+    """
+    import os
+    import tempfile
+
+    from repro.grid import GridSpec, run_grid
+    from repro.telemetry import Telemetry, validate_events
+
+    base_kw = BASE if full else SMOKE
+    rounds = 30 if full else 12
+    reps = 5
+    cfg = FLConfig(engine="scan", selector="greedyfed", rounds=rounds,
+                   shapley_max_iters=(50 if full else 8), **base_kw)
+    tag = f"N{cfg.n_clients}_M{cfg.m}_T{rounds}"
+
+    tmp = tempfile.mkdtemp(prefix="telemetry_bench_")
+
+    # warm both executables (the live tap compiles its own scan) so every
+    # timed rep measures steady state, as a sweep would consume the engine
+    run_federated(cfg)
+    run_federated(cfg, telemetry=Telemetry(live_tap=True))
+
+    # round-robin the three modes within each rep: sequential blocks let
+    # slow box-load drift masquerade as (even negative) telemetry
+    # overhead; interleaving exposes every mode to the same drift
+    modes = {
+        "off": lambda i: None,
+        "host": lambda i: Telemetry(
+            path=os.path.join(tmp, f"host{i}.jsonl")),
+        "live": lambda i: Telemetry(
+            path=os.path.join(tmp, f"live{i}.jsonl"), live_tap=True),
+    }
+    best = {name: float("inf") for name in modes}
+    for i in range(reps):
+        for name, make_tel in modes.items():
+            tel = make_tel(i)
+            t0 = time.perf_counter()
+            run_federated(cfg, telemetry=tel)
+            best[name] = min(best[name], time.perf_counter() - t0)
+            if tel is not None:
+                tel.close()
+    t_off, t_host, t_live = best["off"], best["host"], best["live"]
+    host_pct = (t_host - t_off) / t_off * 100
+    live_pct = (t_live - t_off) / t_off * 100
+
+    # the segmented-grid event path: segments, heartbeat, checkpoints,
+    # per-cell unroll — then schema-validate the whole stream
+    gcfg = dataclasses.replace(cfg, rounds=4)
+    gspec = GridSpec.product(gcfg, selectors=["greedyfed", "fedavg"],
+                             seeds=(0,))
+    gpath = os.path.join(tmp, "grid.jsonl")
+    gtel = Telemetry(path=gpath, heartbeat_every_s=1e9)
+    run_grid(gspec, rounds_per_segment=2,
+             checkpoint_dir=os.path.join(tmp, "ckpt"), telemetry=gtel)
+    gtel.close()
+    from repro.telemetry import read_events
+    n_events = validate_events(read_events(gpath))
+
+    rows = [
+        f"telemetry_off_{tag},{t_off * 1e6:.0f},baseline",
+        f"telemetry_host_{tag},{t_host * 1e6:.0f},"
+        f"overhead_pct={host_pct:.2f}",
+        f"telemetry_live_tap_{tag},{t_live * 1e6:.0f},"
+        f"overhead_pct={live_pct:.2f}",
+        f"telemetry_grid_events,{n_events},schema_validated",
+    ]
+    report = {
+        "schema": "bench_telemetry/v1",
+        "mode": "full" if full else "smoke",
+        "config": {"n_clients": cfg.n_clients, "m": cfg.m,
+                   "rounds": rounds, "engine": "scan",
+                   "selector": "greedyfed", "reps": reps},
+        "e2e_us": {"off": t_off * 1e6, "host": t_host * 1e6,
+                   "live_tap": t_live * 1e6},
+        "overhead_pct": {"host": host_pct, "live_tap": live_pct},
+        "host_overhead_under_2pct": bool(host_pct < 2.0),
+        "grid_stream": {"events": n_events, "validated": True},
+    }
+    _write_report(json_path, report, rows)
     return rows
 
 
@@ -567,11 +660,14 @@ if __name__ == "__main__":
     ap.add_argument("--shapley", action="store_true",
                     help="dense-vs-streaming device GTG-Shapley smoke "
                          "emitting BENCH_shapley.json")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="telemetry overhead bench (off vs host-side vs "
+                         "live tap) emitting BENCH_telemetry.json")
     ap.add_argument("--json", default=None,
                     help="machine-readable report path ('' disables; "
                          "default BENCH_selection.json, BENCH_grid.json "
-                         "with --grid, or BENCH_shapley.json with "
-                         "--shapley)")
+                         "with --grid, BENCH_shapley.json with --shapley, "
+                         "or BENCH_telemetry.json with --telemetry)")
     args = ap.parse_args()
     if args.grid:
         json_path = ("BENCH_grid.json" if args.json is None
@@ -581,6 +677,10 @@ if __name__ == "__main__":
         json_path = ("BENCH_shapley.json" if args.json is None
                      else (args.json or None))
         out_rows = run_shapley_bench(full=args.full, json_path=json_path)
+    elif args.telemetry:
+        json_path = ("BENCH_telemetry.json" if args.json is None
+                     else (args.json or None))
+        out_rows = run_telemetry_bench(full=args.full, json_path=json_path)
     else:
         json_path = ("BENCH_selection.json" if args.json is None
                      else (args.json or None))

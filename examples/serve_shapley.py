@@ -1,14 +1,20 @@
 """Serving-style example: batched decode with a prefilled KV cache, plus
 per-request contribution accounting via the batched Shapley machinery.
 
-    PYTHONPATH=src python examples/serve_shapley.py
+    PYTHONPATH=src python examples/serve_shapley.py [--events out.jsonl]
 
 Demonstrates the serving path the decode_32k / long_500k dry-run shapes
 lower: prefill a batch of prompts, then step the ring-buffer KV cache (SWA
 arch => O(window) memory).  As a twist that exercises the paper's valuation
 machinery outside training, we Shapley-attribute the batch's mean logprob
 across the requests (clients == requests, utility == batch objective).
+
+`--events` streams the run through repro.telemetry (kind="serve"):
+run_start with provenance, a compile event (jit trace+lower+compile split
+via jax.monitoring), a `serve_step` per decode step, the per-request SV as
+a final `round_metrics`, run_end — then prints the report-table summary.
 """
+import argparse
 import dataclasses
 import sys
 import time
@@ -23,7 +29,17 @@ from repro.configs import get_config
 from repro.models.lm import model as M
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--events", default=None,
+                    help="telemetry JSONL path (default: off)")
+    args = ap.parse_args(argv)
+
+    from repro.telemetry import CompileTimer, Telemetry, provenance, stage
+
+    tel = Telemetry(path=args.events) if args.events else None
+    ctimer = CompileTimer()
+
     cfg = get_config("h2o_danube_3_4b").reduced(n_layers=4, d_model=256)
     cfg = dataclasses.replace(cfg, vocab=512, dtype="float32", window=64)
     key = jax.random.key(0)
@@ -31,11 +47,18 @@ def main() -> None:
 
     b, prompt_len, gen_len = 4, 256, 32
     tokens = jax.random.randint(key, (b, prompt_len), 0, cfg.vocab)
+    t_run = time.perf_counter()
+    if tel is not None:
+        tel.emit("run_start", run_id=tel.run_id, kind="serve",
+                 batch=b, prompt_len=prompt_len, gen_len=gen_len,
+                 window=cfg.window, provenance=provenance())
 
-    t0 = time.time()
-    cache, logits = M.prefill_step(cfg, params, {"tokens": tokens},
-                                   cache_len=prompt_len + gen_len)
-    print(f"# prefill {b}x{prompt_len} in {time.time()-t0:.1f}s "
+    t0 = time.perf_counter()
+    with ctimer, stage("train"):   # prefill is the serving "train" stage
+        cache, logits = M.prefill_step(cfg, params, {"tokens": tokens},
+                                       cache_len=prompt_len + gen_len)
+        jax.block_until_ready(logits)
+    print(f"# prefill {b}x{prompt_len} in {time.perf_counter()-t0:.1f}s "
           f"(SWA ring cache: {cfg.window} slots/layer)")
 
     decode = jax.jit(lambda c, tok: M.decode_step(cfg, params, c,
@@ -43,14 +66,19 @@ def main() -> None:
     out = []
     logprob_sum = jnp.zeros((b,))
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    t0 = time.time()
-    for i in range(gen_len):
-        out.append(tok)
-        cache, logits = decode(cache, tok)
-        lp = jax.nn.log_softmax(logits, -1)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        logprob_sum += jnp.take_along_axis(lp, tok[:, None], 1)[:, 0]
-    dt = time.time() - t0
+    t0 = time.perf_counter()
+    with ctimer:
+        for i in range(gen_len):
+            out.append(tok)
+            with stage("eval"):
+                cache, logits = decode(cache, tok)
+            lp = jax.nn.log_softmax(logits, -1)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            logprob_sum += jnp.take_along_axis(lp, tok[:, None], 1)[:, 0]
+            if tel is not None:
+                tel.emit("serve_step", step=i,
+                         tokens=int(b * (i + 1)))
+    dt = time.perf_counter() - t0
     print(f"# decoded {gen_len} steps x {b} seqs in {dt:.1f}s "
           f"({b*gen_len/dt:.1f} tok/s on CPU)")
     gen = jnp.stack(out, 1)
@@ -64,10 +92,32 @@ def main() -> None:
     from repro.core.aggregation import tree_stack
     contrib = [{"lp": logprob_sum[r][None]} for r in range(b)]
     stacked = tree_stack(contrib)
-    sv = exact_shapley(stacked, jnp.ones(b), {"lp": jnp.zeros(1)},
-                       lambda p: jnp.sum(p["lp"]))
+    with ctimer, stage("shapley"):
+        sv = exact_shapley(stacked, jnp.ones(b), {"lp": jnp.zeros(1)},
+                           lambda p: jnp.sum(p["lp"]))
     print(f"# request Shapley values of batch logprob: "
           f"{np.round(np.asarray(sv), 3).tolist()}")
+
+    if tel is not None:
+        wall = time.perf_counter() - t_run
+        tel.emit("compile", seconds=ctimer.seconds,
+                 program="prefill+decode+shapley")
+        # the per-request attribution, in the stream's round vocabulary:
+        # one "round", every request selected, exact SV = 2^b evaluations
+        tel.emit("round_metrics", round=0, selections=list(range(b)),
+                 epochs=[gen_len] * b, sv=np.asarray(sv),
+                 utility_evals=2 ** b, sv_truncated=False,
+                 upload_bytes=0, download_bytes=0)
+        tel.emit("run_end", wall_time_s=wall,
+                 compile_time_s=ctimer.seconds,
+                 execute_time_s=max(wall - ctimer.seconds, 0.0),
+                 tokens_per_sec=b * gen_len / dt,
+                 utility_evals=2 ** b)
+        tel.close()
+        from repro.telemetry.report import render_table, summarize
+        from repro.telemetry import read_events
+        print(f"# telemetry -> {args.events}")
+        print(render_table(summarize(read_events(args.events))))
 
 
 if __name__ == "__main__":

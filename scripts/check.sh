@@ -7,6 +7,9 @@
 #   bench smoke and refreshes BENCH_selection.json (perf trajectory).
 #   CHECK_BENCH_SHAPLEY=1 scripts/check.sh  additionally runs the dense-
 #   vs-streaming Shapley bench and refreshes BENCH_shapley.json.
+#   CHECK_TELEMETRY=1 scripts/check.sh  additionally runs the telemetry
+#   overhead bench (off vs host-side vs live tap) and refreshes
+#   BENCH_telemetry.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -41,4 +44,10 @@ if [[ "${CHECK_GRID_SMOKE:-0}" == "1" ]]; then
   echo
   echo "== grid runner smoke (BENCH_grid.json) =="
   make grid-smoke
+fi
+
+if [[ "${CHECK_TELEMETRY:-0}" == "1" ]]; then
+  echo
+  echo "== telemetry overhead smoke (BENCH_telemetry.json) =="
+  make telemetry-smoke
 fi

@@ -80,15 +80,28 @@ def decode_prng_keys(tree: PyTree, like: PyTree) -> PyTree:
         if _is_prng_key(l) else x, tree, like)
 
 
-def save_carry(path: str, carry: PyTree) -> None:
+def save_carry(path: str, carry: PyTree, *, telemetry=None) -> None:
     """Checkpoint a scan-segment carry (params + selector state + typed
-    rng key) — `save_pytree` with the key leaves made serialisable."""
+    rng key) — `save_pytree` with the key leaves made serialisable.
+    With a telemetry sink, emits a `checkpoint_save` event carrying the
+    path, on-disk bytes, and write seconds."""
+    import time
+
+    t0 = time.perf_counter()
     save_pytree(path, encode_prng_keys(carry))
+    if telemetry is not None:
+        full = path if path.endswith(".npz") else path + ".npz"
+        telemetry.emit("checkpoint_save", path=full,
+                       nbytes=os.path.getsize(full),
+                       seconds=time.perf_counter() - t0)
 
 
-def load_carry(path: str, like: PyTree) -> PyTree:
+def load_carry(path: str, like: PyTree, *, telemetry=None) -> PyTree:
     """Inverse of `save_carry`: bit-exact roundtrip including typed keys."""
     data = load_pytree(path, encode_prng_keys(like))
+    if telemetry is not None:
+        telemetry.emit("checkpoint_load",
+                       path=path if path.endswith(".npz") else path + ".npz")
     return decode_prng_keys(data, like)
 
 

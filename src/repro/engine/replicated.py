@@ -57,12 +57,16 @@ def run_replicated(cfg, seeds, data=None, model=None):
         FLResult, round_epochs, setup_run,
     )
 
-    t_start = time.time()
+    from repro.telemetry.trace import CompileTimer
+
+    t_start = time.perf_counter()
     seeds = list(seeds)
     if not seeds:
         raise ValueError("run_federated_replicated needs at least one seed")
-    setups = [setup_run(dataclasses.replace(cfg, seed=s), data, model)
-              for s in seeds]
+    ctimer = CompileTimer()
+    with ctimer:
+        setups = [setup_run(dataclasses.replace(cfg, seed=s), data, model)
+                  for s in seeds]
     model = setups[0].model
     n_seeds = len(seeds)
 
@@ -116,57 +120,60 @@ def run_replicated(cfg, seeds, data=None, model=None):
     download_bytes = [0] * n_seeds
     dispatches = 0
 
-    for t in range(cfg.rounds):
-        # ---- per-replica host-side strategy logic ------------------------
-        sel_rows, epoch_rows, key_rows = [], [], []
-        losses_all = None
-        if uses_losses:
-            losses_all = losses_rep(params, xs, ys, nv)
+    # jit compiles during the rounds (first dispatch of each cached
+    # program) are attributed to compile_time_s by the active timer
+    with ctimer:
+        for t in range(cfg.rounds):
+            # ---- per-replica host-side strategy logic ------------------------
+            sel_rows, epoch_rows, key_rows = [], [], []
+            losses_all = None
+            if uses_losses:
+                losses_all = losses_rep(params, xs, ys, nv)
+                dispatches += 1
+            for i, s in enumerate(setups):
+                keys[i], sel_key, round_key = jax.random.split(keys[i], 3)
+                ctx = DeviceSelectionContext(
+                    data_fractions=fractions_rep[i],
+                    local_losses=losses_all[i] if uses_losses else zero_losses,
+                    poc_d=jnp.asarray(d_sched[t]))
+                sel_dev, states[i] = dev_select(states[i], sel_key, ctx)
+                sel = np.asarray(sel_dev, np.int64)
+                selections[i].append(sel)
+                sel_rows.append(sel)
+                epoch_rows.append(round_epochs(cfg, s, sel, t))
+                key_rows.append(round_key)
+                upload_bytes[i] += codec_bytes * len(sel)
+                download_bytes[i] += model_bytes * len(sel)
+                if vclocks[i] is not None:
+                    vclocks[i].advance(round_duration_s(
+                        s.clock, cfg.schedule, sel, epoch_rows[-1]))
+
+            # ---- ONE dispatch advances every replica -------------------------
+            out = step_rep(params, xs, ys, nv, sigma, x_val, y_val,
+                           jnp.asarray(np.stack(sel_rows)),
+                           jnp.asarray(np.stack(epoch_rows)),
+                           jnp.stack(key_rows))
+            params = out.params
             dispatches += 1
-        for i, s in enumerate(setups):
-            keys[i], sel_key, round_key = jax.random.split(keys[i], 3)
-            ctx = DeviceSelectionContext(
-                data_fractions=fractions_rep[i],
-                local_losses=losses_all[i] if uses_losses else zero_losses,
-                poc_d=jnp.asarray(d_sched[t]))
-            sel_dev, states[i] = dev_select(states[i], sel_key, ctx)
-            sel = np.asarray(sel_dev, np.int64)
-            selections[i].append(sel)
-            sel_rows.append(sel)
-            epoch_rows.append(round_epochs(cfg, s, sel, t))
-            key_rows.append(round_key)
-            upload_bytes[i] += codec_bytes * len(sel)
-            download_bytes[i] += model_bytes * len(sel)
-            if vclocks[i] is not None:
-                vclocks[i].advance(round_duration_s(
-                    s.clock, cfg.schedule, sel, epoch_rows[-1]))
 
-        # ---- ONE dispatch advances every replica -------------------------
-        out = step_rep(params, xs, ys, nv, sigma, x_val, y_val,
-                       jnp.asarray(np.stack(sel_rows)),
-                       jnp.asarray(np.stack(epoch_rows)),
-                       jnp.stack(key_rows))
-        params = out.params
-        dispatches += 1
-
-        sv_rows = np.asarray(out.sv) if needs_sv else None
-        evals_rows = np.asarray(out.utility_evals)
-        for i in range(n_seeds):
-            sv_i = jnp.asarray(sv_rows[i]) if needs_sv else None
-            if needs_sv:
-                total_evals[i] += int(evals_rows[i])
-            states[i] = dev_update(states[i], jnp.asarray(sel_rows[i]),
-                                   sv_i)
-
-        if emask[t]:
-            accs = np.asarray(eval_rep(params, x_test, y_test))
-            vls = np.asarray(vloss_rep(params, x_val, y_val))
-            dispatches += 2
+            sv_rows = np.asarray(out.sv) if needs_sv else None
+            evals_rows = np.asarray(out.utility_evals)
             for i in range(n_seeds):
-                test_acc[i].append((t + 1, float(accs[i])))
-                val_loss_hist[i].append((t + 1, float(vls[i])))
+                sv_i = jnp.asarray(sv_rows[i]) if needs_sv else None
+                if needs_sv:
+                    total_evals[i] += int(evals_rows[i])
+                states[i] = dev_update(states[i], jnp.asarray(sel_rows[i]),
+                                       sv_i)
 
-    wall = time.time() - t_start
+            if emask[t]:
+                accs = np.asarray(eval_rep(params, x_test, y_test))
+                vls = np.asarray(vloss_rep(params, x_val, y_val))
+                dispatches += 2
+                for i in range(n_seeds):
+                    test_acc[i].append((t + 1, float(accs[i])))
+                    val_loss_hist[i].append((t + 1, float(vls[i])))
+
+    wall = time.perf_counter() - t_start
     results = []
     for i, s in enumerate(setups):
         params_i = jax.tree.map(lambda x: x[i], params)
@@ -185,6 +192,8 @@ def run_replicated(cfg, seeds, data=None, model=None):
             download_bytes=download_bytes[i],
             sim_time_s=vclocks[i].now_s if vclocks[i] is not None else 0.0,
             dispatches=dispatches,     # shared across the fused run
+            compile_time_s=ctimer.seconds,
+            execute_time_s=max(wall - ctimer.seconds, 0.0),
         ))
     return results
 

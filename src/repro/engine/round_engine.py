@@ -80,16 +80,22 @@ def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
         raise ValueError(f"unknown shapley_impl {spec.shapley_impl!r}; "
                          f"options: {SHAPLEY_IMPLS}")
 
+    from repro.telemetry.trace import named_stage
+
     def round_step(params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
                    sel, epochs_k, round_key) -> RoundOutput:
-        stacked, n_k_sel, sv_key = cohort_update(
-            model, ccfg, params, xs_all, ys_all, nv_all, sigma_all,
-            sel, epochs_k, round_key)
+        # named_stage scopes are pure HLO metadata (DESIGN.md §15): they
+        # let a profile of the fused dispatch attribute time to
+        # train/shapley/aggregate instead of one opaque program
+        with named_stage("train"):
+            stacked, n_k_sel, sv_key = cohort_update(
+                model, ccfg, params, xs_all, ys_all, nv_all, sigma_all,
+                sel, epochs_k, round_key)
 
-        if spec.upload_codec != "identity":
-            stacked = jax.vmap(
-                lambda u: codec_roundtrip(spec.upload_codec, u, params)
-            )(stacked)
+            if spec.upload_codec != "identity":
+                stacked = jax.vmap(
+                    lambda u: codec_roundtrip(spec.upload_codec, u, params)
+                )(stacked)
 
         m = sel.shape[0]
         sv = jnp.zeros((m,))
@@ -99,34 +105,40 @@ def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
             def utility_fn(p):  # U(w) = -L(w; D_val), as in the loop engine
                 return -model.loss(p, x_val, y_val)
 
-            if spec.shapley_impl in ("batched", "streaming"):
-                from repro.core.shapley_batched import (
-                    gtg_shapley_batched, gtg_shapley_streaming,
-                    make_batched_mlp_utility,
-                )
-                # the same helper the loop engine uses (works on traced
-                # x_val/y_val), so loop and fused engines agree bitwise
-                batched_utility_fn = make_batched_mlp_utility(
-                    model, x_val, y_val)
-                if spec.shapley_impl == "streaming":
-                    sv, stats = gtg_shapley_streaming(
-                        stacked, n_k_sel, params, utility_fn,
-                        batched_utility_fn, sv_key, eps=spec.shapley_eps,
-                        n_perms=spec.shapley_max_iters,
-                        sv_chunk=spec.sv_chunk)
+            with named_stage("shapley"):
+                if spec.shapley_impl in ("batched", "streaming"):
+                    from repro.core.shapley_batched import (
+                        gtg_shapley_batched, gtg_shapley_streaming,
+                        make_batched_mlp_utility,
+                    )
+                    # the same helper the loop engine uses (works on traced
+                    # x_val/y_val), so loop and fused engines agree bitwise
+                    batched_utility_fn = make_batched_mlp_utility(
+                        model, x_val, y_val)
+                    if spec.shapley_impl == "streaming":
+                        sv, stats = gtg_shapley_streaming(
+                            stacked, n_k_sel, params, utility_fn,
+                            batched_utility_fn, sv_key,
+                            eps=spec.shapley_eps,
+                            n_perms=spec.shapley_max_iters,
+                            sv_chunk=spec.sv_chunk)
+                    else:
+                        sv, stats = gtg_shapley_batched(
+                            stacked, n_k_sel, params, utility_fn,
+                            batched_utility_fn, sv_key,
+                            eps=spec.shapley_eps,
+                            n_perms=spec.shapley_max_iters)
                 else:
-                    sv, stats = gtg_shapley_batched(
-                        stacked, n_k_sel, params, utility_fn,
-                        batched_utility_fn, sv_key, eps=spec.shapley_eps,
-                        n_perms=spec.shapley_max_iters)
-            else:
-                sv, stats = gtg_shapley(
-                    stacked, n_k_sel, params, utility_fn, sv_key,
-                    eps=spec.shapley_eps, max_iters=spec.shapley_max_iters)
-            evals = stats.utility_evals
-            truncated = stats.truncated_round
+                    sv, stats = gtg_shapley(
+                        stacked, n_k_sel, params, utility_fn, sv_key,
+                        eps=spec.shapley_eps,
+                        max_iters=spec.shapley_max_iters)
+                evals = stats.utility_evals
+                truncated = stats.truncated_round
 
-        new_params = weighted_average(stacked, normalized_weights(n_k_sel))
+        with named_stage("aggregate"):
+            new_params = weighted_average(stacked,
+                                          normalized_weights(n_k_sel))
         return RoundOutput(new_params, sv, evals, truncated)
 
     return round_step
@@ -176,11 +188,18 @@ class ScanSpec(NamedTuple):
     (DESIGN.md §13), passed as a scan operand — one executable serves
     every cadence, and under the replica vmap the stacked `(R, T)` rows
     give each replica its own per-cell cadence.
+
+    `live_tap` (DESIGN.md §15) plants the opt-in telemetry callback
+    (`repro.telemetry.trace.round_tap`) in the scan body so round metrics
+    stream out WHILE the one-dispatch run executes.  Trace-affecting
+    (separate cache entry) but bit-neutral; default False keeps the
+    standard executables callback-free.
     """
     round: RoundSpec
     selectors: tuple            # tuple[SelectorSpec, ...]
     rounds: int                 # T: total rounds of the run
     rounds_per_segment: int = 0  # K: segment scan length (0 = whole run)
+    live_tap: bool = False       # in-scan telemetry stream (§15)
 
 
 class ScanRunOutput(NamedTuple):
@@ -229,6 +248,8 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
     valuation update, cond-gated eval.  `make_run_scan` (whole run) and
     `make_segment_step` (K-round segment) scan the SAME body, which is
     what makes segmented execution bit-identical to the fused run."""
+    from repro.telemetry.trace import attach_live_tap, named_stage
+
     round_step = make_round_step(model, ccfg, spec.round)
     uses_losses = any(sp.uses_local_losses for sp in spec.selectors)
     n_clients = spec.selectors[0].n_clients
@@ -247,17 +268,24 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
             else:
                 losses = jnp.zeros((n_clients,), jnp.float32)
 
-            ctx = DeviceSelectionContext(data_fractions=fractions,
-                                         local_losses=losses, poc_d=d_t)
-            sel, sstate = device_select_any(spec.selectors, strategy_id,
-                                            sstate, sel_key, ctx)
-            epochs_k = jnp.take(epochs_row, sel)
+            with named_stage("select"):
+                ctx = DeviceSelectionContext(data_fractions=fractions,
+                                             local_losses=losses, poc_d=d_t)
+                sel, sstate = device_select_any(spec.selectors, strategy_id,
+                                                sstate, sel_key, ctx)
+                epochs_k = jnp.take(epochs_row, sel)
 
             out = round_step(params, xs_all, ys_all, nv_all, sigma_all,
                              x_val, y_val, sel, epochs_k, round_key)
             sstate = device_update_any(
                 spec.selectors, strategy_id, sstate, sel,
                 out.sv if spec.round.needs_sv else None)
+
+            if spec.live_tap:
+                # opt-in in-scan stream (§15): host callback per round,
+                # value-neutral (nothing downstream reads from it)
+                attach_live_tap(t, strategy_id, sel, out.sv,
+                                out.utility_evals, out.sv_truncated)
 
             # table-driven eval (DESIGN.md §13): `do_any` is the OR of the
             # replicas' eval-mask rows and reaches the trace UNBATCHED, so
@@ -266,12 +294,13 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
             # `do_mine` (this replica's row) masks out the writes of
             # replicas whose own cadence is off this round
             nan = jnp.full((), jnp.nan, jnp.float32)
-            acc, vloss = jax.lax.cond(
-                do_any,
-                lambda p: (model.accuracy(p, x_test, y_test),
-                           model.loss(p, x_val, y_val)),
-                lambda p: (nan, nan),
-                out.params)
+            with named_stage("eval"):
+                acc, vloss = jax.lax.cond(
+                    do_any,
+                    lambda p: (model.accuracy(p, x_test, y_test),
+                               model.loss(p, x_val, y_val)),
+                    lambda p: (nan, nan),
+                    out.params)
             acc = jnp.where(do_mine, acc, nan)
             vloss = jnp.where(do_mine, vloss, nan)
             eval_slot = eval_slot + do_mine.astype(jnp.int32)

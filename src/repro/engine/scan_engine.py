@@ -30,6 +30,7 @@ from __future__ import annotations
 import time
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -76,10 +77,12 @@ def scan_operands(cfg, s) -> tuple:
             jnp.asarray(0, jnp.int32), s.sel_state, s.key)
 
 
-def make_scan_spec(cfg, selector_specs: tuple) -> ScanSpec:
+def make_scan_spec(cfg, selector_specs: tuple, *,
+                   live_tap: bool = False) -> ScanSpec:
     """ScanSpec for an FLConfig; `selector_specs` may hold several
     strategies for a switch-dispatched mixed batch (superset semantics:
-    SV is computed if ANY strategy needs it)."""
+    SV is computed if ANY strategy needs it).  `live_tap` opts the trace
+    into the in-scan telemetry callback (DESIGN.md §15)."""
     needs_sv = any(sp.uses_shapley for sp in selector_specs)
     max_iters = cfg.shapley_max_iters or 50 * cfg.m
     rspec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
@@ -90,11 +93,12 @@ def make_scan_spec(cfg, selector_specs: tuple) -> ScanSpec:
     # eval_every is NOT in the spec: the cadence is a (T,) bool operand
     # (schedule.eval_mask), so one executable serves every cadence
     return ScanSpec(round=rspec, selectors=tuple(selector_specs),
-                    rounds=cfg.rounds)
+                    rounds=cfg.rounds, live_tap=live_tap)
 
 
 def results_from_scan(cfg, s, out, *, wall_time_s: float, seed: int,
-                      dispatches: int, uses_shapley: bool):
+                      dispatches: int, uses_shapley: bool,
+                      compile_time_s: float = 0.0):
     """Rebuild the host-side FLResult bookkeeping from a ScanRunOutput."""
     from repro.federated.server import FLConfig, FLResult  # cycle-free at call time
     import dataclasses
@@ -148,23 +152,62 @@ def results_from_scan(cfg, s, out, *, wall_time_s: float, seed: int,
         download_bytes=download_bytes,
         sim_time_s=vclock.now_s if vclock is not None else 0.0,
         dispatches=dispatches,
+        compile_time_s=compile_time_s,
+        execute_time_s=max(wall_time_s - compile_time_s, 0.0),
     )
 
 
-def run_federated_scan(cfg, s, t_start: float):
+def run_federated_scan(cfg, s, t_start: float, *, telemetry=None,
+                       ctimer=None):
     """Execute `cfg.rounds` federated rounds as one scan dispatch.
 
     `s` is the RunSetup from `server.setup_run` — the rng/key streams it
     consumed match the other engines, so the scan starts from identical
     partitions, params, and selector order.
+
+    `telemetry=None` is the zero-cost default: no extra dispatches, no
+    in-trace callbacks, bit-identical outputs.  With a sink attached the
+    stacked ScanRunOutput is unrolled into per-round events after the
+    dispatch (host-side, §15); `telemetry.live_tap` additionally selects
+    the tap-carrying executable and routes its in-scan callbacks.
     """
+    from repro.telemetry.trace import CompileTimer, live_sink
+
     spec_sel = s.sel_spec
-    spec = make_scan_spec(cfg, (spec_sel,))
+    live = bool(telemetry is not None and telemetry.live_tap)
+    spec = make_scan_spec(cfg, (spec_sel,), live_tap=live)
+    if ctimer is None:
+        ctimer = CompileTimer()
 
-    run = jitted_run_scan(s.model, cfg.client, spec)
-    out = run(s.params, *scan_operands(cfg, s))
+    with ctimer:
+        run = jitted_run_scan(s.model, cfg.client, spec)
+        with live_sink(telemetry if live else None):
+            out = run(s.params, *scan_operands(cfg, s))
+            if live:
+                # drain the in-scan debug callbacks before the sink
+                # detaches — taps must land inside the run's stream
+                jax.block_until_ready(out.params)
 
-    return results_from_scan(cfg, s, out,
-                             wall_time_s=time.time() - t_start,
-                             seed=cfg.seed, dispatches=1,
-                             uses_shapley=spec_sel.uses_shapley)
+    res = results_from_scan(cfg, s, out,
+                            wall_time_s=time.perf_counter() - t_start,
+                            seed=cfg.seed, dispatches=1,
+                            uses_shapley=spec_sel.uses_shapley,
+                            compile_time_s=ctimer.seconds)
+    if telemetry is not None:
+        from repro.telemetry.metrics import emit_scan_rounds, run_end_payload
+        telemetry.emit("compile", seconds=ctimer.seconds, program="run_scan")
+        emit_scan_rounds(
+            telemetry, out, uses_shapley=spec_sel.uses_shapley,
+            codec_bytes=codec_nbytes(cfg.upload_codec, s.params),
+            model_bytes=s.model_bytes,
+            emask=eval_mask(cfg.rounds, cfg.eval_every))
+        telemetry.emit("run_end", **run_end_payload(
+            rounds=cfg.rounds, wall_time_s=res.wall_time_s,
+            compile_time_s=res.compile_time_s, final_acc=res.final_acc,
+            utility_evals=res.shapley_evals,
+            upload_bytes=res.upload_bytes, download_bytes=res.download_bytes,
+            sv_rounds=cfg.rounds if spec_sel.uses_shapley else 0,
+            truncated_rounds=int(np.asarray(out.sv_truncated).sum())
+            if spec_sel.uses_shapley else 0,
+            dispatches=1))
+    return res

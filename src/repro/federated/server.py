@@ -125,6 +125,12 @@ class FLResult(NamedTuple):
     download_bytes: int = 0   # total PS->client traffic (model broadcasts)
     sim_time_s: float = 0.0   # virtual-clock seconds (0 without schedule)
     dispatches: int = 0       # host->device program launches issued
+    # wall_time_s split (DESIGN.md §15): jit trace+lower+compile seconds
+    # attributed via jax.monitoring vs everything else.  A warm executable
+    # (cached round/scan programs) reports compile_time_s ~ 0, so the
+    # headline timing no longer silently includes first-dispatch compiles.
+    compile_time_s: float = 0.0
+    execute_time_s: float = 0.0
 
 
 def _pad_clients(x, y, parts):
@@ -281,8 +287,15 @@ def _make_round_engine(cfg: FLConfig, s: RunSetup, needs_sv: bool,
 
 
 def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
-                  model: Optional[ClassifierModel] = None) -> FLResult:
-    t_start = time.time()
+                  model: Optional[ClassifierModel] = None, *,
+                  telemetry=None) -> FLResult:
+    """Drive one federated run; `telemetry` (repro.telemetry.Telemetry)
+    opts into the structured event stream of DESIGN.md §15 — the default
+    None path adds zero dispatches and leaves every output bit-identical.
+    """
+    from repro.telemetry.trace import CompileTimer
+
+    t_start = time.perf_counter()
     if cfg.engine not in ("loop", "batched", "scan"):
         raise ValueError(f"unknown engine {cfg.engine!r}; "
                          "options: 'loop', 'batched', 'scan'")
@@ -290,10 +303,20 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
     if cfg.shapley_impl not in SHAPLEY_IMPLS:
         raise ValueError(f"unknown shapley_impl {cfg.shapley_impl!r}; "
                          f"options: {SHAPLEY_IMPLS}")
-    s = setup_run(cfg, data, model)
+    ctimer = CompileTimer()
+    with ctimer:
+        s = setup_run(cfg, data, model)
+    if telemetry is not None:
+        from repro.telemetry.events import provenance
+        telemetry.emit("run_start", run_id=telemetry.run_id, kind="solo",
+                       engine=cfg.engine, selector=cfg.selector,
+                       n_clients=cfg.n_clients, m=cfg.m,
+                       rounds=cfg.rounds, seed=cfg.seed,
+                       eval_every=cfg.eval_every, provenance=provenance())
     if cfg.engine == "scan":
         from repro.engine.scan_engine import run_federated_scan
-        return run_federated_scan(cfg, s, t_start)
+        return run_federated_scan(cfg, s, t_start, telemetry=telemetry,
+                                  ctimer=ctimer)
     model, params, key = s.model, s.params, s.key
     sel_spec, sstate = s.sel_spec, s.sel_state
     dev_select, dev_update = jitted_selector(sel_spec)
@@ -330,112 +353,157 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
     total_evals = 0
     upload_bytes = download_bytes = 0
     dispatches = 0
+    sv_rounds = trunc_rounds = 0   # telemetry-only truncation counters
     vclock = VirtualClock() if s.clock is not None else None
 
-    for t in range(cfg.rounds):
-        key, sel_key, round_key = jax.random.split(key, 3)
+    # jit compiles during the rounds (first dispatch of each cached
+    # program) are attributed to compile_time_s by the active timer
+    with ctimer:
+        for t in range(cfg.rounds):
+            key, sel_key, round_key = jax.random.split(key, 3)
 
-        losses = zero_losses
-        if sel_spec.uses_local_losses:
-            losses = all_losses_fn(params, s.xs, s.ys, s.n_valid)
-            dispatches += 1
-
-        ctx = DeviceSelectionContext(data_fractions=fractions,
-                                     local_losses=losses,
-                                     poc_d=jnp.asarray(d_sched[t]))
-        sel_dev, sstate = dev_select(sstate, sel_key, ctx)
-        sel = np.asarray(sel_dev, np.int64)
-        selections.append(sel)
-        epochs_k = round_epochs(cfg, s, sel, t)
-
-        sv_round = None
-        if engine is not None:
-            # ---- fused round: ONE dispatch for train+codec+SV+average ----
-            out = engine.step(params, sel, epochs_k, round_key)
-            params = out.params
-            if needs_sv:
-                sv_round = out.sv
-                total_evals += int(out.utility_evals)
-            upload_bytes += codec_bytes * len(sel)
-            dispatches += 1
-        else:
-            # ---- legacy loop: ClientUpdate at each selected client -------
-            ckeys = jax.random.split(round_key, len(sel) + 1)
-            updates = []
-            for i, k_id in enumerate(sel):
-                upd = client_update(
-                    model, cfg.client, params, s.xs[k_id], s.ys[k_id],
-                    s.n_valid[k_id], jnp.asarray(int(epochs_k[i])),
-                    jnp.asarray(s.sigma_k_all[k_id]), ckeys[i])
-                if cfg.upload_codec != "identity":
-                    upd, nbytes = compress_update(cfg.upload_codec, upd,
-                                                  params)
-                else:
-                    nbytes = s.model_bytes
-                upload_bytes += nbytes
-                updates.append(upd)
-            dispatches += len(sel)
-
-            stacked = tree_stack(updates)
-            n_k_sel = s.n_k_all[jnp.asarray(sel)]
-
-            # ---- GTG-Shapley at the PS (Alg. 2 / device variants) --------
-            if needs_sv:
-                if cfg.shapley_impl == "streaming":
-                    from repro.core.shapley_batched import (
-                        gtg_shapley_streaming,
-                    )
-                    sv_round, stats = gtg_shapley_streaming(
-                        stacked, n_k_sel, params, utility_fn,
-                        batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
-                        n_perms=max_iters, sv_chunk=cfg.sv_chunk)
-                elif cfg.shapley_impl == "batched":
-                    from repro.core.shapley_batched import gtg_shapley_batched
-                    sv_round, stats = gtg_shapley_batched(
-                        stacked, n_k_sel, params, utility_fn,
-                        batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
-                        n_perms=max_iters)
-                else:
-                    sv_round, stats = gtg_shapley(
-                        stacked, n_k_sel, params, utility_fn, ckeys[-1],
-                        eps=cfg.shapley_eps, max_iters=max_iters)
-                total_evals += int(stats.utility_evals)
+            losses = zero_losses
+            if sel_spec.uses_local_losses:
+                losses = all_losses_fn(params, s.xs, s.ys, s.n_valid)
                 dispatches += 1
 
-            # ---- ModelAverage (Alg. 1 line 9) ----------------------------
-            params = weighted_average(stacked, normalized_weights(n_k_sel))
-            dispatches += 1
+            ctx = DeviceSelectionContext(data_fractions=fractions,
+                                         local_losses=losses,
+                                         poc_d=jnp.asarray(d_sched[t]))
+            sel_dev, sstate = dev_select(sstate, sel_key, ctx)
+            sel = np.asarray(sel_dev, np.int64)
+            selections.append(sel)
+            epochs_k = round_epochs(cfg, s, sel, t)
 
-        download_bytes += s.model_bytes * len(sel)  # w^t broadcast
-        if vclock is not None:
-            vclock.advance(round_duration_s(s.clock, cfg.schedule, sel,
-                                            epochs_k))
+            sv_round = None
+            evals_round = 0
+            trunc_round = None         # device bool; read only with telemetry
+            round_upload = 0
+            if engine is not None:
+                # ---- fused round: ONE dispatch for train+codec+SV+average ----
+                out = engine.step(params, sel, epochs_k, round_key)
+                params = out.params
+                if needs_sv:
+                    sv_round = out.sv
+                    evals_round = int(out.utility_evals)
+                    total_evals += evals_round
+                    trunc_round = out.sv_truncated
+                round_upload = codec_bytes * len(sel)
+                upload_bytes += round_upload
+                dispatches += 1
+            else:
+                # ---- legacy loop: ClientUpdate at each selected client -------
+                ckeys = jax.random.split(round_key, len(sel) + 1)
+                updates = []
+                for i, k_id in enumerate(sel):
+                    upd = client_update(
+                        model, cfg.client, params, s.xs[k_id], s.ys[k_id],
+                        s.n_valid[k_id], jnp.asarray(int(epochs_k[i])),
+                        jnp.asarray(s.sigma_k_all[k_id]), ckeys[i])
+                    if cfg.upload_codec != "identity":
+                        upd, nbytes = compress_update(cfg.upload_codec, upd,
+                                                      params)
+                    else:
+                        nbytes = s.model_bytes
+                    round_upload += nbytes
+                    updates.append(upd)
+                upload_bytes += round_upload
+                dispatches += len(sel)
 
-        sstate = dev_update(sstate, sel_dev, sv_round)
+                stacked = tree_stack(updates)
+                n_k_sel = s.n_k_all[jnp.asarray(sel)]
 
-        if emask[t]:
-            acc = float(eval_acc(params, s.x_test, s.y_test))
-            vl = float(-utility_fn(params))
-            test_acc.append((t + 1, acc))
-            val_loss_hist.append((t + 1, vl))
-            dispatches += 2
+                # ---- GTG-Shapley at the PS (Alg. 2 / device variants) --------
+                if needs_sv:
+                    if cfg.shapley_impl == "streaming":
+                        from repro.core.shapley_batched import (
+                            gtg_shapley_streaming,
+                        )
+                        sv_round, stats = gtg_shapley_streaming(
+                            stacked, n_k_sel, params, utility_fn,
+                            batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
+                            n_perms=max_iters, sv_chunk=cfg.sv_chunk)
+                    elif cfg.shapley_impl == "batched":
+                        from repro.core.shapley_batched import gtg_shapley_batched
+                        sv_round, stats = gtg_shapley_batched(
+                            stacked, n_k_sel, params, utility_fn,
+                            batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
+                            n_perms=max_iters)
+                    else:
+                        sv_round, stats = gtg_shapley(
+                            stacked, n_k_sel, params, utility_fn, ckeys[-1],
+                            eps=cfg.shapley_eps, max_iters=max_iters)
+                    evals_round = int(stats.utility_evals)
+                    total_evals += evals_round
+                    trunc_round = stats.truncated_round
+                    dispatches += 1
+
+                # ---- ModelAverage (Alg. 1 line 9) ----------------------------
+                params = weighted_average(stacked, normalized_weights(n_k_sel))
+                dispatches += 1
+
+            download_bytes += s.model_bytes * len(sel)  # w^t broadcast
+            if vclock is not None:
+                vclock.advance(round_duration_s(s.clock, cfg.schedule, sel,
+                                                epochs_k))
+
+            sstate = dev_update(sstate, sel_dev, sv_round)
+
+            do_eval = bool(emask[t])
+            if do_eval:
+                acc = float(eval_acc(params, s.x_test, s.y_test))
+                vl = float(-utility_fn(params))
+                test_acc.append((t + 1, acc))
+                val_loss_hist.append((t + 1, vl))
+                dispatches += 2
+
+            if telemetry is not None:
+                truncated = bool(np.asarray(trunc_round)) \
+                    if trunc_round is not None else False
+                if needs_sv:
+                    sv_rounds += 1
+                    trunc_rounds += truncated
+                fields = dict(round=t, selections=sel, epochs=epochs_k,
+                              utility_evals=evals_round, sv_truncated=truncated,
+                              upload_bytes=round_upload,
+                              download_bytes=s.model_bytes * len(sel))
+                if sv_round is not None:
+                    fields["sv"] = np.asarray(sv_round)
+                telemetry.emit("round_metrics", **fields)
+                if do_eval:
+                    telemetry.emit("eval", round=t, test_acc=acc, val_loss=vl)
 
     counts = np.asarray(sstate.valuation.counts)
+    wall = time.perf_counter() - t_start
+    compile_s = ctimer.seconds
+    final_acc = test_acc[-1][1] if test_acc else float("nan")
+    if telemetry is not None:
+        from repro.telemetry.metrics import run_end_payload
+        telemetry.emit("compile", seconds=compile_s,
+                       program=f"{cfg.engine}_round_programs")
+        telemetry.emit("run_end", **run_end_payload(
+            rounds=cfg.rounds, wall_time_s=wall, compile_time_s=compile_s,
+            final_acc=final_acc, utility_evals=total_evals,
+            upload_bytes=upload_bytes, download_bytes=download_bytes,
+            sv_rounds=sv_rounds, truncated_rounds=trunc_rounds,
+            dispatches=dispatches))
     return FLResult(
         config=cfg,
         test_acc=test_acc,
         val_loss=val_loss_hist,
-        final_acc=test_acc[-1][1] if test_acc else float("nan"),
+        final_acc=final_acc,
         sv_final=np.asarray(sstate.valuation.sv),
         selection_counts=counts,
         selections=selections,
         shapley_evals=total_evals,
-        wall_time_s=time.time() - t_start,
+        wall_time_s=wall,
         params=params,
         upload_bytes=upload_bytes,
         download_bytes=download_bytes,
         sim_time_s=vclock.now_s if vclock is not None else 0.0,
         dispatches=dispatches,
+        compile_time_s=compile_s,
+        execute_time_s=max(wall - compile_s, 0.0),
     )
 
 

@@ -120,7 +120,8 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
              rounds_per_segment: int = 0,
              checkpoint_dir: Optional[str] = None, resume: bool = True,
              shard: bool = True, max_segments: Optional[int] = None,
-             compile_stats: bool = False) -> Optional[GridResult]:
+             compile_stats: bool = False,
+             telemetry=None) -> Optional[GridResult]:
     """Execute a grid.  Returns None if `max_segments` stopped the run
     before completion (the checkpoints on disk are the resume point).
 
@@ -135,12 +136,18 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
       replica count; with one device it is the plain vmap path.
     * `data` may be one dataset (shared by every cell) or a sequence with
       one dataset per cell (e.g. per-seed datasets of a benchmark table).
+    * `telemetry` (repro.telemetry.Telemetry, default None = zero-cost)
+      emits the grid's structured event stream (DESIGN.md §15): run_start
+      with provenance, per-segment events + heartbeat (run_segments),
+      per-cell `round_metrics`/`eval` unrolled at partition boundaries,
+      checkpoint events, run_end.  Deliberately NOT part of GridSpec, so
+      the checkpoint fingerprint — and resumability — are unaffected.
     """
     from repro.engine.scan_engine import make_scan_spec, results_from_scan
     from repro.federated.server import setup_run
     from repro.launch.mesh import make_replica_mesh
 
-    t_start = time.time()
+    t_start = time.perf_counter()
     cfgs = spec.validate()
     segment_plan(spec.base.rounds, rounds_per_segment)  # fail fast
     # a per-cell sequence is a plain list/tuple; SynthDataset itself is a
@@ -161,30 +168,53 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
         _check_fingerprint(checkpoint_dir, spec, rounds_per_segment,
                            resume)
 
+    if telemetry is not None:
+        from repro.telemetry.events import provenance
+        from repro.telemetry.metrics import run_end_payload
+        telemetry.emit(
+            "run_start", run_id=telemetry.run_id, kind="grid",
+            cells=len(cfgs), partitions=len(partitions),
+            rounds=spec.base.rounds, rounds_per_segment=rounds_per_segment,
+            checkpoint_dir=checkpoint_dir, provenance=provenance())
+
     per_partition: list = []
     reports: list = []
     n_segments = 1
+    compile_s = 0.0
     for pi, part in enumerate(partitions):
-        t_part = time.time()
+        t_part = time.perf_counter()
+        live = bool(telemetry is not None and telemetry.live_tap)
         scan_spec = make_scan_spec(
-            cfgs[part.cell_indices[0]], part.specs)._replace(
+            cfgs[part.cell_indices[0]], part.specs,
+            live_tap=live)._replace(
                 rounds_per_segment=rounds_per_segment)
         batch = _build_batch(part, cfgs, setups, sel_specs,
                              spec.base.rounds)
         mesh = (make_replica_mesh(len(part.cell_indices))
                 if shard else None)
+        if telemetry is not None:
+            telemetry.heartbeat(
+                f"partition {pi + 1}/{len(partitions)} "
+                f"({part.key.label}, {len(part.cell_indices)} cells)",
+                force=True)
         out, report = run_segments(
             model, cfgs[part.cell_indices[0]].client, scan_spec, batch,
             checkpoint_dir=checkpoint_dir, tag=f"p{pi}-", resume=resume,
             max_segments=max_segments, mesh=mesh,
-            compile_stats=compile_stats)
+            compile_stats=compile_stats, telemetry=telemetry)
+        compile_s += report.compile_time_s
         if out is None:
+            if telemetry is not None:
+                telemetry.heartbeat(
+                    f"partition {pi + 1}: stopped at max_segments="
+                    f"{max_segments} ({report.dispatches} dispatched); "
+                    "checkpoints are the resume point", force=True)
             return None
         n_segments = report.n_segments
         # the partition's cells ran fused: they share ITS duration (not
         # the grid's running total, which would bill later partitions
         # for earlier ones' work)
-        wall = time.time() - t_part
+        wall = time.perf_counter() - t_part
         results = []
         evals_total = 0
         for j, idx in enumerate(part.cell_indices):
@@ -192,9 +222,21 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
             res = results_from_scan(
                 cfgs[idx], setups[idx], out_j, wall_time_s=wall,
                 seed=cfgs[idx].seed, dispatches=report.n_segments,
-                uses_shapley=part.key.needs_sv)
+                uses_shapley=part.key.needs_sv,
+                compile_time_s=report.compile_time_s)
             evals_total += res.shapley_evals
             results.append(res)
+            if telemetry is not None:
+                from repro.engine.schedule import eval_mask as _emask
+                from repro.federated.compression import codec_nbytes
+                from repro.telemetry.metrics import emit_scan_rounds
+                emit_scan_rounds(
+                    telemetry, out_j, uses_shapley=part.key.needs_sv,
+                    codec_bytes=codec_nbytes(cfgs[idx].upload_codec,
+                                             setups[idx].params),
+                    model_bytes=setups[idx].model_bytes,
+                    emask=_emask(spec.base.rounds, cfgs[idx].eval_every),
+                    cell=idx)
         per_partition.append(results)
         reports.append(PartitionReport(
             label=part.key.label, cell_indices=part.cell_indices,
@@ -205,10 +247,23 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
             bytes_resident=report.bytes_resident,
             flops_per_dispatch=report.flops_per_dispatch))
 
+    results = interleave(len(spec.cells), partitions, per_partition)
+    wall = time.perf_counter() - t_start
+    if telemetry is not None:
+        accs = [r.final_acc for r in results if r.final_acc == r.final_acc]
+        telemetry.emit("compile", seconds=compile_s, program="grid_segments")
+        telemetry.emit("run_end", **run_end_payload(
+            rounds=spec.base.rounds, wall_time_s=wall,
+            compile_time_s=compile_s,
+            final_acc=sum(accs) / len(accs) if accs else float("nan"),
+            utility_evals=sum(r.shapley_evals for r in results),
+            upload_bytes=sum(r.upload_bytes for r in results),
+            download_bytes=sum(r.download_bytes for r in results),
+            dispatches=sum(rep.dispatches for rep in reports)))
     return GridResult(
         spec=spec,
-        results=interleave(len(spec.cells), partitions, per_partition),
+        results=results,
         partitions=reports,
         rounds_per_segment=rounds_per_segment,
         n_segments=n_segments,
-        wall_time_s=time.time() - t_start)
+        wall_time_s=wall)

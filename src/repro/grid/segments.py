@@ -62,6 +62,7 @@ class SegmentRunReport(NamedTuple):
     resumed_segments: int        # segments restored from checkpoints
     bytes_resident: int
     flops_per_dispatch: float
+    compile_time_s: float = 0.0  # jit trace+lower+compile in THIS call
 
 
 def segment_plan(rounds: int, rounds_per_segment: int) -> tuple[int, int]:
@@ -126,7 +127,7 @@ def _to_out_dict(out) -> dict:
 def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
                  checkpoint_dir: Optional[str] = None, tag: str = "",
                  resume: bool = True, max_segments: Optional[int] = None,
-                 mesh=None, compile_stats: bool = False
+                 mesh=None, compile_stats: bool = False, telemetry=None
                  ) -> tuple[Optional[ScanRunOutput], SegmentRunReport]:
     """Drive one partition's replica batch through all T/K segments.
 
@@ -134,17 +135,33 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
     `max_segments` stopped the run early (the checkpoint prefix on disk
     is then the resume point — used by the kill/restart tests and by any
     externally killed run).
+
+    `telemetry` (default None: zero extra dispatches, async dispatch
+    chain untouched) emits `segment_start`/`segment_end` events with the
+    aggregate gauges of `metrics.segment_counters`, checkpoint events,
+    and a throttled per-segment heartbeat with an ETA from the mean
+    dispatched-segment time.  Per-segment timing blocks on the segment's
+    outputs — observed segments are timed honestly instead of billing a
+    segment for its predecessors' async queue.
     """
+    import time
+
+    from repro.telemetry.metrics import segment_counters
+    from repro.telemetry.trace import CompileTimer, live_sink
+
     k_rounds, n_segments = segment_plan(spec.rounds,
                                         spec.rounds_per_segment)
     n_replicas = int(batch.strategy_ids.shape[0])
     seg_spec = spec._replace(rounds_per_segment=k_rounds)
+    ctimer = CompileTimer()
+    live = bool(telemetry is not None and telemetry.live_tap)
 
-    if mesh is not None:
-        from repro.grid.shard import sharded_segment_step
-        step = sharded_segment_step(model, ccfg, seg_spec, mesh)
-    else:
-        step = jitted_segment_step(model, ccfg, seg_spec, vmapped=True)
+    with ctimer:
+        if mesh is not None:
+            from repro.grid.shard import sharded_segment_step
+            step = sharded_segment_step(model, ccfg, seg_spec, mesh)
+        else:
+            step = jitted_segment_step(model, ccfg, seg_spec, vmapped=True)
 
     carry = batch.carry
     operands = (batch.xs, batch.ys, batch.nv, batch.sigma, batch.x_val,
@@ -161,16 +178,19 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
         start = min(saved_segments(checkpoint_dir, tag), n_segments)
         for seg in range(start):
             snap = load_carry(_seg_path(checkpoint_dir, tag, seg),
-                              {"carry": carry, "out": out_like})
+                              {"carry": carry, "out": out_like},
+                              telemetry=telemetry)
             outs.append(snap["out"])
             carry = snap["carry"]
 
     flops = float("nan")
     dispatched = 0
+    seg_seconds: list[float] = []
     for seg in range(start, n_segments):
         if max_segments is not None and dispatched >= max_segments:
             return None, SegmentRunReport(
-                n_segments, dispatched, start, batch_bytes(batch), flops)
+                n_segments, dispatched, start, batch_bytes(batch), flops,
+                ctimer.seconds)
         t0 = jnp.asarray(seg * k_rounds, jnp.int32)
         sl = slice(seg * k_rounds, (seg + 1) * k_rounds)
         args = (carry, t0, eval_any[sl], *operands,
@@ -178,12 +198,34 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
                 batch.eval_masks[:, sl], batch.strategy_ids)
         if compile_stats and seg == start:
             flops = compiled_flops(step, *args)
-        out = step(*args)
+        if telemetry is not None:
+            t_seg = time.perf_counter()
+            telemetry.emit("segment_start", segment=seg,
+                           t0=seg * k_rounds, rounds=k_rounds, tag=tag,
+                           replicas=n_replicas)
+        with ctimer, live_sink(telemetry if live else None):
+            out = step(*args)
+            if telemetry is not None:
+                # taps must land (and the segment be timed) before the
+                # next dispatch is enqueued
+                jax.block_until_ready(out.carry.params)
         carry = out.carry
         dispatched += 1
+        if telemetry is not None:
+            secs = time.perf_counter() - t_seg
+            seg_seconds.append(secs)
+            telemetry.emit("segment_end", segment=seg, tag=tag,
+                           **segment_counters(out, secs))
+            mean_s = sum(seg_seconds) / len(seg_seconds)
+            eta_s = mean_s * (n_segments - seg - 1)
+            telemetry.heartbeat(
+                f"{tag or 'seg'} {seg + 1}/{n_segments} "
+                f"({k_rounds} rounds x {n_replicas} replicas, "
+                f"{secs:.2f}s) eta {eta_s:.0f}s")
         if checkpoint_dir:
             save_carry(_seg_path(checkpoint_dir, tag, seg),
-                       {"carry": out.carry, "out": _to_out_dict(out)})
+                       {"carry": out.carry, "out": _to_out_dict(out)},
+                       telemetry=telemetry)
         outs.append(_to_out_dict(out))
 
     stacked = {k: jnp.concatenate([o[k] for o in outs], axis=1)
@@ -196,5 +238,5 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
         test_acc=stacked["test_acc"], val_loss=stacked["val_loss"],
         eval_count=carry.eval_slot)
     report = SegmentRunReport(n_segments, dispatched, start,
-                              batch_bytes(batch), flops)
+                              batch_bytes(batch), flops, ctimer.seconds)
     return result, report

@@ -1,0 +1,26 @@
+"""repro.telemetry — structured observability for every engine (§15).
+
+`Telemetry` is the sink all engines accept (`telemetry=None` default:
+zero dispatches, bit-identical outputs); `events` defines the
+schema-versioned JSONL stream and its validator plus the provenance-
+stamped BENCH writer; `metrics` aggregates host-side gauges at segment
+boundaries; `trace` carries stage annotation, the compile-time split,
+and the opt-in in-scan live tap; `report` renders summaries from JSONL.
+"""
+from repro.telemetry.events import (
+    SCHEMA_VERSION, Telemetry, TelemetryError, provenance, read_events,
+    validate_events, write_bench_json,
+)
+from repro.telemetry.metrics import (
+    emit_scan_rounds, run_end_payload, segment_counters,
+)
+from repro.telemetry.trace import (
+    CompileTimer, live_sink, named_stage, stage,
+)
+
+__all__ = [
+    "SCHEMA_VERSION", "Telemetry", "TelemetryError", "provenance",
+    "read_events", "validate_events", "write_bench_json",
+    "emit_scan_rounds", "run_end_payload", "segment_counters",
+    "CompileTimer", "live_sink", "named_stage", "stage",
+]

@@ -1,0 +1,111 @@
+"""Host-side counters/gauges over engine outputs — no extra dispatches.
+
+The one-dispatch scan contract (DESIGN.md §11) means per-round telemetry
+cannot be observed while the scan runs (short of the opt-in live tap);
+instead the engines hand their stacked outputs (`ScanRunOutput`,
+`SegmentOutput`) to the helpers here AT SEGMENT BOUNDARIES, where the
+arrays are materialising on the host anyway — aggregation costs a device
+-> host transfer the result rebuild already pays, and zero dispatches.
+
+  * `emit_scan_rounds` — unrolls a run's stacked (T, ...) outputs into
+    per-round `round_metrics` / `eval` events (the authoritative stream;
+    the live tap is diagnostics only);
+  * `segment_counters` — one segment's aggregate gauges (rounds/sec, SV
+    truncation count, utility-eval spend) for `segment_end` events and
+    the grid heartbeat;
+  * `run_end_payload` — the run-level rollup (rounds/sec, SV truncation
+    rate, evals-per-accuracy-point, byte totals, compile/execute split).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def emit_scan_rounds(tel, out, *, uses_shapley: bool, codec_bytes: int,
+                     model_bytes: int, emask, cell: Optional[int] = None,
+                     t0: int = 0) -> None:
+    """Per-round events from stacked scan outputs (host-side, post-run).
+
+    `out` is a ScanRunOutput (or any object with the same per-round
+    stacks) holding (T, M) selections/epochs/sv and (T,) counters;
+    `emask` is the cell's (T,) bool eval cadence (schedule.eval_mask) —
+    eval events are emitted where it is set, from the same stacked
+    accuracy/loss rows the FLResult curve is rebuilt from.
+    """
+    sels = np.asarray(out.selections)
+    epochs = np.asarray(out.epochs)
+    sv = np.asarray(out.sv)
+    evals = np.asarray(out.utility_evals)
+    trunc = np.asarray(out.sv_truncated)
+    acc = np.asarray(out.test_acc)
+    vloss = np.asarray(out.val_loss)
+    emask = np.asarray(emask)
+    m = int(sels.shape[1]) if sels.ndim > 1 else 0
+    extra = {} if cell is None else {"cell": cell}
+    for i in range(sels.shape[0]):
+        t = t0 + i
+        fields = dict(
+            round=int(t), selections=sels[i], epochs=epochs[i],
+            utility_evals=int(evals[i]), sv_truncated=bool(trunc[i]),
+            upload_bytes=codec_bytes * m, download_bytes=model_bytes * m,
+            **extra)
+        if uses_shapley:
+            fields["sv"] = sv[i]
+        tel.emit("round_metrics", **fields)
+        if emask[t]:
+            tel.emit("eval", round=int(t), test_acc=float(acc[i]),
+                     val_loss=float(vloss[i]), **extra)
+
+
+def segment_counters(out, seconds: float) -> dict:
+    """Aggregate gauges of one (possibly replica-stacked) SegmentOutput."""
+    evals = np.asarray(out.utility_evals)
+    trunc = np.asarray(out.sv_truncated)
+    k_rounds = int(evals.shape[-1])
+    n_replicas = int(evals.shape[0]) if evals.ndim > 1 else 1
+    return {
+        "rounds": k_rounds,
+        "replicas": n_replicas,
+        "seconds": seconds,
+        "rounds_per_sec": k_rounds / seconds if seconds > 0 else None,
+        "utility_evals": int(evals.sum()),
+        "sv_truncated_rounds": int(trunc.sum()),
+    }
+
+
+def run_end_payload(*, rounds: int, wall_time_s: float,
+                    compile_time_s: float, final_acc: float,
+                    utility_evals: int, upload_bytes: int,
+                    download_bytes: int, sv_rounds: int = 0,
+                    truncated_rounds: int = 0, dispatches: int = 0) -> dict:
+    """The `run_end` event payload: run-level counters and derived gauges.
+
+    * `rounds_per_sec` uses execute time (wall minus compile) — the
+      steady-state number a capacity plan needs; wall stays reported.
+    * `sv_truncation_rate` = truncated SV rounds / rounds that ran SV.
+    * `evals_per_acc_point` = utility evals per final-accuracy percentage
+      point — the "what did the valuation spend buy" gauge the paper's
+      budget framing asks for (lower is better; None without evals/acc).
+    """
+    execute_s = max(wall_time_s - compile_time_s, 0.0)
+    acc_points = final_acc * 100.0
+    return {
+        "wall_time_s": wall_time_s,
+        "compile_time_s": compile_time_s,
+        "execute_time_s": execute_s,
+        "rounds": rounds,
+        "rounds_per_sec": rounds / execute_s if execute_s > 0 else None,
+        "dispatches": dispatches,
+        "final_acc": None if final_acc != final_acc else final_acc,
+        "utility_evals": utility_evals,
+        "sv_truncation_rate":
+            truncated_rounds / sv_rounds if sv_rounds else None,
+        "evals_per_acc_point":
+            utility_evals / acc_points
+            if utility_evals and acc_points == acc_points and acc_points > 0
+            else None,
+        "upload_bytes": upload_bytes,
+        "download_bytes": download_bytes,
+    }

@@ -1,0 +1,295 @@
+"""repro.telemetry (DESIGN.md §15): bit-neutrality of every telemetry
+mode across engines, the JSONL schema validator, the compile/execute
+wall-time split, provenance-stamped bench artifacts, and the report CLI.
+
+The load-bearing contract: telemetry off / host-side / live-tap must
+produce bit-identical selections, params, and eval curves — observation
+never perturbs the experiment, including across a segment-boundary
+kill/resume.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_federated
+from repro.telemetry import (
+    SCHEMA_VERSION, CompileTimer, Telemetry, TelemetryError, provenance,
+    read_events, validate_events, write_bench_json,
+)
+from repro.telemetry.report import render_table, summarize
+
+TINY = dict(n_clients=8, m=3, rounds=6, n_train=600, n_val=100, n_test=100,
+            eval_every=3,
+            client=ClientConfig(epochs=2, batches_per_epoch=2, batch_size=16))
+
+
+def _flat(params):
+    return np.concatenate([np.ravel(np.asarray(l))
+                           for l in jax.tree.leaves(params)])
+
+
+def _assert_bitwise(a, b):
+    for t, (sa, sb) in enumerate(zip(a.selections, b.selections)):
+        np.testing.assert_array_equal(sa, sb, err_msg=f"round {t}")
+    np.testing.assert_array_equal(_flat(a.params), _flat(b.params))
+    assert a.test_acc == b.test_acc
+    assert a.val_loss == b.val_loss
+    assert a.dispatches == b.dispatches
+
+
+# ---- neutrality: off / host-side / live-tap ------------------------------
+
+@pytest.mark.parametrize("engine", ["loop", "batched", "scan"])
+def test_telemetry_is_bit_neutral(engine):
+    """Attaching a sink (and, on scan, the in-scan live tap) changes no
+    output bit and adds no dispatches."""
+    cfg = FLConfig(engine=engine, selector="greedyfed", **TINY)
+    off = run_federated(cfg)
+    tel = Telemetry()
+    host = run_federated(cfg, telemetry=tel)
+    _assert_bitwise(off, host)
+    assert validate_events(tel.events) == len(tel.events)
+    kinds = [e["event"] for e in tel.events]
+    assert kinds[0] == "run_start" and kinds[-1] == "run_end"
+    assert kinds.count("round_metrics") == cfg.rounds
+    assert kinds.count("eval") == cfg.rounds // cfg.eval_every
+
+    if engine == "scan":
+        tap = Telemetry(live_tap=True)
+        live = run_federated(cfg, telemetry=tap)
+        _assert_bitwise(off, live)
+        taps = [e for e in tap.events if e["event"] == "round_tap"]
+        assert len(taps) == cfg.rounds
+        assert {e["round"] for e in taps} == set(range(cfg.rounds))
+        assert all(e["origin"] == "device" for e in taps)
+        validate_events(tap.events)   # taps exempt from round ordering
+
+
+def test_round_metrics_carry_the_run():
+    """The host-side stream is the authoritative record: selections, SV,
+    eval spend, and byte accounting must match the FLResult."""
+    cfg = FLConfig(engine="scan", selector="greedyfed", **TINY)
+    tel = Telemetry()
+    res = run_federated(cfg, telemetry=tel)
+    rounds = [e for e in tel.events if e["event"] == "round_metrics"]
+    assert [r["selections"] for r in rounds] == \
+        [list(map(int, s)) for s in res.selections]
+    assert sum(r["utility_evals"] for r in rounds) == res.shapley_evals
+    assert sum(r["upload_bytes"] for r in rounds) == res.upload_bytes
+    assert sum(r["download_bytes"] for r in rounds) == res.download_bytes
+    assert all(len(r["sv"]) == cfg.m for r in rounds)
+    evals = [e for e in tel.events if e["event"] == "eval"]
+    assert [(e["round"] + 1, e["test_acc"]) for e in evals] == \
+        [(t, pytest.approx(a)) for t, a in res.test_acc]
+    end = tel.events[-1]
+    assert end["event"] == "run_end"
+    assert end["rounds"] == cfg.rounds
+    assert end["sv_truncation_rate"] is not None
+
+
+def test_grid_kill_resume_with_telemetry(tmp_path):
+    """A telemetry-observed segmented grid, killed at a segment boundary
+    and resumed, matches the unobserved unsegmented grid bit-for-bit —
+    with checkpoint/segment events flowing and the stream validating."""
+    from repro.grid import GridSpec, run_grid
+
+    base = FLConfig(engine="scan", selector="greedyfed",
+                    **dict(TINY, rounds=4, eval_every=2))
+    gspec = GridSpec.product(base, selectors=["greedyfed", "fedavg"],
+                             seeds=[0])
+    ref = run_grid(gspec)   # no telemetry, no segments: the oracle
+
+    path = str(tmp_path / "events.jsonl")
+    ckpt = str(tmp_path / "ckpt")
+    with Telemetry(path, heartbeat_every_s=1e9) as tel:
+        stopped = run_grid(gspec, rounds_per_segment=2, checkpoint_dir=ckpt,
+                           max_segments=1, telemetry=tel)
+        assert stopped is None   # killed after one dispatched segment
+        resumed = run_grid(gspec, rounds_per_segment=2, checkpoint_dir=ckpt,
+                           telemetry=tel)
+    for r0, r1 in zip(ref.results, resumed.results):
+        np.testing.assert_array_equal(
+            np.asarray(r0.selections), np.asarray(r1.selections))
+        np.testing.assert_array_equal(_flat(r0.params), _flat(r1.params))
+        assert r0.test_acc == r1.test_acc
+
+    events = read_events(path)
+    assert validate_events(events) == len(events)
+    kinds = [e["event"] for e in events]
+    assert kinds.count("run_start") == 2      # killed run + resumed run
+    assert "checkpoint_save" in kinds and "checkpoint_load" in kinds
+    assert kinds.count("segment_end") == kinds.count("segment_start")
+    saves = [e for e in events if e["event"] == "checkpoint_save"]
+    assert all(e["nbytes"] > 0 and e["path"].endswith(".npz")
+               for e in saves)
+    # per-cell attribution at segment boundaries: every cell's full curve
+    per_cell = {}
+    for e in events:
+        if e["event"] == "round_metrics":
+            per_cell.setdefault(e["cell"], []).append(e["round"])
+    assert per_cell[0] == per_cell[1] == list(range(base.rounds))
+
+
+# ---- the compile/execute wall-time split ---------------------------------
+
+def test_compile_timer_attributes_fresh_compiles():
+    with CompileTimer() as ct:
+        jax.jit(lambda x: x * 3.14159 + 2.71828)(np.arange(7.0)).block_until_ready()
+    assert ct.seconds > 0.0
+    # warm re-dispatch of the SAME executable registers ~nothing
+    f = jax.jit(lambda x: x + 1.0)
+    f(np.arange(3.0)).block_until_ready()   # compile outside any timer
+    with CompileTimer() as ct2:
+        f(np.arange(3.0)).block_until_ready()
+    assert ct2.seconds == 0.0
+
+
+def test_flresult_wall_time_split():
+    cfg = FLConfig(engine="batched", selector="fedavg", **TINY)
+    res = run_federated(cfg)
+    assert res.compile_time_s >= 0.0 and res.execute_time_s >= 0.0
+    assert res.execute_time_s == pytest.approx(
+        max(res.wall_time_s - res.compile_time_s, 0.0))
+
+
+# ---- the pure-python schema validator ------------------------------------
+
+def _stream(*payloads):
+    """Build a well-formed envelope chain around the given payloads."""
+    return [dict({"v": SCHEMA_VERSION, "seq": i, "t_s": float(i)}, **p)
+            for i, p in enumerate(payloads)]
+
+
+def test_validator_accepts_a_well_formed_stream():
+    ev = _stream(
+        {"event": "run_start", "run_id": "r0", "kind": "solo"},
+        {"event": "round_metrics", "round": 0, "selections": [1],
+         "epochs": [2], "utility_evals": 0, "sv_truncated": False,
+         "upload_bytes": 8, "download_bytes": 8},
+        {"event": "round_metrics", "round": 1, "selections": [0],
+         "epochs": [2], "utility_evals": 0, "sv_truncated": False,
+         "upload_bytes": 8, "download_bytes": 8},
+        {"event": "run_end", "wall_time_s": 1.0})
+    assert validate_events(ev) == 4
+
+
+def test_validator_rejects_unknown_event():
+    with pytest.raises(TelemetryError, match="unknown type"):
+        validate_events(_stream({"event": "made_up"}))
+    with pytest.raises(TelemetryError, match="unknown event type"):
+        Telemetry().emit("made_up")
+
+
+def test_validator_rejects_missing_required_field():
+    with pytest.raises(TelemetryError, match="missing required"):
+        validate_events(_stream({"event": "eval", "round": 0,
+                                 "test_acc": 0.5}))   # no val_loss
+    with pytest.raises(TelemetryError, match="missing required"):
+        Telemetry().emit("compile")                   # no seconds
+
+
+def test_validator_rejects_version_and_envelope_skew():
+    bad = _stream({"event": "run_end", "wall_time_s": 1.0})
+    bad[0]["v"] = SCHEMA_VERSION + 1
+    with pytest.raises(TelemetryError, match="schema version"):
+        validate_events(bad)
+    with pytest.raises(TelemetryError, match="envelope"):
+        validate_events([{"event": "run_end", "wall_time_s": 1.0}])
+
+
+def test_validator_rejects_broken_seq_chain():
+    ev = _stream({"event": "run_start", "run_id": "r", "kind": "solo"},
+                 {"event": "run_end", "wall_time_s": 1.0})
+    ev[1]["seq"] = 5
+    with pytest.raises(TelemetryError, match="seq chain"):
+        validate_events(ev)
+
+
+def test_validator_rejects_nonmonotonic_rounds_per_cell():
+    rm = {"event": "round_metrics", "selections": [0], "epochs": [1],
+          "utility_evals": 0, "sv_truncated": False, "upload_bytes": 0,
+          "download_bytes": 0}
+    # same round twice in one cell scope -> reject
+    with pytest.raises(TelemetryError, match="not increasing"):
+        validate_events(_stream(dict(rm, round=1, cell=0),
+                                dict(rm, round=1, cell=0)))
+    # distinct cells keep independent round counters -> fine
+    validate_events(_stream(dict(rm, round=1, cell=0),
+                            dict(rm, round=1, cell=1)))
+    # a new run_start resets the scope -> fine
+    validate_events(_stream(
+        {"event": "run_start", "run_id": "a", "kind": "solo"},
+        dict(rm, round=1),
+        {"event": "run_start", "run_id": "b", "kind": "solo"},
+        dict(rm, round=1)))
+
+
+def test_jsonl_roundtrip_and_sanitization(tmp_path):
+    """What a reader parses back is exactly the in-memory stream, with
+    numpy/jax values already coerced to plain python at emit time."""
+    path = str(tmp_path / "ev.jsonl")
+    with Telemetry(path) as tel:
+        tel.emit("run_start", run_id=tel.run_id, kind="solo")
+        tel.emit("round_metrics", round=np.int64(0),
+                 selections=np.arange(3), epochs=jax.numpy.ones(3),
+                 utility_evals=np.int32(7), sv_truncated=np.bool_(False),
+                 upload_bytes=0, download_bytes=0)
+        tel.emit("run_end", wall_time_s=np.float32(1.5))
+    back = read_events(path)
+    assert back == tel.events
+    rm = back[1]
+    assert rm["selections"] == [0, 1, 2] and rm["utility_evals"] == 7
+    assert rm["sv_truncated"] is False
+    assert isinstance(back[2]["wall_time_s"], float)
+
+
+# ---- provenance-stamped bench artifacts ----------------------------------
+
+def test_write_bench_json_stamps_provenance(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    write_bench_json(path, {"schema": "bench_x/v1",
+                            "latency_us": np.float64(12.5)})
+    with open(path) as f:
+        report = json.load(f)
+    prov = report["provenance"]
+    for field in ("git_rev", "timestamp", "backend", "device_count",
+                  "jax_version", "python_version"):
+        assert field in prov
+    assert prov["backend"] == jax.default_backend()
+    assert report["latency_us"] == 12.5
+    with pytest.raises(ValueError, match="schema"):
+        write_bench_json(str(tmp_path / "bad.json"), {"latency_us": 1})
+
+
+def test_provenance_fields():
+    prov = provenance()
+    assert prov["device_count"] == jax.device_count()
+    assert prov["jax_version"] == jax.__version__
+
+
+# ---- the report CLI ------------------------------------------------------
+
+def test_report_summarize_and_cli(tmp_path, capsys):
+    from repro.telemetry.report import main
+
+    cfg = FLConfig(engine="scan", selector="greedyfed", **TINY)
+    path = str(tmp_path / "run.jsonl")
+    with Telemetry(path) as tel:
+        run_federated(cfg, telemetry=tel)
+    rows = summarize(read_events(path))
+    assert len(rows) == 1
+    row = rows[0]
+    assert row["kind"] == "solo" and row["selector"] == "greedyfed"
+    assert row["rounds"] == cfg.rounds
+    assert row["utility_evals"] > 0
+    assert row["wall_s"] is not None and row["compile_s"] is not None
+    table = render_table(rows)
+    assert "greedyfed" in table and "rounds" in table
+
+    assert main([path, "--validate"]) == 0
+    out = capsys.readouterr().out
+    assert "greedyfed" in out
