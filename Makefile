@@ -1,4 +1,4 @@
-.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke bench-shapley telemetry-smoke
+.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke bench-shapley telemetry-smoke client-scale-smoke bench-comm
 
 check:
 	./scripts/check.sh
@@ -39,6 +39,20 @@ bench-shapley:
 # Opt into the check gate with CHECK_TELEMETRY=1 ./scripts/check.sh
 telemetry-smoke:
 	PYTHONPATH=src python -m benchmarks.engine_bench --telemetry --json BENCH_telemetry.json
+
+# client-axis sharding smoke (DESIGN.md §16): per-device client-state
+# bytes + round latency, dense vs sharded over the forced-host 8-device
+# debug mesh; refreshes BENCH_clients.json (N=300 subset; drop --smoke
+# for the full N in {300, 3k, 30k} sweep).  Opt into the check gate with
+# CHECK_CLIENT_SCALE=1 ./scripts/check.sh
+client-scale-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	PYTHONPATH=src python -m benchmarks.client_scale --smoke --json BENCH_clients.json
+
+# communication-efficiency ledger (paper title claim): accuracy x upload
+# bytes for selection/compression combinations; refreshes BENCH_comm.json
+bench-comm:
+	PYTHONPATH=src python -m benchmarks.comm_efficiency --json BENCH_comm.json
 
 # grid-runner smoke: a 2-partition, 2-segment, 4-replica grid sharded over
 # the forced-host 8-device debug mesh; refreshes BENCH_grid.json (per-

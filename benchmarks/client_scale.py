@@ -1,0 +1,172 @@
+"""Client-axis scaling bench (DESIGN.md §16): per-device client state.
+
+With `clients_shards = C` the padded per-client stacks (data, n_valid,
+sigma, straggler tables, selector vectors) shard over the "clients" mesh
+axis instead of replicating, so per-device footprint drops from O(N) to
+O(N/C + M*D).  This bench measures that claim on the forced-host 8-device
+debug mesh: for N in {300, 3k, 30k} it records the measured per-device
+client-state bytes (summed over each device's addressable shards) and the
+warm per-round latency, dense vs sharded.  Dense is only *run* up to
+N=3000 — at N=30k its footprint is reported arithmetically (every byte on
+one device), which is the point: the sharded run completes with ~C x less
+state per device.
+
+A `memory_analysis` block additionally records the XLA compiled-peak-bytes
+probe (repro.launch.compat.compiled_memory_stats) of the dense vs sharded
+segment step via a 1-cell grid at the smallest N.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m benchmarks.client_scale --json BENCH_clients.json
+
+(`make client-scale-smoke` runs the N=300 subset; opt into the check gate
+with CHECK_CLIENT_SCALE=1 ./scripts/check.sh)
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.data.synth import make_dataset
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_federated, setup_run
+from repro.launch.mesh import make_run_mesh
+from repro.telemetry import write_bench_json
+
+SHARDS = 8
+ROUNDS = 3
+N_FULL = (300, 3_000, 30_000)
+N_SMOKE = (300,)
+DENSE_RUN_MAX = 3_000    # beyond this, dense is reported, not executed
+
+
+def _cfg(n: int, shards: int) -> FLConfig:
+    # selection without SV (fedavg -> random): the bench isolates the
+    # client-state axis, not the valuation path
+    return FLConfig(
+        n_clients=n, m=10, rounds=ROUNDS, selector="fedavg", engine="scan",
+        eval_every=1000, n_train=2 * n, n_val=120, n_test=120,
+        dirichlet_alpha=100.0,
+        client=ClientConfig(epochs=1, batches_per_epoch=2, batch_size=8),
+        clients_shards=shards)
+
+
+def _state_bytes(cfg: FLConfig, data) -> tuple[int, int, tuple]:
+    """(max-per-device bytes, global bytes, xs shape) of the client-state
+    stacks exactly as `setup_run` places them (lazy shard callbacks under
+    a client mesh, single-device stacks otherwise)."""
+    mesh = (make_run_mesh(1, cfg.clients_shards)
+            if cfg.clients_shards > 1 else None)
+    s = setup_run(cfg, data, client_mesh=mesh)
+    per: dict = {}
+    total = 0
+    for a in (s.xs, s.ys, s.n_valid):
+        total += int(np.prod(a.shape)) * a.dtype.itemsize
+        for sh in a.addressable_shards:
+            per[sh.device.id] = per.get(sh.device.id, 0) + sh.data.nbytes
+    return max(per.values()), total, tuple(s.xs.shape)
+
+
+def _dense_bytes_arith(xs_shape: tuple, n: int) -> int:
+    """Dense footprint from the sharded shapes: (N, cap, dim) f32 +
+    (N, cap) i32 labels + (N,) i32 counts, all on ONE device."""
+    cap = xs_shape[1]
+    dim = int(np.prod(xs_shape[2:]))
+    return n * cap * dim * 4 + n * cap * 4 + n * 4
+
+
+def _timed_run(cfg: FLConfig, data) -> float:
+    """Warm per-round seconds: two runs (the second reuses every cached
+    executable), min of execute_time_s over rounds."""
+    times = [run_federated(cfg, data).execute_time_s for _ in range(2)]
+    return min(times) / cfg.rounds
+
+
+def _memory_analysis(n: int, data) -> dict:
+    """Compiled-peak probe (1-cell grid, compile_stats=True): XLA
+    memory_analysis() of the dense vs client-sharded segment step."""
+    from repro.grid.runner import run_grid
+    from repro.grid.spec import GridSpec
+
+    out = {"n_clients": n}
+    for label, shards, shard in (("dense", 1, False), ("sharded", SHARDS,
+                                                       True)):
+        g = run_grid(GridSpec.product(_cfg(n, shards), seeds=(0,)),
+                     data=data, shard=shard, compile_stats=True)
+        out[label] = {"peak_bytes": g.partitions[0].peak_bytes,
+                      "flops_per_dispatch":
+                          None if g.partitions[0].flops_per_dispatch
+                          != g.partitions[0].flops_per_dispatch
+                          else g.partitions[0].flops_per_dispatch}
+    return out
+
+
+def run(*, smoke: bool = False, json_path: str | None = None) -> dict:
+    if jax.device_count() < SHARDS:
+        raise SystemExit(
+            f"client_scale needs {SHARDS} devices; run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "(see `make client-scale-smoke`)")
+
+    n_list = N_SMOKE if smoke else N_FULL
+    print("\n# client-axis scaling "
+          "(n,path,ran,per_device_MB,total_MB,round_latency_s)")
+    rows = []
+    for n in n_list:
+        cfg_d, cfg_s = _cfg(n, 1), _cfg(n, SHARDS)
+        data = make_dataset(cfg_d.dataset, n_train=cfg_d.n_train,
+                            n_val=cfg_d.n_val, n_test=cfg_d.n_test,
+                            seed=cfg_d.seed)
+        sh_dev, sh_total, xs_shape = _state_bytes(cfg_s, data)
+        sharded = {"ran": True, "per_device_state_bytes": sh_dev,
+                   "total_state_bytes": sh_total,
+                   "pad_rows": xs_shape[0] - n,
+                   "round_latency_s": _timed_run(cfg_s, data)}
+
+        dense_total = _dense_bytes_arith(xs_shape, n)
+        dense = {"ran": n <= DENSE_RUN_MAX,
+                 "per_device_state_bytes": dense_total,
+                 "total_state_bytes": dense_total, "round_latency_s": None}
+        if dense["ran"]:
+            d_dev, d_total, _ = _state_bytes(cfg_d, data)
+            dense.update(per_device_state_bytes=d_dev,
+                         total_state_bytes=d_total,
+                         round_latency_s=_timed_run(cfg_d, data))
+
+        row = {"n_clients": n, "cap": xs_shape[1], "dense": dense,
+               "sharded": sharded,
+               "dense_over_sharded_per_device_bytes":
+                   dense["per_device_state_bytes"] / max(sh_dev, 1)}
+        rows.append(row)
+        for label, r in (("dense", dense), ("sharded", sharded)):
+            lat = r["round_latency_s"]
+            print(f"{n},{label},{r['ran']},"
+                  f"{r['per_device_state_bytes'] / 2**20:.2f},"
+                  f"{r['total_state_bytes'] / 2**20:.2f},"
+                  f"{'-' if lat is None else f'{lat:.4f}'}")
+
+    report = {
+        "schema": "bench_clients/v1",
+        "devices": jax.device_count(),
+        "clients_shards": SHARDS,
+        "rounds": ROUNDS,
+        "smoke": smoke,
+        "rows": rows,
+        "memory_analysis": _memory_analysis(n_list[0], None),
+    }
+    if json_path:
+        write_bench_json(json_path, report)
+        print(f"json_report,{json_path}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="N=300 subset for the scripts/check.sh gate")
+    ap.add_argument("--json", default=None,
+                    help="write BENCH_clients.json via telemetry's "
+                         "provenance-stamping writer")
+    a = ap.parse_args()
+    run(smoke=a.smoke, json_path=a.json)

@@ -4,13 +4,18 @@ Selection (GreedyFed) and compression (quant8/topk) are orthogonal ways to
 cut client<->PS traffic; this benchmark measures accuracy x total upload
 bytes for each and for the combination, on the same data/seeds.
 
-    PYTHONPATH=src python -m benchmarks.comm_efficiency
+    PYTHONPATH=src python -m benchmarks.comm_efficiency --json BENCH_comm.json
 
-(opt-in: not part of the default `benchmarks.run` table sweep)
+(opt-in: not part of the default `benchmarks.run` table sweep; `--json`
+— or `make bench-comm` — additionally writes the provenance-stamped
+BENCH_comm.json ledger via telemetry's one bench writer)
 """
 from __future__ import annotations
 
+import argparse
+
 from benchmarks.fl_common import run_algo
+from repro.telemetry import write_bench_json
 
 SETTINGS = [
     ("fedavg", "identity"),
@@ -22,10 +27,10 @@ SETTINGS = [
 ]
 
 
-def run(*, seeds=(0,), full=False):
+def run(*, seeds=(0,), full=False, json_path=None):
     print("\n# communication efficiency "
           "(algo,codec,acc,upload_MB,download_MB,acc_per_upload_GB)")
-    rows = []
+    rows, cells = [], []
     for algo, codec in SETTINGS:
         out = run_algo(algo, seeds=seeds, full=full, upload_codec=codec,
                        privacy_sigma=0.05)  # heterogeneous regime
@@ -35,8 +40,30 @@ def run(*, seeds=(0,), full=False):
         print(f"{algo},{codec},{out['acc_mean']:.4f},{up:.1f},{down:.1f},"
               f"{eff:.2f}")
         rows.append((algo, codec, out["acc_mean"], up, down))
+        cells.append({
+            "algo": algo, "codec": codec,
+            "acc_mean": out["acc_mean"],
+            "acc_std": out.get("acc_std"),
+            "upload_bytes": out.get("upload_bytes", 0),
+            "download_bytes": out.get("download_bytes", 0),
+            "acc_per_upload_gb": eff,
+        })
+    if json_path:
+        write_bench_json(json_path, {
+            "schema": "bench_comm/v1",
+            "seeds": list(seeds), "full": full,
+            "privacy_sigma": 0.05,
+            "settings": cells,
+        })
+        print(f"json_report,{json_path}")
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale shapes instead of the smoke config")
+    ap.add_argument("--json", default=None,
+                    help="write the provenance-stamped BENCH_comm.json")
+    a = ap.parse_args()
+    run(full=a.full, json_path=a.json)

@@ -355,6 +355,7 @@ def run_grid_bench(*, full: bool = False,
             "flops_per_dispatch": None
             if p.flops_per_dispatch != p.flops_per_dispatch
             else p.flops_per_dispatch,
+            "peak_bytes": p.peak_bytes,
         })
     rows.append(f"grid_segment_latency,{seg_us:.0f},"
                 f"segments={n_segments}_cells={len(gspec.cells)}")

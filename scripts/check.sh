@@ -10,6 +10,9 @@
 #   CHECK_TELEMETRY=1 scripts/check.sh  additionally runs the telemetry
 #   overhead bench (off vs host-side vs live tap) and refreshes
 #   BENCH_telemetry.json.
+#   CHECK_CLIENT_SCALE=1 scripts/check.sh  additionally runs the client-
+#   axis sharding smoke (dense vs sharded per-device bytes, DESIGN.md §16)
+#   and refreshes BENCH_clients.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -44,6 +47,12 @@ if [[ "${CHECK_GRID_SMOKE:-0}" == "1" ]]; then
   echo
   echo "== grid runner smoke (BENCH_grid.json) =="
   make grid-smoke
+fi
+
+if [[ "${CHECK_CLIENT_SCALE:-0}" == "1" ]]; then
+  echo
+  echo "== client-axis sharding smoke (BENCH_clients.json) =="
+  make client-scale-smoke
 fi
 
 if [[ "${CHECK_TELEMETRY:-0}" == "1" ]]; then

@@ -386,6 +386,47 @@ def device_update_any(specs: tuple[SelectorSpec, ...], strategy_id: jax.Array,
     return jax.lax.switch(strategy_id, branches, state, sel, sv_round)
 
 
+def gather_client_state(state: DeviceSelectorState, axis_name: str,
+                        n_clients: int):
+    """Client-axis-sharded selector state -> full state + a put_back fn.
+
+    Inside a shard_map body over `axis_name` every per-client leaf of
+    `state` (ndim >= 1: sv, counts, initialised, rr_order, active) is a
+    local (N_pad / shards, ...) block; scalars (round, frozen) are
+    replicated.  Selection itself is global — top-m over ALL clients —
+    so the strategies run on the exact (N,) state:
+
+        full, put_back = gather_client_state(state, axis_name, n)
+        sel, full = device_select_any(specs, sid, full, key, ctx)
+        full      = device_update_any(specs, sid, full, sel, sv)
+        state     = put_back(full)
+
+    `put_back` re-pads the updated (N,) leaves to (N_pad,) — the pad
+    rows keep their (constant) initial values, so they stay deterministic
+    across rounds — and slices this shard's block back out.  All leaves
+    round-trip bitwise: gather/slice copies bits, and the strategies
+    never read or write pad rows.
+    """
+    full_pad = jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axis_name, tiled=True)
+        if x.ndim >= 1 else x, state)
+    full = jax.tree.map(lambda x: x[:n_clients] if x.ndim >= 1 else x,
+                        full_pad)
+    idx = jax.lax.axis_index(axis_name)
+
+    def put_back(new_full: DeviceSelectorState) -> DeviceSelectorState:
+        def scatter(loc, pad, new):
+            if new.ndim == 0:
+                return new
+            merged = jax.lax.dynamic_update_slice_in_dim(pad, new, 0, 0)
+            n_local = loc.shape[0]
+            return jax.lax.dynamic_slice_in_dim(merged, idx * n_local,
+                                                n_local, 0)
+        return jax.tree.map(scatter, state, full_pad, new_full)
+
+    return full, put_back
+
+
 def device_dropped_fraction(state: DeviceSelectorState) -> jax.Array:
     """Fraction of clients dropped from the protocol (0 until frozen)."""
     return jnp.where(state.frozen,

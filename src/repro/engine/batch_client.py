@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.federated.client import ClientConfig, client_update
+from repro.kernels.cohort_gather import cohort_take
 from repro.models.mlp_cnn import ClassifierModel
 
 PyTree = Any
@@ -55,19 +56,25 @@ def cohort_update(
     sel: jax.Array,          # (M,) int selected client ids
     epochs_k: jax.Array,     # (M,)
     round_key: jax.Array,
+    client_axis: str = None,
 ) -> tuple[PyTree, jax.Array, jax.Array]:
     """Gather the cohort out of the full stacks and train it in one vmap.
 
     Returns (stacked updates, n_k of the cohort, shapley key).  Designed to
     be traced inside the fused `round_step` (and vmapped over seeds), so the
     gather happens on-device — no host round-trip per client.
+
+    With `client_axis` set the `*_all` stacks are this shard's local
+    blocks of client-axis-sharded arrays (DESIGN.md §16) and the gather
+    goes cross-shard through `cohort_take`; `sel` stays global.  Either
+    way the gathered cohort is bitwise the dense `jnp.take` result.
     """
     m = sel.shape[0]
     ckeys = jax.random.split(round_key, m + 1)
-    xs = jnp.take(xs_all, sel, axis=0)
-    ys = jnp.take(ys_all, sel, axis=0)
-    nv = jnp.take(nv_all, sel, axis=0)
-    sg = jnp.take(sigma_all, sel, axis=0)
+    xs = cohort_take(xs_all, sel, axis_name=client_axis)
+    ys = cohort_take(ys_all, sel, axis_name=client_axis)
+    nv = cohort_take(nv_all, sel, axis_name=client_axis)
+    sg = cohort_take(sigma_all, sel, axis_name=client_axis)
     stacked = batched_client_update(model, ccfg, params, xs, ys, nv,
                                     epochs_k, sg, ckeys[:m])
     return stacked, nv.astype(jnp.float32), ckeys[m]

@@ -20,7 +20,7 @@ multi-seed benchmark table.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,10 +28,11 @@ import jax.numpy as jnp
 from repro.core.aggregation import normalized_weights, weighted_average
 from repro.core.selection_jax import (
     DeviceSelectionContext, DeviceSelectorState, SelectorSpec,
-    device_select_any, device_update_any,
+    device_select_any, device_update_any, gather_client_state,
 )
 from repro.core.shapley import gtg_shapley
 from repro.engine.batch_client import cohort_update
+from repro.kernels.cohort_gather import cohort_take
 from repro.federated.client import ClientConfig, local_loss
 from repro.federated.compression import codec_nbytes, codec_roundtrip
 from repro.models.mlp_cnn import ClassifierModel
@@ -59,6 +60,13 @@ class RoundSpec(NamedTuple):
     # Numerics-invariant: every chunking is bit-identical.
     sv_chunk: int = 0
     upload_codec: str = "identity"
+    # Client-axis sharding (DESIGN.md §16): mesh-axis name the (N, ...)
+    # client stacks and per-client selector state are sharded over when
+    # the step runs inside a shard_map body; None = dense single-device
+    # stacks.  Sharded and dense traces are bit-identical by contract
+    # (sparse gathers copy bits; selection runs on the gathered (N,)
+    # state either way).
+    client_axis: Optional[str] = None
 
 
 class RoundOutput(NamedTuple):
@@ -90,7 +98,7 @@ def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
         with named_stage("train"):
             stacked, n_k_sel, sv_key = cohort_update(
                 model, ccfg, params, xs_all, ys_all, nv_all, sigma_all,
-                sel, epochs_k, round_key)
+                sel, epochs_k, round_key, client_axis=spec.client_axis)
 
             if spec.upload_codec != "identity":
                 stacked = jax.vmap(
@@ -253,6 +261,7 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
     round_step = make_round_step(model, ccfg, spec.round)
     uses_losses = any(sp.uses_local_losses for sp in spec.selectors)
     n_clients = spec.selectors[0].n_clients
+    ca = spec.round.client_axis
 
     def bind(xs_all, ys_all, nv_all, sigma_all, x_val, y_val, x_test,
              y_test, fractions, strategy_id):
@@ -265,21 +274,35 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
                 losses = jax.vmap(
                     lambda x, y, nv: local_loss(model, params, x, y, nv)
                 )(xs_all, ys_all, nv_all)
+                if ca is not None:
+                    # local rows -> the exact global (N,) loss vector
+                    losses = jax.lax.all_gather(losses, ca,
+                                                tiled=True)[:n_clients]
             else:
                 losses = jnp.zeros((n_clients,), jnp.float32)
 
             with named_stage("select"):
+                # selection is global top-m: under client sharding the
+                # per-client state is all-gathered to its exact (N,) form,
+                # the strategy runs unchanged, and the updated vectors are
+                # scattered back to this shard's block (DESIGN.md §16)
+                if ca is not None:
+                    full, put_back = gather_client_state(sstate, ca,
+                                                         n_clients)
+                else:
+                    full, put_back = sstate, lambda s: s
                 ctx = DeviceSelectionContext(data_fractions=fractions,
                                              local_losses=losses, poc_d=d_t)
-                sel, sstate = device_select_any(spec.selectors, strategy_id,
-                                                sstate, sel_key, ctx)
-                epochs_k = jnp.take(epochs_row, sel)
+                sel, full = device_select_any(spec.selectors, strategy_id,
+                                              full, sel_key, ctx)
+                epochs_k = (cohort_take(epochs_row, sel, axis_name=ca)
+                            if ca is not None else jnp.take(epochs_row, sel))
 
             out = round_step(params, xs_all, ys_all, nv_all, sigma_all,
                              x_val, y_val, sel, epochs_k, round_key)
-            sstate = device_update_any(
-                spec.selectors, strategy_id, sstate, sel,
-                out.sv if spec.round.needs_sv else None)
+            sstate = put_back(device_update_any(
+                spec.selectors, strategy_id, full, sel,
+                out.sv if spec.round.needs_sv else None))
 
             if spec.live_tap:
                 # opt-in in-scan stream (§15): host callback per round,

@@ -77,19 +77,23 @@ def scan_operands(cfg, s) -> tuple:
             jnp.asarray(0, jnp.int32), s.sel_state, s.key)
 
 
-def make_scan_spec(cfg, selector_specs: tuple, *,
-                   live_tap: bool = False) -> ScanSpec:
+def make_scan_spec(cfg, selector_specs: tuple, *, live_tap: bool = False,
+                   client_axis: str = None) -> ScanSpec:
     """ScanSpec for an FLConfig; `selector_specs` may hold several
     strategies for a switch-dispatched mixed batch (superset semantics:
     SV is computed if ANY strategy needs it).  `live_tap` opts the trace
-    into the in-scan telemetry callback (DESIGN.md §15)."""
+    into the in-scan telemetry callback (DESIGN.md §15); `client_axis`
+    bakes the client-sharding collectives into the round trace
+    (DESIGN.md §16 — set it iff the step runs inside the client-axis
+    shard_map)."""
     needs_sv = any(sp.uses_shapley for sp in selector_specs)
     max_iters = cfg.shapley_max_iters or 50 * cfg.m
     rspec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
                       shapley_eps=cfg.shapley_eps,
                       shapley_max_iters=max_iters,
                       sv_chunk=cfg.sv_chunk,
-                      upload_codec=cfg.upload_codec)
+                      upload_codec=cfg.upload_codec,
+                      client_axis=client_axis)
     # eval_every is NOT in the spec: the cadence is a (T,) bool operand
     # (schedule.eval_mask), so one executable serves every cadence
     return ScanSpec(round=rspec, selectors=tuple(selector_specs),
@@ -157,6 +161,104 @@ def results_from_scan(cfg, s, out, *, wall_time_s: float, seed: int,
     )
 
 
+def _sharded_scan_batch(cfg, s, mesh):
+    """The 1-replica ReplicaBatch of a client-sharded solo run.
+
+    The data stacks from `setup_run(..., client_mesh=mesh)` are already
+    (N_pad, ...) arrays sharded over CLIENT_AXIS; they gain their leading
+    replica axis through a jit with explicit out_shardings — a local
+    per-shard reshape, never a gather.  Host-side operands (sigma, the
+    epochs tables, the initial selector state) are zero-padded to N_pad;
+    fractions stays the exact (N,) vector (replicated, read whole by
+    selection).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.engine.round_engine import SegmentCarry
+    from repro.grid.segments import ReplicaBatch
+    from repro.grid.shard import CLIENT_AXIS, clients_padded
+    from repro.engine.schedule import eval_mask as emask_fn
+
+    n_pad = clients_padded(cfg.n_clients, cfg.clients_shards)
+
+    def pad_rows(a, axis=0):
+        a = np.asarray(a)
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, n_pad - a.shape[axis])
+        return np.pad(a, widths)
+
+    expand = jax.jit(lambda a: a[None], out_shardings=NamedSharding(
+        mesh, P(None, CLIENT_AXIS)))
+
+    def rep1(a):
+        return jnp.asarray(a)[None]
+
+    sel_state = jax.tree.map(
+        lambda x: jnp.asarray(pad_rows(x))[None] if x.ndim >= 1
+        else jnp.asarray(x)[None], s.sel_state)
+    carry = SegmentCarry(
+        params=jax.tree.map(rep1, s.params), sel_state=sel_state,
+        key=jnp.asarray(s.key)[None],
+        eval_slot=jnp.zeros((1,), jnp.int32))
+    return ReplicaBatch(
+        carry=carry,
+        xs=expand(s.xs), ys=expand(s.ys), nv=expand(s.n_valid),
+        sigma=jnp.asarray(pad_rows(s.sigma_k_all))[None],
+        x_val=rep1(s.x_val), y_val=rep1(s.y_val),
+        x_test=rep1(s.x_test), y_test=rep1(s.y_test),
+        fractions=jnp.asarray(s.fractions, jnp.float32)[None],
+        epochs_tables=jnp.asarray(
+            pad_rows(build_epochs_table(cfg, s), axis=1))[None],
+        d_scheds=jnp.asarray(poc_d_schedule(s.sel_spec, cfg.rounds))[None],
+        eval_masks=jnp.asarray(emask_fn(cfg.rounds, cfg.eval_every))[None],
+        strategy_ids=jnp.zeros((1,), jnp.int32))
+
+
+def _run_scan_sharded(cfg, s, spec, t_start, *, telemetry, ctimer):
+    """Client-sharded solo run: the one scan dispatch goes through the
+    shard_map segment step on a (1, clients_shards) run mesh; outputs are
+    unpadded + replica-squeezed back into the dense run's exact shapes.
+    Bit-identical to the dense scan at equal config (DESIGN.md §16)."""
+    from repro.grid.segments import run_segments
+    from repro.grid.shard import make_run_mesh, unpad_scan_output
+
+    spec_sel = s.sel_spec
+    # deterministic rebuild of the mesh setup_run sharded the data on
+    # (Mesh is hashable/comparable, so the step cache keys correctly)
+    mesh = make_run_mesh(1, cfg.clients_shards)
+    with ctimer:
+        batch = _sharded_scan_batch(cfg, s, mesh)
+    out_b, report = run_segments(s.model, cfg.client, spec, batch,
+                                 mesh=mesh, telemetry=telemetry)
+    out_b = unpad_scan_output(out_b, cfg.n_clients)
+    out = jax.tree.map(lambda x: x[0], out_b)
+
+    res = results_from_scan(cfg, s, out,
+                            wall_time_s=time.perf_counter() - t_start,
+                            seed=cfg.seed, dispatches=report.n_segments,
+                            uses_shapley=spec_sel.uses_shapley,
+                            compile_time_s=(ctimer.seconds
+                                            + report.compile_time_s))
+    if telemetry is not None:
+        from repro.telemetry.metrics import emit_scan_rounds, run_end_payload
+        telemetry.emit("compile", seconds=res.compile_time_s,
+                       program="run_scan_client_sharded")
+        emit_scan_rounds(
+            telemetry, out, uses_shapley=spec_sel.uses_shapley,
+            codec_bytes=codec_nbytes(cfg.upload_codec, s.params),
+            model_bytes=s.model_bytes,
+            emask=eval_mask(cfg.rounds, cfg.eval_every))
+        telemetry.emit("run_end", **run_end_payload(
+            rounds=cfg.rounds, wall_time_s=res.wall_time_s,
+            compile_time_s=res.compile_time_s, final_acc=res.final_acc,
+            utility_evals=res.shapley_evals,
+            upload_bytes=res.upload_bytes, download_bytes=res.download_bytes,
+            sv_rounds=cfg.rounds if spec_sel.uses_shapley else 0,
+            truncated_rounds=int(np.asarray(out.sv_truncated).sum())
+            if spec_sel.uses_shapley else 0,
+            dispatches=report.n_segments))
+    return res
+
+
 def run_federated_scan(cfg, s, t_start: float, *, telemetry=None,
                        ctimer=None):
     """Execute `cfg.rounds` federated rounds as one scan dispatch.
@@ -164,6 +266,10 @@ def run_federated_scan(cfg, s, t_start: float, *, telemetry=None,
     `s` is the RunSetup from `server.setup_run` — the rng/key streams it
     consumed match the other engines, so the scan starts from identical
     partitions, params, and selector order.
+
+    With `cfg.clients_shards > 1` the dispatch routes through the
+    client-sharded shard_map path (`_run_scan_sharded`, DESIGN.md §16);
+    results are bit-identical to the dense run.
 
     `telemetry=None` is the zero-cost default: no extra dispatches, no
     in-trace callbacks, bit-identical outputs.  With a sink attached the
@@ -175,9 +281,15 @@ def run_federated_scan(cfg, s, t_start: float, *, telemetry=None,
 
     spec_sel = s.sel_spec
     live = bool(telemetry is not None and telemetry.live_tap)
-    spec = make_scan_spec(cfg, (spec_sel,), live_tap=live)
     if ctimer is None:
         ctimer = CompileTimer()
+    if cfg.clients_shards > 1:
+        from repro.launch.mesh import CLIENT_AXIS
+        spec = make_scan_spec(cfg, (spec_sel,), live_tap=live,
+                              client_axis=CLIENT_AXIS)
+        return _run_scan_sharded(cfg, s, spec, t_start,
+                                 telemetry=telemetry, ctimer=ctimer)
+    spec = make_scan_spec(cfg, (spec_sel,), live_tap=live)
 
     with ctimer:
         run = jitted_run_scan(s.model, cfg.client, spec)

@@ -40,27 +40,92 @@ def dirichlet_partition(
         fractions = power_law_fractions(n_clients, rng)
     sizes = np.maximum((fractions * n).astype(int), min_per_client)
 
-    pools = {int(c): list(rng.permutation(np.where(labels == c)[0])) for c in classes}
+    # Per-class pools as permuted arrays consumed front-to-cursor: a
+    # client's grant of g samples from class c is the next g entries of a
+    # uniformly random order — the same distribution as g sequential
+    # `pool.pop()` draws, at O(1) per sample instead of O(C) python work.
+    pools = [rng.permutation(np.where(labels == c)[0]) for c in classes]
+    cursors = np.zeros(len(classes), np.int64)
+    remaining = np.asarray([p.size for p in pools], np.int64)
     # Dirichlet with very small alpha underflows to nan in np; clip.
     a = max(alpha, 1e-6)
     out: list[np.ndarray] = []
     for k in range(n_clients):
         p = rng.dirichlet(np.full(classes.shape[0], a))
-        take: list[int] = []
-        for _ in range(sizes[k]):
-            avail = [i for i, c in enumerate(classes) if pools[int(c)]]
-            if not avail:
+        take_parts: list[np.ndarray] = []
+        need = int(sizes[k])
+        # whole-quota batched class draws: each pass either fills the
+        # remaining quota or exhausts >= 1 class, so <= C+1 passes/client
+        while need > 0:
+            avail = np.where(remaining > 0)[0]
+            if avail.size == 0:
                 break
             pa = p[avail]
             s = pa.sum()
-            pa = pa / s if s > 1e-12 else np.full(len(avail), 1.0 / len(avail))
-            ci = int(rng.choice(avail, p=pa))
-            take.append(pools[int(classes[ci])].pop())
-        if len(take) < min_per_client:  # top up from global remainder
-            for c in classes:
-                while pools[int(c)] and len(take) < min_per_client:
-                    take.append(pools[int(c)].pop())
+            pa = (pa / s if s > 1e-12
+                  else np.full(avail.size, 1.0 / avail.size))
+            cnt = np.bincount(rng.choice(avail.size, size=need, p=pa),
+                              minlength=avail.size)
+            grant = np.minimum(cnt, remaining[avail])
+            for ci, g in zip(avail, grant):
+                if g:
+                    take_parts.append(pools[ci][cursors[ci]:cursors[ci] + g])
+            cursors[avail] += grant
+            remaining[avail] -= grant
+            need -= int(grant.sum())
+        take = (np.concatenate(take_parts) if take_parts
+                else np.empty(0, np.int64))
+        if take.size < min_per_client:  # top up from global remainder
+            for ci in range(len(classes)):
+                g = min(min_per_client - take.size, int(remaining[ci]))
+                if g > 0:
+                    take = np.concatenate(
+                        [take, pools[ci][cursors[ci]:cursors[ci] + g]])
+                    cursors[ci] += g
+                    remaining[ci] -= g
         out.append(np.asarray(take, np.int64))
+    return out
+
+
+# --------------------------------------------------------------------------
+# padded-stack blocks: the (N, cap, ...) layout the engines consume, built
+# one client-axis slice at a time so a client-sharded run materialises only
+# each device's own rows (server.setup_run passes these as the
+# make_array_from_callback per-shard builders; the dense path is the
+# lo=0, hi=N special case)
+# --------------------------------------------------------------------------
+
+def client_cap(parts: list[np.ndarray]) -> int:
+    """Padded per-client capacity: the largest client's sample count."""
+    return max(int(p.size) for p in parts)
+
+
+def padded_x_block(x: np.ndarray, parts: list[np.ndarray], cap: int,
+                   lo: int, hi: int) -> np.ndarray:
+    """(hi-lo, cap, ...) float32 rows [lo, hi) of the padded data stack;
+    rows past len(parts) are pad clients (all zeros, n_valid 0)."""
+    out = np.zeros((hi - lo, cap) + x.shape[1:], np.float32)
+    for i in range(lo, min(hi, len(parts))):
+        p = parts[i]
+        out[i - lo, : p.size] = x[p]
+    return out
+
+
+def padded_y_block(y: np.ndarray, parts: list[np.ndarray], cap: int,
+                   lo: int, hi: int) -> np.ndarray:
+    """(hi-lo, cap) int32 label rows [lo, hi) of the padded stack."""
+    out = np.zeros((hi - lo, cap), np.int32)
+    for i in range(lo, min(hi, len(parts))):
+        p = parts[i]
+        out[i - lo, : p.size] = y[p]
+    return out
+
+
+def valid_counts(parts: list[np.ndarray], lo: int, hi: int) -> np.ndarray:
+    """(hi-lo,) int32 per-client sample counts for rows [lo, hi)."""
+    out = np.zeros((hi - lo,), np.int32)
+    for i in range(lo, min(hi, len(parts))):
+        out[i - lo] = parts[i].size
     return out
 
 

@@ -48,7 +48,10 @@ from repro.engine.schedule import (
 )
 from repro.federated.client import ClientConfig, client_update, local_loss
 from repro.federated.compression import compress_update
-from repro.federated.partition import dirichlet_partition, power_law_fractions
+from repro.federated.partition import (
+    client_cap, dirichlet_partition, padded_x_block, padded_y_block,
+    power_law_fractions, valid_counts,
+)
 from repro.models.mlp_cnn import ClassifierModel, make_classifier
 
 PyTree = Any
@@ -108,6 +111,11 @@ class FLConfig:
     n_train: int = 6000
     n_val: int = 500
     n_test: int = 1000
+    # client-axis sharding (DESIGN.md §16, engine="scan" only): shard the
+    # (N, cap, ...) client stacks + per-client selector state over this
+    # many devices, making per-device client memory O(N / clients_shards).
+    # Bit-identical to the dense run at any value; 1 = dense (default).
+    clients_shards: int = 1
 
 
 class FLResult(NamedTuple):
@@ -134,15 +142,45 @@ class FLResult(NamedTuple):
 
 
 def _pad_clients(x, y, parts):
-    cap = max(int(p.size) for p in parts)
-    xs = np.zeros((len(parts), cap) + x.shape[1:], np.float32)
-    ys = np.zeros((len(parts), cap), np.int32)
-    nv = np.zeros((len(parts),), np.int32)
-    for i, p in enumerate(parts):
-        xs[i, : p.size] = x[p]
-        ys[i, : p.size] = y[p]
-        nv[i] = p.size
-    return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(nv)
+    cap = client_cap(parts)
+    n = len(parts)
+    return (jnp.asarray(padded_x_block(x, parts, cap, 0, n)),
+            jnp.asarray(padded_y_block(y, parts, cap, 0, n)),
+            jnp.asarray(valid_counts(parts, 0, n)))
+
+
+def _shard_clients(x, y, parts, mesh):
+    """Client-axis-sharded padded stacks, materialised lazily per shard.
+
+    Each device's rows of the (N_pad, cap, ...) stacks are built from the
+    partition indices via `jax.make_array_from_callback`, so the host
+    never holds the dense O(N) stacks — only one shard block at a time
+    (DESIGN.md §16).  Rows [n_clients, N_pad) are zero pad clients.
+    """
+    from repro.grid.shard import clients_padded
+    from repro.launch.mesh import CLIENT_AXIS
+    n_pad = clients_padded(len(parts), mesh.shape[CLIENT_AXIS])
+    cap = client_cap(parts)
+
+    def build(shape, dtype, block):
+        spec = jax.sharding.PartitionSpec(
+            CLIENT_AXIS, *([None] * (len(shape) - 1)))
+        sharding = jax.sharding.NamedSharding(mesh, spec)
+
+        def cb(index):
+            lo = index[0].start or 0
+            hi = shape[0] if index[0].stop is None else index[0].stop
+            return block(lo, hi).astype(dtype)
+
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+    xs = build((n_pad, cap) + x.shape[1:], np.float32,
+               lambda lo, hi: padded_x_block(x, parts, cap, lo, hi))
+    ys = build((n_pad, cap), np.int32,
+               lambda lo, hi: padded_y_block(y, parts, cap, lo, hi))
+    nv = build((n_pad,), np.int32,
+               lambda lo, hi: valid_counts(parts, lo, hi))
+    return xs, ys, nv
 
 
 class RunSetup(NamedTuple):
@@ -177,11 +215,16 @@ class RunSetup(NamedTuple):
 
 
 def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
-              model: Optional[ClassifierModel] = None) -> RunSetup:
+              model: Optional[ClassifierModel] = None, *,
+              client_mesh=None) -> RunSetup:
     """Partition data, assign heterogeneity, init model/selector state.
 
     Draw order on `rng`/`key` is frozen (parity across engines and with the
     seed history); anything new must draw strictly after the existing calls.
+    `client_mesh` (a mesh with a CLIENT_AXIS, DESIGN.md §16) switches the
+    padded stacks to lazily-materialised client-axis-sharded arrays; the
+    rng/key streams and every derived value are unchanged (the stacks just
+    gain zero pad rows that nothing reads).
     """
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.key(cfg.seed)
@@ -196,7 +239,11 @@ def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
     fractions = power_law_fractions(cfg.n_clients, rng)
     parts = dirichlet_partition(data.y_train, cfg.n_clients,
                                 cfg.dirichlet_alpha, rng, fractions)
-    xs, ys, n_valid = _pad_clients(data.x_train, data.y_train, parts)
+    if client_mesh is not None:
+        xs, ys, n_valid = _shard_clients(data.x_train, data.y_train, parts,
+                                         client_mesh)
+    else:
+        xs, ys, n_valid = _pad_clients(data.x_train, data.y_train, parts)
     n_k_all = n_valid.astype(jnp.float32)
 
     # ---- heterogeneity assignments --------------------------------------
@@ -230,7 +277,7 @@ def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
     clock = None
     if cfg.schedule is not None:
         clock = make_client_clock(cfg.schedule, cfg.n_clients, model_bytes,
-                                  rng, n_k=np.asarray(n_valid))
+                                  rng, n_k=np.asarray(n_valid)[:cfg.n_clients])
 
     # ---- straggler_rev >= 1: pre-draw the (T, N) budget table -----------
     # Drawn at the exact stream position where the scan engine used to
@@ -303,9 +350,17 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
     if cfg.shapley_impl not in SHAPLEY_IMPLS:
         raise ValueError(f"unknown shapley_impl {cfg.shapley_impl!r}; "
                          f"options: {SHAPLEY_IMPLS}")
+    client_mesh = None
+    if cfg.clients_shards > 1:
+        if cfg.engine != "scan":
+            raise ValueError("clients_shards > 1 requires engine='scan' "
+                             "(the loop/batched engines are host-driven "
+                             "and hold dense stacks by design)")
+        from repro.launch.mesh import make_run_mesh
+        client_mesh = make_run_mesh(1, cfg.clients_shards)
     ctimer = CompileTimer()
     with ctimer:
-        s = setup_run(cfg, data, model)
+        s = setup_run(cfg, data, model, client_mesh=client_mesh)
     if telemetry is not None:
         from repro.telemetry.events import provenance
         telemetry.emit("run_start", run_id=telemetry.run_id, kind="solo",

@@ -19,7 +19,7 @@ the SV step*, while the streaming path decides *how small that step is*.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 from repro.core.selection_jax import SelectorSpec
 
@@ -54,6 +54,9 @@ class PartitionReport(NamedTuple):
     shapley_evals: int           # total utility evals across the partition
     bytes_resident: int          # replica-stacked operand + carry bytes
     flops_per_dispatch: float = float("nan")   # compiled cost, if available
+    # XLA memory_analysis() peak of the compiled segment step (per device
+    # under sharding); None unless run_grid(compile_stats=True)
+    peak_bytes: Optional[int] = None
 
 
 def partition_key(spec: SelectorSpec) -> PartitionKey:

@@ -133,7 +133,11 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
       dispatches what is missing.
     * `shard=True` places the replica axis on a 1-D device mesh
       (repro.grid.shard) whenever >1 local device divides the partition's
-      replica count; with one device it is the plain vmap path.
+      replica count; with one device it is the plain vmap path.  With
+      `spec.base.clients_shards > 1` the mesh gains a client axis and the
+      per-client state additionally shards over it (DESIGN.md §16) —
+      batches are zero-padded to a shard multiple and results unpadded
+      back, bit-identical to the dense grid.
     * `data` may be one dataset (shared by every cell) or a sequence with
       one dataset per cell (e.g. per-seed datasets of a benchmark table).
     * `telemetry` (repro.telemetry.Telemetry, default None = zero-cost)
@@ -145,11 +149,16 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
     """
     from repro.engine.scan_engine import make_scan_spec, results_from_scan
     from repro.federated.server import setup_run
-    from repro.launch.mesh import make_replica_mesh
+    from repro.grid.shard import (
+        CLIENT_AXIS, make_run_mesh, pad_batch_clients, unpad_scan_output,
+    )
 
     t_start = time.perf_counter()
     cfgs = spec.validate()
     segment_plan(spec.base.rounds, rounds_per_segment)  # fail fast
+    if spec.base.clients_shards > 1 and not shard:
+        raise ValueError("clients_shards > 1 requires shard=True (the "
+                         "client axis lives on the run mesh)")
     # a per-cell sequence is a plain list/tuple; SynthDataset itself is a
     # NamedTuple (hence a tuple), so ``_fields`` distinguishes the two
     if isinstance(data, (list, tuple)) and not hasattr(data, "_fields"):
@@ -181,17 +190,23 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
     reports: list = []
     n_segments = 1
     compile_s = 0.0
+    peaks: list = []   # per-partition compiled peak bytes (compile_stats)
     for pi, part in enumerate(partitions):
         t_part = time.perf_counter()
         live = bool(telemetry is not None and telemetry.live_tap)
+        mesh = (make_run_mesh(len(part.cell_indices),
+                              spec.base.clients_shards)
+                if shard else None)
+        client_sharded = (mesh is not None
+                          and CLIENT_AXIS in mesh.axis_names)
         scan_spec = make_scan_spec(
-            cfgs[part.cell_indices[0]], part.specs,
-            live_tap=live)._replace(
+            cfgs[part.cell_indices[0]], part.specs, live_tap=live,
+            client_axis=CLIENT_AXIS if client_sharded else None)._replace(
                 rounds_per_segment=rounds_per_segment)
         batch = _build_batch(part, cfgs, setups, sel_specs,
                              spec.base.rounds)
-        mesh = (make_replica_mesh(len(part.cell_indices))
-                if shard else None)
+        if client_sharded:
+            batch = pad_batch_clients(batch, spec.base.clients_shards)
         if telemetry is not None:
             telemetry.heartbeat(
                 f"partition {pi + 1}/{len(partitions)} "
@@ -203,6 +218,7 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
             max_segments=max_segments, mesh=mesh,
             compile_stats=compile_stats, telemetry=telemetry)
         compile_s += report.compile_time_s
+        peaks.append(report.peak_bytes)
         if out is None:
             if telemetry is not None:
                 telemetry.heartbeat(
@@ -210,6 +226,8 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
                     f"{max_segments} ({report.dispatches} dispatched); "
                     "checkpoints are the resume point", force=True)
             return None
+        if client_sharded:
+            out = unpad_scan_output(out, spec.base.n_clients)
         n_segments = report.n_segments
         # the partition's cells ran fused: they share ITS duration (not
         # the grid's running total, which would bill later partitions
@@ -245,13 +263,20 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
             n_strategies=len(part.specs), dispatches=report.dispatches,
             shapley_evals=evals_total,
             bytes_resident=report.bytes_resident,
-            flops_per_dispatch=report.flops_per_dispatch))
+            flops_per_dispatch=report.flops_per_dispatch,
+            peak_bytes=report.peak_bytes))
 
     results = interleave(len(spec.cells), partitions, per_partition)
     wall = time.perf_counter() - t_start
     if telemetry is not None:
         accs = [r.final_acc for r in results if r.final_acc == r.final_acc]
-        telemetry.emit("compile", seconds=compile_s, program="grid_segments")
+        mem_fields = {}
+        if any(p is not None for p in peaks):
+            # compiled peak (per device) of the largest partition's step
+            mem_fields["peak_bytes"] = max(
+                p for p in peaks if p is not None)
+        telemetry.emit("compile", seconds=compile_s,
+                       program="grid_segments", **mem_fields)
         telemetry.emit("run_end", **run_end_payload(
             rounds=spec.base.rounds, wall_time_s=wall,
             compile_time_s=compile_s,

@@ -33,7 +33,7 @@ from repro.checkpoint.ckpt import load_carry, save_carry
 from repro.engine.round_engine import (
     ScanRunOutput, ScanSpec, SegmentCarry, jitted_segment_step,
 )
-from repro.launch.compat import compiled_flops
+from repro.launch.compat import compiled_flops, compiled_memory_stats
 
 PyTree = Any
 
@@ -63,6 +63,10 @@ class SegmentRunReport(NamedTuple):
     bytes_resident: int
     flops_per_dispatch: float
     compile_time_s: float = 0.0  # jit trace+lower+compile in THIS call
+    # XLA memory_analysis() peak of the compiled segment step (per device
+    # under sharding); None unless compile_stats asked for the probe or
+    # the backend has no analysis
+    peak_bytes: Optional[int] = None
 
 
 def segment_plan(rounds: int, rounds_per_segment: int) -> tuple[int, int]:
@@ -184,13 +188,14 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
             carry = snap["carry"]
 
     flops = float("nan")
+    peak_bytes = None
     dispatched = 0
     seg_seconds: list[float] = []
     for seg in range(start, n_segments):
         if max_segments is not None and dispatched >= max_segments:
             return None, SegmentRunReport(
                 n_segments, dispatched, start, batch_bytes(batch), flops,
-                ctimer.seconds)
+                ctimer.seconds, peak_bytes)
         t0 = jnp.asarray(seg * k_rounds, jnp.int32)
         sl = slice(seg * k_rounds, (seg + 1) * k_rounds)
         args = (carry, t0, eval_any[sl], *operands,
@@ -198,6 +203,8 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
                 batch.eval_masks[:, sl], batch.strategy_ids)
         if compile_stats and seg == start:
             flops = compiled_flops(step, *args)
+            mem = compiled_memory_stats(step, *args)
+            peak_bytes = mem["peak_bytes"] if mem else None
         if telemetry is not None:
             t_seg = time.perf_counter()
             telemetry.emit("segment_start", segment=seg,
@@ -238,5 +245,6 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
         test_acc=stacked["test_acc"], val_loss=stacked["val_loss"],
         eval_count=carry.eval_slot)
     report = SegmentRunReport(n_segments, dispatched, start,
-                              batch_bytes(batch), flops, ctimer.seconds)
+                              batch_bytes(batch), flops, ctimer.seconds,
+                              peak_bytes)
     return result, report

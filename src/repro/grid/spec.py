@@ -23,7 +23,7 @@ STATIC_FIELDS = (
     "dataset", "n_clients", "m", "rounds", "client",
     "n_train", "n_val", "n_test",
     "shapley_eps", "shapley_max_iters", "shapley_impl", "sv_chunk",
-    "upload_codec",
+    "upload_codec", "clients_shards",
 )
 
 def _freeze_overrides(ov) -> tuple:

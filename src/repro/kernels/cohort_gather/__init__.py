@@ -1,0 +1,19 @@
+"""Sparse cohort gather: selected-client rows out of (sharded) stacks.
+
+The selection engines produce a global (M,) id vector each round; this
+package turns it into the cohort's rows without materialising anything
+O(N) beyond the (sharded) client stacks themselves:
+
+  * `kernel.py`  — Pallas TPU gather with scalar-prefetched cohort ids
+                   (the ids live in SMEM and drive the input BlockSpec's
+                   index_map, so each output row's DMA fetches exactly
+                   one table row);
+  * `ref.py`     — the jnp oracle (`jnp.take`), the bitwise contract;
+  * `ops.py`     — the public wrapper: pytree-aware single-device path
+                   (kernel on TPU, ref elsewhere) plus the cross-shard
+                   masked-gather + psum path for client-axis-sharded
+                   stacks (DESIGN.md §16).
+"""
+from repro.kernels.cohort_gather.ops import cohort_gather, cohort_take
+
+__all__ = ["cohort_gather", "cohort_take"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the cohort_gather kernel.
+
+A gather copies bits — no arithmetic, no accumulation order — so the
+kernel, this reference, and the engines' historical `jnp.take` are all
+bitwise-identical by construction.  That is the contract that lets the
+sharded engines route their cohort gathers through `ops.cohort_take`
+without perturbing the dense parity oracles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cohort_gather_ref(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """table (N, D) x ids (M,) -> (M, D): `out[i] = table[ids[i]]`."""
+    return jnp.take(table, ids, axis=0)

@@ -50,6 +50,31 @@ def compiled_flops(jitted, *args, **kwargs) -> float:
         return float("nan")
 
 
+def compiled_memory_stats(jitted, *args, **kwargs):
+    """Best-effort compiled peak-memory probe, mirroring `compiled_flops`:
+    the XLA `memory_analysis()` of `jitted` for these args as a dict of
+    byte counts (with a derived `peak_bytes` = temp + argument + output −
+    aliased), or None when the backend/version exposes no analysis (some
+    CPU builds).  Costs a fresh lower+compile — callers gate it behind an
+    explicit stats flag, like the flops probe."""
+    try:
+        mem = jitted.lower(*args, **kwargs).compile().memory_analysis()
+        sizes = {}
+        for name in ("temp", "argument", "output", "alias",
+                     "generated_code"):
+            v = getattr(mem, f"{name}_size_in_bytes", None)
+            if v is not None:
+                sizes[f"{name}_bytes"] = int(v)
+        if not sizes:
+            return None
+        peak = (sizes.get("temp_bytes", 0) + sizes.get("argument_bytes", 0)
+                + sizes.get("output_bytes", 0) - sizes.get("alias_bytes", 0))
+        sizes["peak_bytes"] = max(int(peak), 0)
+        return sizes
+    except Exception:
+        return None
+
+
 def named_shardings(mesh, specs: PyTree) -> PyTree:
     """Normalise a pytree of PartitionSpec / None / Sharding leaves into
     `NamedSharding`s on `mesh` (None -> fully replicated).

@@ -6,6 +6,14 @@ never touches jax device state — smoke tests must keep seeing 1 CPU device.
 Production target: TPU v5e, 256 chips/pod.
   single-pod: (data=16, model=16)
   multi-pod:  (pod=2, data=16, model=16) = 512 chips
+
+The federated engines use their own run meshes (DESIGN.md §12, §16):
+  * `make_replica_mesh`  — 1-D ("replicas",): grid cells sharded whole,
+    no collectives;
+  * `make_run_mesh`      — 2-D ("replicas", "clients"): additionally
+    shards ALL per-client state over `CLIENT_AXIS`, making per-device
+    client memory O(N / clients_shards); the sparse cohort gather and
+    the selector-state all-gather are the only cross-client collectives.
 """
 from __future__ import annotations
 
@@ -37,6 +45,12 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
 
 
 REPLICA_AXIS = "replicas"
+# Second grid-runner axis (DESIGN.md §16): per-client state — padded data
+# stacks, n_valid, sigma, straggler tables, selector-state vectors — is
+# sharded over it, so per-device client memory is O(N / clients_shards).
+# Replicas stay embarrassingly parallel; only the cohort gather and the
+# selector-state all-gather communicate over "clients".
+CLIENT_AXIS = "clients"
 
 
 def make_replica_mesh(n_replicas: int, *, max_devices=None):
@@ -53,6 +67,34 @@ def make_replica_mesh(n_replicas: int, *, max_devices=None):
     if n <= 1:
         return None
     return jax.sharding.Mesh(np.asarray(devices[:n]), (REPLICA_AXIS,))
+
+
+def make_run_mesh(n_replicas: int, clients_shards: int = 1, *,
+                  max_devices=None):
+    """Mesh for a (possibly replicated) scan run: 2-D (replicas, clients).
+
+    `clients_shards` is the exact size of the client axis (the per-device
+    client-state divisor the caller asked for); the replica axis then
+    takes the largest divisor of `n_replicas` that fits the remaining
+    devices, mirroring `make_replica_mesh` (whole replicas per device, no
+    replica collectives).  With `clients_shards <= 1` this IS
+    `make_replica_mesh` — the 1-D path, or None for the plain vmap.
+    """
+    if clients_shards <= 1:
+        return make_replica_mesh(n_replicas, max_devices=max_devices)
+    devices = jax.devices()
+    limit = min(len(devices), max_devices or len(devices))
+    if clients_shards > limit:
+        raise ValueError(
+            f"clients_shards={clients_shards} needs that many devices but "
+            f"only {limit} are available (force more with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    r_limit = min(limit // clients_shards, n_replicas)
+    r = max((d for d in range(1, r_limit + 1) if n_replicas % d == 0),
+            default=1)
+    grid = np.asarray(devices[: r * clients_shards]).reshape(
+        r, clients_shards)
+    return jax.sharding.Mesh(grid, (REPLICA_AXIS, CLIENT_AXIS))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

@@ -1,0 +1,148 @@
+"""Client-axis sharding (DESIGN.md §16): sharded vs dense bit-identity.
+
+These run in SUBPROCESSES with XLA_FLAGS=--xla_force_host_platform_device_count=8
+because the main pytest process must keep seeing exactly 1 CPU device (the
+smoke tests and benches depend on it, and jax locks the device count at
+first init).
+
+The contract under test: with `clients_shards > 1` the per-client state
+(padded data stacks, n_valid, sigma, straggler tables, selector vectors)
+lives sharded over the "clients" mesh axis, selection runs on the gathered
+global view, and every observable output — selections, params, eval curve,
+final Shapley values — is BITWISE identical to the dense single-device run
+at equal config.  Gathers copy bits (cross-shard floats go through the
+bitcast-uint psum), so the comparisons below are exact, not approximate.
+"""
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+
+
+_COMPARE = """
+def flat(params):
+    import jax, numpy as np
+    return np.concatenate([np.asarray(x).ravel()
+                           for x in jax.tree.leaves(params)])
+
+def check_same(a, b, label):
+    import numpy as np
+    assert len(a.selections) == len(b.selections), label
+    for ra, rb in zip(a.selections, b.selections):
+        assert (np.asarray(ra) == np.asarray(rb)).all(), (label, "selections")
+    assert (flat(a.params) == flat(b.params)).all(), (label, "params")
+    assert a.test_acc == b.test_acc, (label, "eval curve")
+    assert a.val_loss == b.val_loss, (label, "val curve")
+    assert (np.asarray(a.sv_final) == np.asarray(b.sv_final)).all(), label
+    assert (a.selection_counts == b.selection_counts).all(), label
+"""
+
+
+def test_solo_scan_sharded_matches_dense_bitwise():
+    """run_federated with clients_shards in {1, 2, 8} x 2 seeds equals the
+    dense scan run bitwise — N=13 is not a multiple of 2 or 8, so the
+    zero-padding + slice-back path is exercised too."""
+    code = _COMPARE + """
+import dataclasses
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_federated
+
+base = FLConfig(n_clients=13, m=4, rounds=8, selector="greedyfed",
+                engine="scan", eval_every=4, n_train=400, n_val=60,
+                n_test=60, straggler_frac=0.3, privacy_sigma=0.05,
+                client=ClientConfig(epochs=1, batch_size=8, lr=0.05))
+for seed in (0, 1):
+    cfg = dataclasses.replace(base, seed=seed)
+    dense = run_federated(cfg)
+    for shards in (1, 2, 8):
+        sh = run_federated(dataclasses.replace(cfg, clients_shards=shards))
+        check_same(dense, sh, ("seed", seed, "shards", shards))
+        print("OK", seed, shards)
+print("SOLO_SHARDED_BITWISE")
+"""
+    p = _run(code)
+    assert "SOLO_SHARDED_BITWISE" in p.stdout, p.stdout + p.stderr
+
+
+def test_grid_sharded_matches_dense_and_resumes_bitwise():
+    """Segmented grid with a 1x2 (replica x clients) mesh: every cell
+    bitwise-equal to the dense grid, including after a kill (max_segments=1)
+    and checkpoint resume."""
+    code = _COMPARE + """
+import dataclasses, tempfile
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig
+from repro.grid.runner import run_grid
+from repro.grid.spec import GridSpec
+
+base = FLConfig(n_clients=13, m=4, rounds=8, selector="greedyfed",
+                engine="scan", eval_every=4, n_train=400, n_val=60,
+                n_test=60, straggler_frac=0.3, privacy_sigma=0.05,
+                client=ClientConfig(epochs=1, batch_size=8, lr=0.05))
+mk = lambda shards: GridSpec.product(
+    dataclasses.replace(base, clients_shards=shards),
+    selectors=["greedyfed", "power_of_choice"], seeds=[0, 1])
+
+dense = run_grid(mk(1), rounds_per_segment=4, shard=False)
+sharded = run_grid(mk(2), rounds_per_segment=4)
+for cell, a, b in zip(dense.spec.cells, dense.results, sharded.results):
+    check_same(a, b, (cell.selector, cell.seed))
+    print("OK", cell.selector, cell.seed)
+print("GRID_SHARDED_BITWISE")
+
+with tempfile.TemporaryDirectory() as ckpt:
+    partial = run_grid(mk(2), rounds_per_segment=4, checkpoint_dir=ckpt,
+                       max_segments=1)
+    assert partial is None
+    resumed = run_grid(mk(2), rounds_per_segment=4, checkpoint_dir=ckpt)
+    for cell, a, b in zip(dense.spec.cells, dense.results, resumed.results):
+        check_same(a, b, ("resume", cell.selector, cell.seed))
+    # the checkpointed prefix really was restored, not recomputed
+    assert resumed.dispatches < sharded.dispatches
+print("GRID_RESUME_BITWISE")
+"""
+    p = _run(code)
+    assert "GRID_SHARDED_BITWISE" in p.stdout, p.stdout + p.stderr
+    assert "GRID_RESUME_BITWISE" in p.stdout, p.stdout + p.stderr
+
+
+def test_cross_shard_cohort_take_bitwise():
+    """cohort_take under shard_map over the clients axis copies bits:
+    -0.0 and NaN payloads survive the bitcast-uint psum path; integer
+    tables take the zero-and-psum path."""
+    code = """
+from functools import partial
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.kernels.cohort_gather import cohort_take
+
+mesh = Mesh(np.asarray(jax.devices()), ("clients",))
+n, d = 16, 33
+table = np.random.default_rng(0).standard_normal((n, d)).astype(np.float32)
+table[0, 0] = -0.0
+table[1, 1] = np.nan
+table[15, 2] = np.float32(np.inf)
+ids = np.asarray([0, 1, 7, 15, 1], np.int32)
+take = shard_map(partial(cohort_take, axis_name="clients"), mesh=mesh,
+                 in_specs=(P("clients"), P()), out_specs=P(),
+                 check_rep=False)
+got = np.asarray(take(jnp.asarray(table), jnp.asarray(ids)))
+assert (got.view(np.uint32) == table[ids].view(np.uint32)).all()
+
+ints = (np.arange(n, dtype=np.int32) * 3 - 7)
+got_i = np.asarray(take(jnp.asarray(ints), jnp.asarray(ids)))
+assert (got_i == ints[ids]).all()
+print("CROSS_SHARD_TAKE_BITWISE")
+"""
+    p = _run(code)
+    assert "CROSS_SHARD_TAKE_BITWISE" in p.stdout, p.stdout + p.stderr
