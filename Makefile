@@ -1,4 +1,4 @@
-.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke bench-shapley telemetry-smoke client-scale-smoke bench-comm
+.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke bench-shapley telemetry-smoke client-scale-smoke bench-comm profile-smoke bench-check seed-baselines
 
 check:
 	./scripts/check.sh
@@ -53,6 +53,26 @@ client-scale-smoke:
 # bytes for selection/compression combinations; refreshes BENCH_comm.json
 bench-comm:
 	PYTHONPATH=src python -m benchmarks.comm_efficiency --json BENCH_comm.json
+
+# §17 profile smoke: tiny telemetry-on scan + grid runs with the profiler
+# capture window open; asserts every compile event carries a populated
+# cost card and the profile event recovers per-stage walls.  Opt into the
+# check gate with CHECK_PROFILE=1 ./scripts/check.sh
+profile-smoke:
+	PYTHONPATH=src python -m benchmarks.profile_smoke
+
+# §17 bench-regression gate: diff the repo-root BENCH_*.json against the
+# committed baselines in benchmarks/baselines/ (tolerance bands per
+# metric) and append one entry to the BENCH_trajectory.json ledger; exits
+# nonzero on regression.  Opt into the check gate with
+# CHECK_BENCH_TREND=1 ./scripts/check.sh
+bench-check:
+	PYTHONPATH=src python -m repro.telemetry.regress
+
+# re-seed benchmarks/baselines/ from the current BENCH_*.json (after an
+# intentional perf change or bench-schema bump, commit the new baselines)
+seed-baselines:
+	PYTHONPATH=src python -m repro.telemetry.regress --seed
 
 # grid-runner smoke: a 2-partition, 2-segment, 4-replica grid sharded over
 # the forced-host 8-device debug mesh; refreshes BENCH_grid.json (per-

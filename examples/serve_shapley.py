@@ -11,8 +11,12 @@ across the requests (clients == requests, utility == batch objective).
 
 `--events` streams the run through repro.telemetry (kind="serve"):
 run_start with provenance, a compile event (jit trace+lower+compile split
-via jax.monitoring), a `serve_step` per decode step, the per-request SV as
-a final `round_metrics`, run_end — then prints the report-table summary.
+via jax.monitoring) carrying the decode step's cost card (§17), a
+`serve_step` per decode step, the per-request SV as a final
+`round_metrics`, run_end — then prints the report-table summary.
+`--trace-dir` additionally opens a profiler capture window around the
+decode loop (requires --events; the `profile` event records per-stage
+wall seconds recovered from the trace).
 """
 import argparse
 import dataclasses
@@ -33,11 +37,14 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--events", default=None,
                     help="telemetry JSONL path (default: off)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="profiler capture dir (needs --events)")
     args = ap.parse_args(argv)
 
     from repro.telemetry import CompileTimer, Telemetry, provenance, stage
 
-    tel = Telemetry(path=args.events) if args.events else None
+    tel = (Telemetry(path=args.events, trace_dir=args.trace_dir)
+           if args.events else None)
     ctimer = CompileTimer()
 
     cfg = get_config("h2o_danube_3_4b").reduced(n_layers=4, d_model=256)
@@ -67,7 +74,8 @@ def main(argv=None) -> None:
     logprob_sum = jnp.zeros((b,))
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     t0 = time.perf_counter()
-    with ctimer:
+    from repro.telemetry import trace_capture
+    with ctimer, trace_capture(tel, label="serve"):
         for i in range(gen_len):
             out.append(tok)
             with stage("eval"):
@@ -78,6 +86,7 @@ def main(argv=None) -> None:
             if tel is not None:
                 tel.emit("serve_step", step=i,
                          tokens=int(b * (i + 1)))
+        jax.block_until_ready(logprob_sum)
     dt = time.perf_counter() - t0
     print(f"# decoded {gen_len} steps x {b} seqs in {dt:.1f}s "
           f"({b*gen_len/dt:.1f} tok/s on CPU)")
@@ -99,9 +108,13 @@ def main(argv=None) -> None:
           f"{np.round(np.asarray(sv), 3).tolist()}")
 
     if tel is not None:
+        from repro.telemetry import cached_cost_card
         wall = time.perf_counter() - t_run
+        # the decode step dominates the serving loop; its cost card
+        # (AOT probe on avals — safe after dispatch) rides the event
         tel.emit("compile", seconds=ctimer.seconds,
-                 program="prefill+decode+shapley")
+                 program="prefill+decode+shapley",
+                 cost_card=cached_cost_card(decode, cache, tok))
         # the per-request attribution, in the stream's round vocabulary:
         # one "round", every request selected, exact SV = 2^b evaluations
         tel.emit("round_metrics", round=0, selections=list(range(b)),

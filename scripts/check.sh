@@ -13,6 +13,11 @@
 #   CHECK_CLIENT_SCALE=1 scripts/check.sh  additionally runs the client-
 #   axis sharding smoke (dense vs sharded per-device bytes, DESIGN.md §16)
 #   and refreshes BENCH_clients.json.
+#   CHECK_PROFILE=1 scripts/check.sh  additionally runs the §17 profile
+#   smoke (cost cards on every compile event + capture-window stage walls).
+#   CHECK_BENCH_TREND=1 scripts/check.sh  additionally diffs the current
+#   BENCH_*.json against benchmarks/baselines/ and fails on regression
+#   (appends to the BENCH_trajectory.json ledger either way).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -59,4 +64,16 @@ if [[ "${CHECK_TELEMETRY:-0}" == "1" ]]; then
   echo
   echo "== telemetry overhead smoke (BENCH_telemetry.json) =="
   make telemetry-smoke
+fi
+
+if [[ "${CHECK_PROFILE:-0}" == "1" ]]; then
+  echo
+  echo "== profile smoke (cost cards + capture window) =="
+  make profile-smoke
+fi
+
+if [[ "${CHECK_BENCH_TREND:-0}" == "1" ]]; then
+  echo
+  echo "== bench regression gate (BENCH_* vs benchmarks/baselines) =="
+  make bench-check
 fi

@@ -220,6 +220,7 @@ def _run_scan_sharded(cfg, s, spec, t_start, *, telemetry, ctimer):
     Bit-identical to the dense scan at equal config (DESIGN.md §16)."""
     from repro.grid.segments import run_segments
     from repro.grid.shard import make_run_mesh, unpad_scan_output
+    from repro.telemetry.profile import trace_capture
 
     spec_sel = s.sel_spec
     # deterministic rebuild of the mesh setup_run sharded the data on
@@ -227,8 +228,9 @@ def _run_scan_sharded(cfg, s, spec, t_start, *, telemetry, ctimer):
     mesh = make_run_mesh(1, cfg.clients_shards)
     with ctimer:
         batch = _sharded_scan_batch(cfg, s, mesh)
-    out_b, report = run_segments(s.model, cfg.client, spec, batch,
-                                 mesh=mesh, telemetry=telemetry)
+    with trace_capture(telemetry, label="run_scan_client_sharded"):
+        out_b, report = run_segments(s.model, cfg.client, spec, batch,
+                                     mesh=mesh, telemetry=telemetry)
     out_b = unpad_scan_output(out_b, cfg.n_clients)
     out = jax.tree.map(lambda x: x[0], out_b)
 
@@ -241,7 +243,8 @@ def _run_scan_sharded(cfg, s, spec, t_start, *, telemetry, ctimer):
     if telemetry is not None:
         from repro.telemetry.metrics import emit_scan_rounds, run_end_payload
         telemetry.emit("compile", seconds=res.compile_time_s,
-                       program="run_scan_client_sharded")
+                       program="run_scan_client_sharded",
+                       cost_card=report.cost_card)
         emit_scan_rounds(
             telemetry, out, uses_shapley=spec_sel.uses_shapley,
             codec_bytes=codec_nbytes(cfg.upload_codec, s.params),
@@ -274,10 +277,13 @@ def run_federated_scan(cfg, s, t_start: float, *, telemetry=None,
     `telemetry=None` is the zero-cost default: no extra dispatches, no
     in-trace callbacks, bit-identical outputs.  With a sink attached the
     stacked ScanRunOutput is unrolled into per-round events after the
-    dispatch (host-side, §15); `telemetry.live_tap` additionally selects
-    the tap-carrying executable and routes its in-scan callbacks.
+    dispatch (host-side, §15), and the compile event carries the scan
+    executable's cost card (§17); `telemetry.live_tap` additionally
+    selects the tap-carrying executable and routes its in-scan
+    callbacks, and `telemetry.trace_dir` wraps the dispatch in a
+    profiler capture window.
     """
-    from repro.telemetry.trace import CompileTimer, live_sink
+    from repro.telemetry.trace import CompileTimer, live_sink, stage
 
     spec_sel = s.sel_spec
     live = bool(telemetry is not None and telemetry.live_tap)
@@ -291,13 +297,18 @@ def run_federated_scan(cfg, s, t_start: float, *, telemetry=None,
                                  telemetry=telemetry, ctimer=ctimer)
     spec = make_scan_spec(cfg, (spec_sel,), live_tap=live)
 
-    with ctimer:
+    from repro.telemetry.profile import trace_capture
+
+    operands = scan_operands(cfg, s)
+    with ctimer, trace_capture(telemetry, label="run_scan") as capturing:
         run = jitted_run_scan(s.model, cfg.client, spec)
-        with live_sink(telemetry if live else None):
-            out = run(s.params, *scan_operands(cfg, s))
-            if live:
+        with live_sink(telemetry if live else None), stage("scan"):
+            out = run(s.params, *operands)
+            if live or capturing is not None:
                 # drain the in-scan debug callbacks before the sink
-                # detaches — taps must land inside the run's stream
+                # detaches — taps must land inside the run's stream —
+                # and keep capture-window spans covering execution, not
+                # just the dispatch enqueue
                 jax.block_until_ready(out.params)
 
     res = results_from_scan(cfg, s, out,
@@ -307,7 +318,9 @@ def run_federated_scan(cfg, s, t_start: float, *, telemetry=None,
                             compile_time_s=ctimer.seconds)
     if telemetry is not None:
         from repro.telemetry.metrics import emit_scan_rounds, run_end_payload
-        telemetry.emit("compile", seconds=ctimer.seconds, program="run_scan")
+        from repro.telemetry.profile import cached_cost_card
+        telemetry.emit("compile", seconds=ctimer.seconds, program="run_scan",
+                       cost_card=cached_cost_card(run, s.params, *operands))
         emit_scan_rounds(
             telemetry, out, uses_shapley=spec_sel.uses_shapley,
             codec_bytes=codec_nbytes(cfg.upload_codec, s.params),

@@ -186,85 +186,90 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
             rounds=spec.base.rounds, rounds_per_segment=rounds_per_segment,
             checkpoint_dir=checkpoint_dir, provenance=provenance())
 
+    from repro.telemetry.profile import trace_capture
+
     per_partition: list = []
     reports: list = []
     n_segments = 1
     compile_s = 0.0
     peaks: list = []   # per-partition compiled peak bytes (compile_stats)
-    for pi, part in enumerate(partitions):
-        t_part = time.perf_counter()
-        live = bool(telemetry is not None and telemetry.live_tap)
-        mesh = (make_run_mesh(len(part.cell_indices),
-                              spec.base.clients_shards)
-                if shard else None)
-        client_sharded = (mesh is not None
-                          and CLIENT_AXIS in mesh.axis_names)
-        scan_spec = make_scan_spec(
-            cfgs[part.cell_indices[0]], part.specs, live_tap=live,
-            client_axis=CLIENT_AXIS if client_sharded else None)._replace(
-                rounds_per_segment=rounds_per_segment)
-        batch = _build_batch(part, cfgs, setups, sel_specs,
-                             spec.base.rounds)
-        if client_sharded:
-            batch = pad_batch_clients(batch, spec.base.clients_shards)
-        if telemetry is not None:
-            telemetry.heartbeat(
-                f"partition {pi + 1}/{len(partitions)} "
-                f"({part.key.label}, {len(part.cell_indices)} cells)",
-                force=True)
-        out, report = run_segments(
-            model, cfgs[part.cell_indices[0]].client, scan_spec, batch,
-            checkpoint_dir=checkpoint_dir, tag=f"p{pi}-", resume=resume,
-            max_segments=max_segments, mesh=mesh,
-            compile_stats=compile_stats, telemetry=telemetry)
-        compile_s += report.compile_time_s
-        peaks.append(report.peak_bytes)
-        if out is None:
+    cards: list = []   # per-partition step cost cards (telemetry.profile)
+    with trace_capture(telemetry, label="grid"):
+        for pi, part in enumerate(partitions):
+            t_part = time.perf_counter()
+            live = bool(telemetry is not None and telemetry.live_tap)
+            mesh = (make_run_mesh(len(part.cell_indices),
+                                  spec.base.clients_shards)
+                    if shard else None)
+            client_sharded = (mesh is not None
+                              and CLIENT_AXIS in mesh.axis_names)
+            scan_spec = make_scan_spec(
+                cfgs[part.cell_indices[0]], part.specs, live_tap=live,
+                client_axis=CLIENT_AXIS if client_sharded else None)._replace(
+                    rounds_per_segment=rounds_per_segment)
+            batch = _build_batch(part, cfgs, setups, sel_specs,
+                                 spec.base.rounds)
+            if client_sharded:
+                batch = pad_batch_clients(batch, spec.base.clients_shards)
             if telemetry is not None:
                 telemetry.heartbeat(
-                    f"partition {pi + 1}: stopped at max_segments="
-                    f"{max_segments} ({report.dispatches} dispatched); "
-                    "checkpoints are the resume point", force=True)
-            return None
-        if client_sharded:
-            out = unpad_scan_output(out, spec.base.n_clients)
-        n_segments = report.n_segments
-        # the partition's cells ran fused: they share ITS duration (not
-        # the grid's running total, which would bill later partitions
-        # for earlier ones' work)
-        wall = time.perf_counter() - t_part
-        results = []
-        evals_total = 0
-        for j, idx in enumerate(part.cell_indices):
-            out_j = jax.tree.map(lambda x: x[j], out)
-            res = results_from_scan(
-                cfgs[idx], setups[idx], out_j, wall_time_s=wall,
-                seed=cfgs[idx].seed, dispatches=report.n_segments,
-                uses_shapley=part.key.needs_sv,
-                compile_time_s=report.compile_time_s)
-            evals_total += res.shapley_evals
-            results.append(res)
-            if telemetry is not None:
-                from repro.engine.schedule import eval_mask as _emask
-                from repro.federated.compression import codec_nbytes
-                from repro.telemetry.metrics import emit_scan_rounds
-                emit_scan_rounds(
-                    telemetry, out_j, uses_shapley=part.key.needs_sv,
-                    codec_bytes=codec_nbytes(cfgs[idx].upload_codec,
-                                             setups[idx].params),
-                    model_bytes=setups[idx].model_bytes,
-                    emask=_emask(spec.base.rounds, cfgs[idx].eval_every),
-                    cell=idx)
-        per_partition.append(results)
-        reports.append(PartitionReport(
-            label=part.key.label, cell_indices=part.cell_indices,
-            needs_sv=part.key.needs_sv,
-            uses_local_losses=part.key.uses_local_losses,
-            n_strategies=len(part.specs), dispatches=report.dispatches,
-            shapley_evals=evals_total,
-            bytes_resident=report.bytes_resident,
-            flops_per_dispatch=report.flops_per_dispatch,
-            peak_bytes=report.peak_bytes))
+                    f"partition {pi + 1}/{len(partitions)} "
+                    f"({part.key.label}, {len(part.cell_indices)} cells)",
+                    force=True)
+            out, report = run_segments(
+                model, cfgs[part.cell_indices[0]].client, scan_spec, batch,
+                checkpoint_dir=checkpoint_dir, tag=f"p{pi}-", resume=resume,
+                max_segments=max_segments, mesh=mesh,
+                compile_stats=compile_stats, telemetry=telemetry)
+            compile_s += report.compile_time_s
+            peaks.append(report.peak_bytes)
+            cards.append(report.cost_card)
+            if out is None:
+                if telemetry is not None:
+                    telemetry.heartbeat(
+                        f"partition {pi + 1}: stopped at max_segments="
+                        f"{max_segments} ({report.dispatches} dispatched); "
+                        "checkpoints are the resume point", force=True)
+                return None
+            if client_sharded:
+                out = unpad_scan_output(out, spec.base.n_clients)
+            n_segments = report.n_segments
+            # the partition's cells ran fused: they share ITS duration (not
+            # the grid's running total, which would bill later partitions
+            # for earlier ones' work)
+            wall = time.perf_counter() - t_part
+            results = []
+            evals_total = 0
+            for j, idx in enumerate(part.cell_indices):
+                out_j = jax.tree.map(lambda x: x[j], out)
+                res = results_from_scan(
+                    cfgs[idx], setups[idx], out_j, wall_time_s=wall,
+                    seed=cfgs[idx].seed, dispatches=report.n_segments,
+                    uses_shapley=part.key.needs_sv,
+                    compile_time_s=report.compile_time_s)
+                evals_total += res.shapley_evals
+                results.append(res)
+                if telemetry is not None:
+                    from repro.engine.schedule import eval_mask as _emask
+                    from repro.federated.compression import codec_nbytes
+                    from repro.telemetry.metrics import emit_scan_rounds
+                    emit_scan_rounds(
+                        telemetry, out_j, uses_shapley=part.key.needs_sv,
+                        codec_bytes=codec_nbytes(cfgs[idx].upload_codec,
+                                                 setups[idx].params),
+                        model_bytes=setups[idx].model_bytes,
+                        emask=_emask(spec.base.rounds, cfgs[idx].eval_every),
+                        cell=idx)
+            per_partition.append(results)
+            reports.append(PartitionReport(
+                label=part.key.label, cell_indices=part.cell_indices,
+                needs_sv=part.key.needs_sv,
+                uses_local_losses=part.key.uses_local_losses,
+                n_strategies=len(part.specs), dispatches=report.dispatches,
+                shapley_evals=evals_total,
+                bytes_resident=report.bytes_resident,
+                flops_per_dispatch=report.flops_per_dispatch,
+                peak_bytes=report.peak_bytes))
 
     results = interleave(len(spec.cells), partitions, per_partition)
     wall = time.perf_counter() - t_start
@@ -275,6 +280,12 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
             # compiled peak (per device) of the largest partition's step
             mem_fields["peak_bytes"] = max(
                 p for p in peaks if p is not None)
+        live_cards = [c for c in cards if c is not None]
+        if live_cards:
+            # the grid-level cost card is the heaviest partition's — the
+            # executable whose peak bounds the run's memory footprint
+            mem_fields["cost_card"] = max(
+                live_cards, key=lambda c: c.get("peak_bytes") or 0)
         telemetry.emit("compile", seconds=compile_s,
                        program="grid_segments", **mem_fields)
         telemetry.emit("run_end", **run_end_payload(

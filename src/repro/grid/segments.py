@@ -33,7 +33,6 @@ from repro.checkpoint.ckpt import load_carry, save_carry
 from repro.engine.round_engine import (
     ScanRunOutput, ScanSpec, SegmentCarry, jitted_segment_step,
 )
-from repro.launch.compat import compiled_flops, compiled_memory_stats
 
 PyTree = Any
 
@@ -64,9 +63,13 @@ class SegmentRunReport(NamedTuple):
     flops_per_dispatch: float
     compile_time_s: float = 0.0  # jit trace+lower+compile in THIS call
     # XLA memory_analysis() peak of the compiled segment step (per device
-    # under sharding); None unless compile_stats asked for the probe or
-    # the backend has no analysis
+    # under sharding); None unless compile_stats/telemetry asked for the
+    # probe or the backend has no analysis
     peak_bytes: Optional[int] = None
+    # the full per-executable cost card (telemetry.profile) of the
+    # segment step — flops, bytes accessed, memory classes, roofline;
+    # populated under the same gate as peak_bytes
+    cost_card: Optional[dict] = None
 
 
 def segment_plan(rounds: int, rounds_per_segment: int) -> tuple[int, int]:
@@ -144,14 +147,20 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
     chain untouched) emits `segment_start`/`segment_end` events with the
     aggregate gauges of `metrics.segment_counters`, checkpoint events,
     and a throttled per-segment heartbeat with an ETA from the mean
-    dispatched-segment time.  Per-segment timing blocks on the segment's
-    outputs — observed segments are timed honestly instead of billing a
-    segment for its predecessors' async queue.
+    dispatched-segment time plus the compiled per-device peak bytes, so
+    a long grid surfaces memory pressure without opening the JSONL.
+    Per-segment timing blocks on the segment's outputs — observed
+    segments are timed honestly instead of billing a segment for its
+    predecessors' async queue.  With a sink attached the first
+    dispatched segment also emits a `compile` event carrying the step's
+    cost card (telemetry.profile — an AOT probe, cached per executable,
+    zero extra dispatches).
     """
     import time
 
     from repro.telemetry.metrics import segment_counters
-    from repro.telemetry.trace import CompileTimer, live_sink
+    from repro.telemetry.profile import cached_cost_card
+    from repro.telemetry.trace import CompileTimer, live_sink, stage
 
     k_rounds, n_segments = segment_plan(spec.rounds,
                                         spec.rounds_per_segment)
@@ -189,33 +198,42 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
 
     flops = float("nan")
     peak_bytes = None
+    card = None
     dispatched = 0
     seg_seconds: list[float] = []
     for seg in range(start, n_segments):
         if max_segments is not None and dispatched >= max_segments:
             return None, SegmentRunReport(
                 n_segments, dispatched, start, batch_bytes(batch), flops,
-                ctimer.seconds, peak_bytes)
+                ctimer.seconds, peak_bytes, card)
         t0 = jnp.asarray(seg * k_rounds, jnp.int32)
         sl = slice(seg * k_rounds, (seg + 1) * k_rounds)
         args = (carry, t0, eval_any[sl], *operands,
                 batch.epochs_tables[:, sl], batch.d_scheds[:, sl],
                 batch.eval_masks[:, sl], batch.strategy_ids)
-        if compile_stats and seg == start:
-            flops = compiled_flops(step, *args)
-            mem = compiled_memory_stats(step, *args)
-            peak_bytes = mem["peak_bytes"] if mem else None
         if telemetry is not None:
             t_seg = time.perf_counter()
             telemetry.emit("segment_start", segment=seg,
                            t0=seg * k_rounds, rounds=k_rounds, tag=tag,
                            replicas=n_replicas)
-        with ctimer, live_sink(telemetry if live else None):
+        with ctimer, live_sink(telemetry if live else None), \
+                stage("segment"):
             out = step(*args)
             if telemetry is not None:
                 # taps must land (and the segment be timed) before the
                 # next dispatch is enqueued
                 jax.block_until_ready(out.carry.params)
+        if (compile_stats or telemetry is not None) and seg == start:
+            # the step's cost card (one cached AOT probe, §17): flops,
+            # bytes, per-device peak memory, roofline terms
+            card = cached_cost_card(step, *args)
+            if card is not None:
+                flops = card.get("flops", float("nan"))
+                peak_bytes = card.get("peak_bytes")
+            if telemetry is not None:
+                telemetry.emit("compile", seconds=ctimer.seconds,
+                               program=f"segment_step:{tag or 'solo'}",
+                               cost_card=card)
         carry = out.carry
         dispatched += 1
         if telemetry is not None:
@@ -225,10 +243,12 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
                            **segment_counters(out, secs))
             mean_s = sum(seg_seconds) / len(seg_seconds)
             eta_s = mean_s * (n_segments - seg - 1)
+            peak_txt = ("" if peak_bytes is None
+                        else f" peak {peak_bytes / 1e6:.0f}MB/dev")
             telemetry.heartbeat(
                 f"{tag or 'seg'} {seg + 1}/{n_segments} "
                 f"({k_rounds} rounds x {n_replicas} replicas, "
-                f"{secs:.2f}s) eta {eta_s:.0f}s")
+                f"{secs:.2f}s) eta {eta_s:.0f}s{peak_txt}")
         if checkpoint_dir:
             save_carry(_seg_path(checkpoint_dir, tag, seg),
                        {"carry": out.carry, "out": _to_out_dict(out)},
@@ -246,5 +266,5 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
         eval_count=carry.eval_slot)
     report = SegmentRunReport(n_segments, dispatched, start,
                               batch_bytes(batch), flops, ctimer.seconds,
-                              peak_bytes)
+                              peak_bytes, card)
     return result, report

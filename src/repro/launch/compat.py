@@ -35,30 +35,34 @@ def set_mesh(mesh):
     return mesh
 
 
-def compiled_flops(jitted, *args, **kwargs) -> float:
-    """Best-effort compiled-cost probe: the flops `jitted` would execute
-    for these args, NaN when unavailable.  Lives here because the AOT
-    cost-analysis API varies across jax versions/backends (list-of-dicts
-    on some, missing keys on others); `grid/segments.py` and the benches
-    share this one implementation."""
+def cost_analysis_of(compiled) -> dict:
+    """Normalised `cost_analysis()` of an AOT-compiled executable: a dict
+    with whatever of `flops` / `bytes_accessed` the backend reports (keys
+    absent when unavailable).  The raw API varies across jax versions/
+    backends (list-of-dicts on some, missing keys on others); everything
+    reading compiled costs goes through here."""
+    out: dict = {}
     try:
-        cost = jitted.lower(*args, **kwargs).compile().cost_analysis()
+        cost = compiled.cost_analysis()
         if isinstance(cost, (list, tuple)):
             cost = cost[0]
-        return float(cost.get("flops", float("nan")))
+        for key, name in (("flops", "flops"),
+                          ("bytes accessed", "bytes_accessed")):
+            v = cost.get(key)
+            if v is not None and v == v:
+                out[name] = float(v)
     except Exception:
-        return float("nan")
+        pass
+    return out
 
 
-def compiled_memory_stats(jitted, *args, **kwargs):
-    """Best-effort compiled peak-memory probe, mirroring `compiled_flops`:
-    the XLA `memory_analysis()` of `jitted` for these args as a dict of
-    byte counts (with a derived `peak_bytes` = temp + argument + output −
-    aliased), or None when the backend/version exposes no analysis (some
-    CPU builds).  Costs a fresh lower+compile — callers gate it behind an
-    explicit stats flag, like the flops probe."""
+def memory_stats_of(compiled):
+    """Normalised `memory_analysis()` of an AOT-compiled executable: byte
+    counts plus a derived `peak_bytes` = temp + argument + output −
+    aliased, or None when the backend/version exposes no analysis (some
+    CPU builds)."""
     try:
-        mem = jitted.lower(*args, **kwargs).compile().memory_analysis()
+        mem = compiled.memory_analysis()
         sizes = {}
         for name in ("temp", "argument", "output", "alias",
                      "generated_code"):
@@ -73,6 +77,48 @@ def compiled_memory_stats(jitted, *args, **kwargs):
         return sizes
     except Exception:
         return None
+
+
+def aot_compile(jitted, *args, **kwargs):
+    """`jitted.lower(*args).compile()`, None on failure.  Array arguments
+    are reduced to their avals first, so the probe works on donated/
+    deleted buffers and never touches data."""
+    import jax as _jax
+
+    def aval(a):
+        if hasattr(a, "shape") and hasattr(a, "dtype"):
+            return _jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                         sharding=getattr(a, "sharding",
+                                                          None))
+        return a
+
+    try:
+        args = _jax.tree.map(aval, args)
+        kwargs = _jax.tree.map(aval, kwargs)
+        return jitted.lower(*args, **kwargs).compile()
+    except Exception:
+        return None
+
+
+def compiled_flops(jitted, *args, **kwargs) -> float:
+    """Best-effort compiled-cost probe: the flops `jitted` would execute
+    for these args, NaN when unavailable.  Costs a fresh lower+compile —
+    callers gate it behind an explicit stats flag (or use the cached
+    cost cards in repro.telemetry.profile)."""
+    compiled = aot_compile(jitted, *args, **kwargs)
+    if compiled is None:
+        return float("nan")
+    return cost_analysis_of(compiled).get("flops", float("nan"))
+
+
+def compiled_memory_stats(jitted, *args, **kwargs):
+    """Best-effort compiled peak-memory probe, mirroring `compiled_flops`:
+    the XLA `memory_analysis()` byte counts (with derived `peak_bytes`),
+    or None when unavailable.  Fresh lower+compile, like the flops probe."""
+    compiled = aot_compile(jitted, *args, **kwargs)
+    if compiled is None:
+        return None
+    return memory_stats_of(compiled)
 
 
 def named_shardings(mesh, specs: PyTree) -> PyTree:

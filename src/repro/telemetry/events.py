@@ -43,9 +43,13 @@ SCHEMA_VERSION = 1
 ENVELOPE_FIELDS = ("v", "seq", "t_s", "event")
 
 # event type -> payload fields that MUST be present (beyond the envelope)
+# `compile` events may additionally carry a `cost_card` (profile.py): the
+# per-executable flops/bytes/peak-memory/roofline block; `profile` events
+# close a jax.profiler capture window (trace dir + per-stage wall).
 REQUIRED_FIELDS: dict[str, tuple] = {
     "run_start": ("run_id", "kind"),
     "compile": ("seconds",),
+    "profile": ("trace_dir",),
     "segment_start": ("segment", "t0"),
     "segment_end": ("segment", "seconds"),
     "round_metrics": ("round", "selections", "epochs", "utility_evals",
@@ -99,15 +103,22 @@ class Telemetry:
       `jax.debug.callback` stream (`round_tap` events).  Trace-affecting
       but bit-neutral: it recompiles the scan with callbacks attached and
       must not change any output (pinned by tests/test_telemetry.py).
+    * `trace_dir` opts the engines into a programmatic
+      `jax.profiler.start_trace`/`stop_trace` capture window around the
+      run's dispatches (profile.trace_capture): artifacts land in a
+      run_id-stamped subdirectory and a `profile` event reports the
+      per-stage wall recovered from the §15 span annotations.
     * `heartbeat_every_s` throttles progress lines (0 = every call);
       lines go to `stream` (default stderr), never into the event file.
     """
 
     def __init__(self, path: Optional[str] = None, *,
                  live_tap: bool = False, heartbeat_every_s: float = 0.0,
-                 stream: Optional[IO] = None, run_id: Optional[str] = None):
+                 stream: Optional[IO] = None, run_id: Optional[str] = None,
+                 trace_dir: Optional[str] = None):
         self.path = path
         self.live_tap = bool(live_tap)
+        self.trace_dir = trace_dir
         self.run_id = run_id or f"run-{uuid.uuid4().hex[:8]}"
         self.events: list[dict] = []
         self.heartbeat_every_s = float(heartbeat_every_s)
@@ -174,6 +185,32 @@ def read_events(path: str) -> list[dict]:
     return events
 
 
+def read_events_prefix(path: str) -> tuple[list[dict], Optional[dict]]:
+    """Parse a JSONL event file tolerating a truncated/corrupt tail.
+
+    A killed run's append+flush stream leaves a readable prefix whose
+    last line may be cut mid-record; this returns `(events, cut)` where
+    `events` is the parseable prefix and `cut` is None for a clean file
+    or `{"line", "reason", "raw"}` describing the first bad line — the
+    cut is REPORTED, never silently swallowed, and everything after it
+    is ignored (a flushed-JSONL stream cannot have valid records after
+    a corrupt one unless the file was externally edited).
+    """
+    events: list[dict] = []
+    cut = None
+    with open(path) as f:
+        for i, line in enumerate(f):
+            stripped = line.strip()
+            if not stripped:
+                continue
+            try:
+                events.append(json.loads(stripped))
+            except ValueError as e:
+                cut = {"line": i, "reason": str(e), "raw": stripped[:120]}
+                break
+    return events, cut
+
+
 def validate_events(events) -> int:
     """Pure-python schema check over an event stream; returns the count.
 
@@ -183,9 +220,14 @@ def validate_events(events) -> int:
     the ordered streams (`round_metrics`, `eval`).  Runs are delimited by
     `run_start` events, so one file may hold many runs (e.g. a killed
     grid resumed into the same path).
+
+    Merged multi-process streams (telemetry.merge) annotate every event
+    with its source `shard` and renumber `seq` globally; ordering scopes
+    (the seq chain aside) are then tracked per shard, so interleaved
+    per-process round streams validate without false positives.
     """
     prev_seq = None
-    run_ordinal = -1
+    run_ordinals: dict = {}
     last_round: dict[tuple, int] = {}
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
@@ -210,10 +252,12 @@ def validate_events(events) -> int:
             raise TelemetryError(
                 f"event {i} breaks the seq chain: {prev_seq} -> {seq}")
         prev_seq = seq
+        shard = ev.get("shard")
         if kind == "run_start":
-            run_ordinal += 1
+            run_ordinals[shard] = run_ordinals.get(shard, -1) + 1
         if kind in _ORDERED_ROUND_EVENTS:
-            scope = (run_ordinal, kind, ev.get("cell"))
+            scope = (shard, run_ordinals.get(shard, -1), kind,
+                     ev.get("cell"))
             rnd = ev["round"]
             if not isinstance(rnd, int):
                 raise TelemetryError(

@@ -1,0 +1,303 @@
+"""Bench-regression tier: diff BENCH_*.json against committed baselines.
+
+    PYTHONPATH=src python -m repro.telemetry.regress [--bench-dir .]
+        [--baselines benchmarks/baselines] [--trajectory BENCH_trajectory.json]
+
+Every benchmark artifact in the repo root is provenance-stamped
+(events.write_bench_json) but nothing *watched* them — a PR could double
+the hot path's latency and the six BENCH files would silently record it.
+This module is the watcher:
+
+  * `WATCHED` names, per bench schema, the metrics that constitute the
+    perf contract — dotted paths (list indices allowed), a direction,
+    and a tolerance band.  Relative bands absorb CPU-box timing noise
+    (latencies get wide bands, compiled flops/bytes get tight ones,
+    counters get zero); absolute bands serve near-zero metrics like the
+    telemetry overhead percentage where a ratio is meaningless.
+  * `compare_bench` evaluates one current-vs-baseline pair; `run_check`
+    sweeps every BENCH_*.json with a registered schema, appends one
+    provenance-stamped entry to the `BENCH_trajectory.json` ledger
+    (pass or fail — the trajectory records history, it is not a trophy
+    case), and reports regressions.
+  * the CLI exits nonzero on any regression, so `CHECK_BENCH_TREND=1
+    scripts/check.sh` (`make bench-check`) turns the passive artifacts
+    into a gate.  `--seed` copies the current artifacts into the
+    baseline directory (how `benchmarks/baselines/` was first populated).
+
+Baselines live in git (`benchmarks/baselines/`), so the diff is always
+against what the last accepted PR shipped, not against a moving box.
+A schema-tag mismatch between current and baseline marks the pair
+`incomparable` (skipped, reported) — re-seed after an intentional
+format change.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import NamedTuple, Optional
+
+from repro.telemetry.events import provenance
+
+TRAJECTORY_SCHEMA = "bench_trajectory/v1"
+
+
+class Metric(NamedTuple):
+    """One watched metric: where it lives and how far it may drift."""
+    path: str                    # dotted path, list indices as [i]
+    direction: str               # "lower" | "higher" (which way is better)
+    rel_tol: Optional[float] = None   # band as a fraction of baseline
+    abs_tol: Optional[float] = None   # band in the metric's own units
+
+
+# the perf contract per bench schema.  Latency bands are wide (CPU smoke
+# timings breathe ~tens of percent between boxes); compiled-cost and
+# byte-accounting bands are tight (deterministic); dispatch counts are
+# exact — a dispatch-count regression is a structural bug, not noise.
+WATCHED: dict[str, tuple] = {
+    "bench_selection/v1": (
+        Metric("e2e_greedyfed.scan.us_per_round", "lower", rel_tol=0.75),
+        Metric("e2e_greedyfed.batched.us_per_round", "lower", rel_tol=0.75),
+        Metric("e2e_greedyfed.scan.dispatches_total", "lower", rel_tol=0.0),
+        Metric("e2e_greedyfed.batched.dispatches_per_round", "lower",
+               rel_tol=0.0),
+        Metric("speedup.scan_vs_loop_e2e", "higher", rel_tol=0.5),
+    ),
+    "bench_shapley/v1": (
+        Metric("latency_us.streaming", "lower", rel_tol=0.75),
+        Metric("compiled_flops.streaming_e2e", "lower", rel_tol=0.10),
+        Metric("compiled_flops.construction_reduction", "higher",
+               rel_tol=0.10),
+        Metric("peak_model_bytes_estimate.streaming_auto_off_tpu", "lower",
+               rel_tol=0.10),
+        Metric("speedup_streaming_vs_dense", "higher", rel_tol=0.5),
+    ),
+    "bench_grid/v1": (
+        Metric("segment_latency_us", "lower", rel_tol=0.75),
+        Metric("bytes_resident_per_device", "lower", rel_tol=0.10),
+        Metric("partitions[0].dispatches", "lower", rel_tol=0.0),
+        Metric("sv_partition_skipped_in_plain.plain_partition_shapley_evals",
+               "lower", rel_tol=0.0),
+    ),
+    "bench_telemetry/v1": (
+        Metric("e2e_us.off", "lower", rel_tol=0.75),
+        # host-side overhead is ~0% by contract; a ratio band around it
+        # is meaningless, so the band is 3 percentage points absolute
+        Metric("overhead_pct.host", "lower", abs_tol=3.0),
+    ),
+    "bench_clients/v1": (
+        Metric("rows[0].sharded.per_device_state_bytes", "lower",
+               rel_tol=0.10),
+        Metric("rows[0].dense_over_sharded_per_device_bytes", "higher",
+               rel_tol=0.10),
+        Metric("memory_analysis.sharded.peak_bytes", "lower", rel_tol=0.25),
+    ),
+    "bench_comm/v1": (
+        Metric("settings[1].acc_per_upload_gb", "higher", rel_tol=0.30),
+        Metric("settings[0].acc_mean", "higher", abs_tol=0.10),
+    ),
+}
+
+_PATH_TOKEN = re.compile(r"([^.\[\]]+)|\[(\d+)\]")
+
+
+def lookup(obj, path: str):
+    """Resolve a dotted/indexed path; None when any hop is missing."""
+    cur = obj
+    for m in _PATH_TOKEN.finditer(path):
+        key, idx = m.group(1), m.group(2)
+        try:
+            cur = cur[key] if key is not None else cur[int(idx)]
+        except (KeyError, IndexError, TypeError):
+            return None
+    return cur
+
+
+def check_metric(metric: Metric, current, baseline) -> dict:
+    """Evaluate one metric pair into a trajectory record."""
+    cur = lookup(current, metric.path)
+    base = lookup(baseline, metric.path)
+    rec = {"path": metric.path, "direction": metric.direction,
+           "current": cur, "baseline": base}
+    if not isinstance(cur, (int, float)) or not isinstance(
+            base, (int, float)) or isinstance(cur, bool) or isinstance(
+            base, bool):
+        rec["status"] = "missing"
+        return rec
+    if metric.abs_tol is not None:
+        band = metric.abs_tol
+    else:
+        band = abs(base) * (metric.rel_tol or 0.0)
+    if metric.direction == "lower":
+        bound = base + band
+        ok = cur <= bound
+    else:
+        bound = base - band
+        ok = cur >= bound
+    rec.update(bound=bound, status="ok" if ok else "regressed")
+    if base:
+        rec["ratio"] = cur / base
+    return rec
+
+
+def compare_bench(schema: str, current: dict, baseline: dict) -> list[dict]:
+    """All watched-metric records for one bench pair."""
+    return [check_metric(m, current, baseline)
+            for m in WATCHED.get(schema, ())]
+
+
+def _load(path: str) -> Optional[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def run_check(bench_dir: str, baseline_dir: str,
+              trajectory_path: Optional[str]) -> dict:
+    """Sweep every BENCH_*.json in `bench_dir` against `baseline_dir`.
+
+    Returns the trajectory entry (status, per-bench metric records,
+    notes for anything skipped); when `trajectory_path` is set the entry
+    is appended to that provenance-stamped ledger regardless of outcome.
+    """
+    benches: dict[str, dict] = {}
+    notes: list[str] = []
+    n_regressed = n_checked = 0
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    for path in paths:
+        name = os.path.basename(path)
+        if name == os.path.basename(trajectory_path or "BENCH_trajectory.json"):
+            continue
+        current = _load(path)
+        if current is None:
+            notes.append(f"{name}: unreadable, skipped")
+            continue
+        schema = current.get("schema")
+        if schema not in WATCHED:
+            notes.append(f"{name}: schema {schema!r} has no watched "
+                         "metrics, skipped")
+            continue
+        base_path = os.path.join(baseline_dir, name)
+        baseline = _load(base_path)
+        if baseline is None:
+            notes.append(f"{name}: no baseline at {base_path}, skipped "
+                         "(seed with --seed)")
+            continue
+        if baseline.get("schema") != schema:
+            notes.append(f"{name}: schema changed "
+                         f"({baseline.get('schema')!r} -> {schema!r}), "
+                         "incomparable — re-seed the baseline")
+            continue
+        metrics = compare_bench(schema, current, baseline)
+        benches[name] = {
+            "schema": schema,
+            "baseline_rev": (baseline.get("provenance") or {}).get("git_rev"),
+            "metrics": metrics,
+        }
+        n_checked += sum(m["status"] != "missing" for m in metrics)
+        n_regressed += sum(m["status"] == "regressed" for m in metrics)
+
+    prov = provenance()
+    entry = {
+        "timestamp": prov["timestamp"],
+        "git_rev": prov["git_rev"],
+        "backend": prov["backend"],
+        "status": "regressed" if n_regressed else "pass",
+        "metrics_checked": n_checked,
+        "metrics_regressed": n_regressed,
+        "benches": benches,
+        "notes": notes,
+    }
+    if trajectory_path:
+        append_trajectory(trajectory_path, entry)
+    return entry
+
+
+def append_trajectory(path: str, entry: dict) -> None:
+    """Append one entry to the BENCH_trajectory.json ledger."""
+    from repro.telemetry.events import write_bench_json
+
+    ledger = _load(path) or {"schema": TRAJECTORY_SCHEMA, "entries": []}
+    if ledger.get("schema") != TRAJECTORY_SCHEMA:
+        raise ValueError(f"{path} is not a {TRAJECTORY_SCHEMA} ledger "
+                         f"(schema={ledger.get('schema')!r})")
+    ledger.setdefault("entries", []).append(entry)
+    write_bench_json(path, ledger)
+
+
+def seed_baselines(bench_dir: str, baseline_dir: str) -> list[str]:
+    """Copy the current BENCH_*.json artifacts into the baseline dir."""
+    import shutil
+
+    os.makedirs(baseline_dir, exist_ok=True)
+    seeded = []
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        name = os.path.basename(path)
+        if name == "BENCH_trajectory.json":
+            continue
+        if (_load(path) or {}).get("schema") not in WATCHED:
+            continue
+        shutil.copy(path, os.path.join(baseline_dir, name))
+        seeded.append(name)
+    return seeded
+
+
+def render(entry: dict) -> str:
+    lines = []
+    for name, bench in sorted(entry["benches"].items()):
+        for m in bench["metrics"]:
+            mark = {"ok": " ok ", "regressed": "FAIL",
+                    "missing": "skip"}[m["status"]]
+            cur, base = m["current"], m["baseline"]
+            ratio = f" ({m['ratio']:.2f}x)" if "ratio" in m else ""
+            lines.append(f"[{mark}] {name}:{m['path']} "
+                         f"{m['direction']}-is-better "
+                         f"current={cur} baseline={base}{ratio}")
+    for note in entry["notes"]:
+        lines.append(f"[note] {note}")
+    lines.append(f"checked {entry['metrics_checked']} metrics, "
+                 f"{entry['metrics_regressed']} regressed -> "
+                 f"{entry['status'].upper()}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory holding the current BENCH_*.json")
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="committed baseline directory")
+    ap.add_argument("--trajectory", default=None,
+                    help="trajectory ledger path (default: "
+                         "<bench-dir>/BENCH_trajectory.json; 'none' "
+                         "disables the append)")
+    ap.add_argument("--seed", action="store_true",
+                    help="copy current artifacts into the baseline dir "
+                         "instead of checking")
+    args = ap.parse_args(argv)
+
+    if args.seed:
+        seeded = seed_baselines(args.bench_dir, args.baselines)
+        print(f"seeded {len(seeded)} baselines into {args.baselines}: "
+              f"{', '.join(seeded)}")
+        return 0
+
+    trajectory = args.trajectory
+    if trajectory is None:
+        trajectory = os.path.join(args.bench_dir, "BENCH_trajectory.json")
+    elif trajectory == "none":
+        trajectory = None
+    entry = run_check(args.bench_dir, args.baselines, trajectory)
+    print(render(entry))
+    if trajectory:
+        print(f"# trajectory -> {trajectory}")
+    return 1 if entry["status"] == "regressed" else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

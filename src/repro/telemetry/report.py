@@ -4,8 +4,11 @@
 
 One row per (run, cell): rounds observed, final accuracy, SV spend and
 truncation rate, bytes moved, wall/compile/execute seconds, rounds/sec.
-`--json` emits the rows machine-readably instead; `--validate` runs the
-schema validator first and fails loudly on a malformed stream.
+`--json` emits `{"schema_version", "rows"}` machine-readably instead
+(the embedded version is the stream schema the rows were folded from, so
+CI consumers can refuse streams they do not understand); `--validate`
+runs the schema validator first and exits nonzero on a malformed stream
+— CI can gate on the exit code directly.
 """
 from __future__ import annotations
 
@@ -14,7 +17,9 @@ import json
 import sys
 from typing import Optional
 
-from repro.telemetry.events import read_events, validate_events
+from repro.telemetry.events import (
+    SCHEMA_VERSION, TelemetryError, read_events, validate_events,
+)
 
 
 def _fmt(x, nd=3) -> str:
@@ -149,11 +154,16 @@ def main(argv=None) -> int:
     for p in args.paths:
         events.extend(read_events(p))
     if args.validate:
-        n = validate_events(events)
+        try:
+            n = validate_events(events)
+        except TelemetryError as e:
+            print(f"validation FAILED: {e}", file=sys.stderr)
+            return 1
         print(f"# validated {n} events", file=sys.stderr)
     rows = summarize(events)
     if args.json:
-        json.dump(rows, sys.stdout, indent=2)
+        json.dump({"schema_version": SCHEMA_VERSION, "rows": rows},
+                  sys.stdout, indent=2)
         print()
     else:
         print(render_table(rows))

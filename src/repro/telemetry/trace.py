@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import time
 from typing import Iterator, Optional
 
 import jax
@@ -40,12 +41,58 @@ import jax
 # stage names used by the engines; kernels/profiles key off these
 STAGES = ("select", "train", "shapley", "aggregate", "eval")
 
+# prefix every host/trace span carries; profile.py recovers per-stage
+# wall time by summing spans with this prefix out of a capture window
+SPAN_PREFIX = "repro."
+
+
+class SpanRecorder:
+    """Host-side record of `stage()` spans: name -> total wall seconds.
+
+    Installed by `record_spans()` (profile.trace_capture uses it as the
+    always-available fallback when the profiler's trace files cannot be
+    parsed) — `stage()` adds its wall duration here whenever a recorder
+    is active."""
+
+    def __init__(self) -> None:
+        self.spans: list[tuple[str, float]] = []
+
+    def add(self, name: str, seconds: float) -> None:
+        self.spans.append((name, seconds))
+
+    def totals(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for name, secs in self.spans:
+            out[name] = out.get(name, 0.0) + secs
+        return out
+
+
+_span_recorder: Optional[SpanRecorder] = None
+
+
+@contextlib.contextmanager
+def record_spans() -> Iterator[SpanRecorder]:
+    """Install a SpanRecorder for the enclosed region (re-entrant: an
+    inner recorder shadows the outer one for its extent)."""
+    global _span_recorder
+    prev = _span_recorder
+    rec = SpanRecorder()
+    _span_recorder = rec
+    try:
+        yield rec
+    finally:
+        _span_recorder = prev
+
 
 @contextlib.contextmanager
 def stage(name: str) -> Iterator[None]:
     """Host-side profiler span around a region of dispatches."""
-    with jax.profiler.TraceAnnotation(f"repro.{name}"):
+    rec = _span_recorder
+    t0 = time.perf_counter() if rec is not None else 0.0
+    with jax.profiler.TraceAnnotation(f"{SPAN_PREFIX}{name}"):
         yield
+    if rec is not None:
+        rec.add(name, time.perf_counter() - t0)
 
 
 def named_stage(name: str):
