@@ -49,8 +49,10 @@ client-scale-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	PYTHONPATH=src python -m benchmarks.client_scale --smoke --json BENCH_clients.json
 
-# communication-efficiency ledger (paper title claim): accuracy x upload
-# bytes for selection/compression combinations; refreshes BENCH_comm.json
+# communication-efficiency ledger (paper title claim): the strategies x
+# codecs Pareto frontier as ONE partitioned run_grid call, plus the fused
+# delta-codec microbench; refreshes BENCH_comm.json (gate with
+# CHECK_BENCH_COMM=1 scripts/check.sh)
 bench-comm:
 	PYTHONPATH=src python -m benchmarks.comm_efficiency --json BENCH_comm.json
 

@@ -1,59 +1,224 @@
 """Communication-efficiency ledger: the paper's title claim, in bytes.
 
 Selection (GreedyFed) and compression (quant8/topk) are orthogonal ways to
-cut client<->PS traffic; this benchmark measures accuracy x total upload
-bytes for each and for the combination, on the same data/seeds.
+cut client<->PS traffic; this benchmark measures the joint Pareto frontier
+— accuracy x total upload bytes x rounds-to-target-accuracy — for every
+(strategy, codec) cell on the same data/seeds.
+
+Since the §18 codec-partition lift the whole sweep is ONE `run_grid`
+call: `upload_codec` joined the partition key, so a strategies x codecs
+grid compiles one executable per (capability, codec) partition and
+dispatches once per partition, instead of the v1 bench's serial
+`run_algo` loop (one full setup + compile + dispatch per setting).  The
+artifact records that collapse (`grid.serial_runs_replaced` vs
+`grid.dispatches`) next to the frontier.
+
+A second section microbenchmarks the codec roundtrip itself at the
+benchmark's model shapes: the fused `kernels.delta_codec` path the scan
+engine now runs (one pass over the cohort-stacked delta) against the
+legacy per-leaf tree-map chain (`compression.codec_roundtrip` under
+vmap), as compiled flops / bytes accessed (§17 cost cards) and wall
+latency.
 
     PYTHONPATH=src python -m benchmarks.comm_efficiency --json BENCH_comm.json
 
 (opt-in: not part of the default `benchmarks.run` table sweep; `--json`
 — or `make bench-comm` — additionally writes the provenance-stamped
-BENCH_comm.json ledger via telemetry's one bench writer)
+BENCH_comm.json ledger via telemetry's one bench writer.  Gate it in CI
+with `CHECK_BENCH_COMM=1 scripts/check.sh`.)
 """
 from __future__ import annotations
 
 import argparse
+import time
 
-from benchmarks.fl_common import run_algo
+import jax
+import numpy as np
+
+from benchmarks.fl_common import DIFFICULTY, FULL, QUICK
+from repro.data.synth import make_dataset
+from repro.federated.server import FLConfig
+from repro.grid import GridCell, GridSpec, run_grid
 from repro.telemetry import write_bench_json
 
-SETTINGS = [
-    ("fedavg", "identity"),
-    ("fedavg", "quant8"),
-    ("fedavg", "quant8_topk"),
-    ("greedyfed", "identity"),
-    ("greedyfed", "quant8"),
-    ("greedyfed_dropout", "quant8"),
-]
+STRATEGIES = ["fedavg", "greedyfed", "greedyfed_dropout"]
+CODECS = ["identity", "quant8", "topk", "quant8_topk"]
+PRIVACY_SIGMA = 0.05       # heterogeneous regime (matches bench v1)
+TARGET_FRAC = 0.95         # rounds-to-target: 95% of the best identity acc
+
+
+def _rounds_to_target(curve, target: float):
+    """First (1-based) round whose eval accuracy reaches `target`."""
+    for t, acc in curve:
+        if acc >= target:
+            return int(t) + 1
+    return None
+
+
+def _pareto_rows(spec: GridSpec, grid, seeds) -> tuple:
+    """Aggregate the grid's cells into one frontier row per (algo, codec),
+    seed-meaned, with rounds/bytes-to-target against the shared target."""
+    by_setting: dict = {}
+    for cell, res in zip(spec.cells, grid.results):
+        codec = dict(cell.overrides).get("upload_codec", "identity")
+        by_setting.setdefault((cell.selector, codec), []).append(res)
+    # the target is relative to the best UNCOMPRESSED final accuracy, so
+    # every codec is judged against the same accuracy bar
+    best_identity = max(
+        float(np.mean([r.final_acc for r in results]))
+        for (_, codec), results in by_setting.items() if codec == "identity")
+    target = TARGET_FRAC * best_identity
+    rows = []
+    for (algo, codec), results in by_setting.items():
+        accs = [r.final_acc for r in results]
+        up = int(np.mean([r.upload_bytes for r in results]))
+        down = int(np.mean([r.download_bytes for r in results]))
+        rtts = [_rounds_to_target(r.test_acc, target) for r in results]
+        rtt = (float(np.mean([t for t in rtts if t is not None]))
+               if all(t is not None for t in rtts) else None)
+        rounds = results[0].config.rounds
+        rows.append({
+            "algo": algo, "codec": codec,
+            "acc_mean": float(np.mean(accs)), "acc_std": float(np.std(accs)),
+            "upload_bytes": up, "download_bytes": down,
+            "rounds_to_target": rtt,
+            # uploads are charged per granted cohort, uniform per round
+            # in-protocol, so bytes-to-target scales linearly in rounds
+            "bytes_to_target":
+                int(up * rtt / rounds) if rtt is not None else None,
+            "acc_per_upload_gb":
+                float(np.mean(accs)) / max(up / 2**30, 1e-9),
+        })
+    return rows, target
+
+
+def _stacked_delta_inputs(cfg: FLConfig, data):
+    """(stacked cohort params, reference params) at the bench model shapes."""
+    import jax.numpy as jnp
+
+    from repro.federated.server import setup_run
+
+    setup = setup_run(cfg, data)
+    key = jax.random.key(17)
+    keys = jax.random.split(key, len(jax.tree.leaves(setup.params)))
+    it = iter(keys)
+    stacked = jax.tree.map(
+        lambda p: p[None] + 1e-2 * jax.random.normal(
+            next(it), (cfg.m,) + p.shape, p.dtype), setup.params)
+    return stacked, setup.params
+
+
+def _time_us(fn, *args, repeats: int = 20) -> float:
+    jax.block_until_ready(fn(*args))          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def codec_roundtrip_microbench(cfg: FLConfig, data) -> dict:
+    """Fused delta-codec path vs legacy per-leaf tree-map chain: compiled
+    flops / bytes accessed (§17 cost cards) and wall latency, per codec,
+    at the benchmark's (m, model) shapes."""
+    from repro.federated.compression import codec_roundtrip
+    from repro.kernels.delta_codec import delta_codec_roundtrip
+    from repro.telemetry.profile import cost_card
+
+    stacked, params = _stacked_delta_inputs(cfg, data)
+    out: dict = {}
+    for codec in CODECS:
+        if codec == "identity":
+            continue
+        fused = jax.jit(
+            lambda s, p, c=codec: delta_codec_roundtrip(s, p, c))
+        legacy = jax.jit(lambda s, p, c=codec: jax.vmap(
+            lambda w: codec_roundtrip(c, w, p))(s))
+        row: dict = {}
+        for name, fn in (("fused", fused), ("ref_tree_map", legacy)):
+            card = cost_card(fn, stacked, params) or {}
+            row[name] = {
+                "flops": card.get("flops"),
+                "bytes_accessed": card.get("bytes_accessed"),
+                "peak_bytes": card.get("peak_bytes"),
+                "latency_us": _time_us(fn, stacked, params),
+            }
+        for metric in ("flops", "bytes_accessed"):
+            a, b = row["fused"][metric], row["ref_tree_map"][metric]
+            if a and b:
+                row[f"ref_over_fused_{metric}"] = b / a
+        row["speedup_fused_vs_ref"] = (
+            row["ref_tree_map"]["latency_us"] / row["fused"]["latency_us"])
+        out[codec] = row
+    return out
 
 
 def run(*, seeds=(0,), full=False, json_path=None):
-    print("\n# communication efficiency "
-          "(algo,codec,acc,upload_MB,download_MB,acc_per_upload_GB)")
-    rows, cells = [], []
-    for algo, codec in SETTINGS:
-        out = run_algo(algo, seeds=seeds, full=full, upload_codec=codec,
-                       privacy_sigma=0.05)  # heterogeneous regime
-        up = out.get("upload_bytes", 0) / 2**20
-        down = out.get("download_bytes", 0) / 2**20
-        eff = out["acc_mean"] / max(up / 1024, 1e-9)
-        print(f"{algo},{codec},{out['acc_mean']:.4f},{up:.1f},{down:.1f},"
-              f"{eff:.2f}")
-        rows.append((algo, codec, out["acc_mean"], up, down))
-        cells.append({
-            "algo": algo, "codec": codec,
-            "acc_mean": out["acc_mean"],
-            "acc_std": out.get("acc_std"),
-            "upload_bytes": out.get("upload_bytes", 0),
-            "download_bytes": out.get("download_bytes", 0),
-            "acc_per_upload_gb": eff,
-        })
+    base_kw = dict(FULL if full else QUICK)
+    client = base_kw.pop("client")
+    base = FLConfig(dataset="mnist", selector=STRATEGIES[0], client=client,
+                    engine="scan", privacy_sigma=PRIVACY_SIGMA, **base_kw)
+    datasets = {seed: make_dataset(
+        "mnist", n_train=base.n_train, n_val=base.n_val, n_test=base.n_test,
+        seed=seed, difficulty=DIFFICULTY) for seed in seeds}
+
+    # the whole strategies x codecs frontier as ONE partitioned grid call
+    cells, cell_data = [], []
+    for algo in STRATEGIES:
+        for codec in CODECS:
+            for seed in seeds:
+                cells.append(GridCell(algo, seed,
+                                      overrides={"upload_codec": codec}))
+                cell_data.append(datasets[seed])
+    spec = GridSpec(base, tuple(cells))
+    t0 = time.perf_counter()
+    grid = run_grid(spec, data=cell_data)
+    grid_wall = time.perf_counter() - t0
+
+    rows, target = _pareto_rows(spec, grid, seeds)
+    print("\n# communication-efficiency Pareto frontier "
+          f"(target acc {target:.4f})")
+    print("algo,codec,acc,upload_MB,rounds_to_target,acc_per_upload_GB")
+    for r in rows:
+        rtt = "-" if r["rounds_to_target"] is None else \
+            f"{r['rounds_to_target']:.0f}"
+        print(f"{r['algo']},{r['codec']},{r['acc_mean']:.4f},"
+              f"{r['upload_bytes'] / 2**20:.1f},{rtt},"
+              f"{r['acc_per_upload_gb']:.2f}")
+
+    grid_stats = {
+        "cells": len(cells),
+        "partitions": len(grid.partitions),
+        "executables": len(grid.partitions),
+        "dispatches": grid.dispatches,
+        "serial_runs_replaced": len(cells),
+        "partition_labels": [p.label for p in grid.partitions],
+        "partition_codecs": [p.upload_codec for p in grid.partitions],
+        "wall_s": grid_wall,
+    }
+    print(f"# grid: {grid_stats['cells']} cells -> "
+          f"{grid_stats['executables']} executables, "
+          f"{grid_stats['dispatches']} dispatches "
+          f"(v1 ran {grid_stats['serial_runs_replaced']} serial runs)")
+
+    micro = codec_roundtrip_microbench(base, datasets[seeds[0]])
+    print("# codec_roundtrip fused-vs-tree-map "
+          "(codec,fused_us,ref_us,bytes_ratio)")
+    for codec, row in micro.items():
+        br = row.get("ref_over_fused_bytes_accessed")
+        print(f"{codec},{row['fused']['latency_us']:.0f},"
+              f"{row['ref_tree_map']['latency_us']:.0f},"
+              + (f"{br:.2f}" if br else "-"))
+
     if json_path:
         write_bench_json(json_path, {
-            "schema": "bench_comm/v1",
+            "schema": "bench_comm/v2",
             "seeds": list(seeds), "full": full,
-            "privacy_sigma": 0.05,
-            "settings": cells,
+            "privacy_sigma": PRIVACY_SIGMA,
+            "target_frac": TARGET_FRAC, "target_acc": target,
+            "pareto": rows,
+            "grid": grid_stats,
+            "codec_roundtrip": micro,
         })
         print(f"json_report,{json_path}")
     return rows

@@ -15,6 +15,10 @@
 #   and refreshes BENCH_clients.json.
 #   CHECK_PROFILE=1 scripts/check.sh  additionally runs the §17 profile
 #   smoke (cost cards on every compile event + capture-window stage walls).
+#   CHECK_BENCH_COMM=1 scripts/check.sh  additionally runs the §18
+#   communication-efficiency Pareto grid (one partitioned run_grid over
+#   strategies x codecs + the fused-codec microbench) and refreshes
+#   BENCH_comm.json.
 #   CHECK_BENCH_TREND=1 scripts/check.sh  additionally diffs the current
 #   BENCH_*.json against benchmarks/baselines/ and fails on regression
 #   (appends to the BENCH_trajectory.json ledger either way).
@@ -70,6 +74,12 @@ if [[ "${CHECK_PROFILE:-0}" == "1" ]]; then
   echo
   echo "== profile smoke (cost cards + capture window) =="
   make profile-smoke
+fi
+
+if [[ "${CHECK_BENCH_COMM:-0}" == "1" ]]; then
+  echo
+  echo "== comm-efficiency Pareto grid (BENCH_comm.json) =="
+  make bench-comm
 fi
 
 if [[ "${CHECK_BENCH_TREND:-0}" == "1" ]]; then

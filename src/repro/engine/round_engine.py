@@ -33,8 +33,9 @@ from repro.core.selection_jax import (
 from repro.core.shapley import gtg_shapley
 from repro.engine.batch_client import cohort_update
 from repro.kernels.cohort_gather import cohort_take
+from repro.kernels.delta_codec import delta_codec_roundtrip
 from repro.federated.client import ClientConfig, local_loss
-from repro.federated.compression import codec_nbytes, codec_roundtrip
+from repro.federated.compression import codec_nbytes
 from repro.models.mlp_cnn import ClassifierModel
 
 PyTree = Any
@@ -101,9 +102,13 @@ def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
                 sel, epochs_k, round_key, client_axis=spec.client_axis)
 
             if spec.upload_codec != "identity":
-                stacked = jax.vmap(
-                    lambda u: codec_roundtrip(spec.upload_codec, u, params)
-                )(stacked)
+                # fused delta-codec roundtrip (DESIGN.md §18): one pass
+                # over the stacked cohort per leaf — Pallas kernel on TPU,
+                # rowwise fused ref elsewhere — replacing the old
+                # per-client vmap of the per-leaf top_k/scatter chain
+                with named_stage("codec"):
+                    stacked = delta_codec_roundtrip(stacked, params,
+                                                    spec.upload_codec)
 
         m = sel.shape[0]
         sv = jnp.zeros((m,))
@@ -220,6 +225,7 @@ class ScanRunOutput(NamedTuple):
     sv_truncated: jax.Array     # (T,) bool
     test_acc: jax.Array         # (T,) NaN on non-eval rounds
     val_loss: jax.Array         # (T,) NaN on non-eval rounds
+    granted: jax.Array          # (T,) int32 active (granted) cohort size
     eval_count: jax.Array       # () int32 evals THIS replica performed
 
 
@@ -248,6 +254,7 @@ class SegmentOutput(NamedTuple):
     sv_truncated: jax.Array     # (K,) bool
     test_acc: jax.Array         # (K,) NaN on non-eval rounds
     val_loss: jax.Array         # (K,) NaN on non-eval rounds
+    granted: jax.Array          # (K,) int32 active (granted) cohort size
 
 
 def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
@@ -297,6 +304,13 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
                                               full, sel_key, ctx)
                 epochs_k = (cohort_take(epochs_row, sel, axis_name=ca)
                             if ca is not None else jnp.take(epochs_row, sel))
+                # granted cohort size: how many of the m selected clients
+                # are actually active under the strategy's availability
+                # mask (dropout strategies freeze `active` at select time)
+                # — the honest per-round upload multiplier for the byte
+                # ledger (`full` is the gathered (N,) view either way)
+                granted = jnp.sum(jnp.take(full.active, sel)
+                                  .astype(jnp.int32))
 
             out = round_step(params, xs_all, ys_all, nv_all, sigma_all,
                              x_val, y_val, sel, epochs_k, round_key)
@@ -329,7 +343,7 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
             eval_slot = eval_slot + do_mine.astype(jnp.int32)
 
             ys = (sel, epochs_k, out.sv, out.utility_evals,
-                  out.sv_truncated, acc, vloss)
+                  out.sv_truncated, acc, vloss, granted)
             return (out.params, sstate, key, eval_slot), ys
 
         return body
@@ -369,9 +383,10 @@ def make_segment_step(model: ClassifierModel, ccfg: ClientConfig,
             body, (carry.params, carry.sel_state, carry.key,
                    carry.eval_slot),
             (ts, epochs_seg, d_seg, eval_any_seg, eval_seg))
-        sels, epochs, sv, evals, trunc, acc, vloss = ys
+        sels, epochs, sv, evals, trunc, acc, vloss, granted = ys
         return SegmentOutput(SegmentCarry(params, sstate, key, eval_slot),
-                             sels, epochs, sv, evals, trunc, acc, vloss)
+                             sels, epochs, sv, evals, trunc, acc, vloss,
+                             granted)
 
     return segment_step
 
@@ -412,7 +427,7 @@ def make_run_scan(model: ClassifierModel, ccfg: ClientConfig,
         return ScanRunOutput(out.carry.params, out.carry.sel_state,
                              out.selections, out.epochs, out.sv,
                              out.utility_evals, out.sv_truncated,
-                             out.test_acc, out.val_loss,
+                             out.test_acc, out.val_loss, out.granted,
                              out.carry.eval_slot)
 
     return run_scan

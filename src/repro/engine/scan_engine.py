@@ -111,8 +111,11 @@ def results_from_scan(cfg, s, out, *, wall_time_s: float, seed: int,
     epochs = np.asarray(out.epochs)
     selections = [row.astype(np.int64) for row in sels]
 
+    # charge uploads at the ACTUAL granted-cohort size per round (dropout
+    # strategies can grant fewer than m active clients), matching the
+    # loop engine's per-selected-client accounting (replicated.py)
     codec_bytes = codec_nbytes(cfg.upload_codec, s.params)
-    upload_bytes = codec_bytes * cfg.m * cfg.rounds
+    upload_bytes = codec_bytes * int(np.asarray(out.granted).sum())
     download_bytes = s.model_bytes * cfg.m * cfg.rounds
 
     vclock = VirtualClock() if s.clock is not None else None

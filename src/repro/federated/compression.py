@@ -17,18 +17,32 @@ a decode that reconstructs the (lossy) update:
 
 All codecs are unbiased-ish lossy maps applied to the *delta* w_k - w^t
 (deltas compress far better than raw weights), matching standard practice.
+
+Two layers live here (DESIGN.md §18):
+
+  * the original per-leaf codecs (`CODECS`, `codec_roundtrip`, ...) — the
+    parity ORACLE: simple tree.map chains with `lax.top_k` + scatter;
+  * a flat-vector layer (`FLAT_CODECS`, `flat_roundtrip`) that operates on
+    the raveled delta with static per-leaf offsets/sizes — fixed payload
+    shapes, fully jittable, and bitwise-equal to the oracle.  The fused
+    `kernels/delta_codec` package implements the same row semantics in one
+    HBM pass for the scan engine's cohort path.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
-from typing import Any, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregation import tree_add, tree_sub
 
 PyTree = Any
+
+TOPK_FRAC = 0.1  # default sparsification fraction for the top-k codecs
 
 
 class Encoded(NamedTuple):
@@ -91,8 +105,7 @@ def topk_encode(delta: PyTree, frac: float = 0.1) -> Encoded:
 
 def topk_decode(enc: Encoded) -> PyTree:
     def dec(l):
-        flat = jnp.zeros(int(jnp.prod(jnp.asarray(l["shape"]))),
-                         l["val"].dtype)
+        flat = jnp.zeros(math.prod(l["shape"]), l["val"].dtype)
         return flat.at[l["idx"]].set(l["val"]).reshape(l["shape"])
 
     return jax.tree.map(dec, enc.payload,
@@ -120,7 +133,7 @@ def quant8_topk_encode(delta: PyTree, frac: float = 0.1) -> Encoded:
 def quant8_topk_decode(enc: Encoded) -> PyTree:
     def dec(l):
         vals = l["val"].astype(jnp.float32) * l["scale"]
-        flat = jnp.zeros(int(jnp.prod(jnp.asarray(l["shape"]))), jnp.float32)
+        flat = jnp.zeros(math.prod(l["shape"]), jnp.float32)
         return flat.at[l["idx"]].set(vals).reshape(l["shape"])
 
     return jax.tree.map(dec, enc.payload,
@@ -130,8 +143,9 @@ def quant8_topk_decode(enc: Encoded) -> PyTree:
 CODECS = {
     "identity": (identity_encode, identity_decode),
     "quant8": (quant8_encode, quant8_decode),
-    "topk": (partial(topk_encode, frac=0.1), topk_decode),
-    "quant8_topk": (partial(quant8_topk_encode, frac=0.1), quant8_topk_decode),
+    "topk": (partial(topk_encode, frac=TOPK_FRAC), topk_decode),
+    "quant8_topk": (partial(quant8_topk_encode, frac=TOPK_FRAC),
+                    quant8_topk_decode),
 }
 
 
@@ -162,3 +176,166 @@ def codec_nbytes(codec: str, tree: PyTree) -> int:
     """
     enc_fn, _ = CODECS[codec]
     return enc_fn(jax.tree.map(jnp.zeros_like, tree)).nbytes
+
+
+# ===================================================== flat-vector layer ====
+# Same codecs, re-expressed over the raveled delta vector with STATIC leaf
+# sizes/offsets.  Payload shapes are fixed (no data-dependent scatter), so
+# every op jits/vmaps cleanly; per-leaf segments are static slices.  Each
+# flat codec is bitwise-equal to its per-leaf oracle above (pinned in
+# tests/test_compression.py).
+
+def flat_sizes(tree: PyTree) -> tuple[int, ...]:
+    """Static per-leaf element counts, in `jax.tree.leaves` order."""
+    return tuple(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def _offsets(sizes: tuple[int, ...]) -> tuple[int, ...]:
+    out, off = [], 0
+    for n in sizes:
+        out.append(off)
+        off += n
+    return tuple(out)
+
+
+def leaf_topk_k(n: int, frac: float = TOPK_FRAC) -> int:
+    """Per-leaf k for the sparse codecs — identical to the oracle's rule."""
+    return max(1, int(n * frac))
+
+
+def topk_keep_mask(seg: jax.Array, k: int) -> jax.Array:
+    """Exact keep mask for magnitude top-k with `lax.top_k` tie semantics.
+
+    The mask is scattered from `lax.top_k`'s own index set (ties break
+    lowest-index-first), so reconstruction is bitwise-equal to the
+    oracle's dense scatter by construction.  The scatter has static
+    shapes — only the payload layout must be data-independent, not the
+    ops — and consuming top_k's indices whole keeps XLA's fast partial
+    TopK; deriving a threshold by slicing out the k-th value would
+    defeat the TopK rewrite and fall back to a full O(d log d) sort.
+    """
+    _, idx = jax.lax.top_k(jnp.abs(seg), k)
+    keep = jnp.zeros(seg.shape, bool)
+    return jnp.put_along_axis(keep, idx, True, axis=-1, inplace=False)
+
+
+def _segments(flat, sizes):
+    return [flat[..., o:o + n] for o, n in zip(_offsets(sizes), sizes)]
+
+
+def flat_identity_encode(flat, sizes, frac=TOPK_FRAC):
+    return {"v": flat}
+
+
+def flat_identity_decode(payload, sizes, frac=TOPK_FRAC):
+    return payload["v"]
+
+
+def flat_identity_nbytes(sizes, frac=TOPK_FRAC):
+    return 4 * sum(sizes)
+
+
+def flat_quant8_encode(flat, sizes, frac=TOPK_FRAC):
+    qs, scales = [], []
+    for seg in _segments(flat, sizes):
+        scale = jnp.maximum(jnp.max(jnp.abs(seg), axis=-1), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(seg / scale[..., None]), -127, 127
+                     ).astype(jnp.int8)
+        qs.append(q)
+        scales.append(scale.astype(jnp.float32))
+    return {"q": jnp.concatenate(qs, axis=-1),
+            "scale": jnp.stack(scales, axis=-1)}
+
+
+def flat_quant8_decode(payload, sizes, frac=TOPK_FRAC):
+    outs = [seg.astype(jnp.float32) * payload["scale"][..., i:i + 1]
+            for i, seg in enumerate(_segments(payload["q"], sizes))]
+    return jnp.concatenate(outs, axis=-1)
+
+
+def flat_quant8_nbytes(sizes, frac=TOPK_FRAC):
+    return sum(sizes) + 4 * len(sizes)
+
+
+def flat_topk_encode(flat, sizes, frac=TOPK_FRAC):
+    keeps, vals = [], []
+    for n, seg in zip(sizes, _segments(flat, sizes)):
+        keep = topk_keep_mask(seg, leaf_topk_k(n, frac))
+        keeps.append(keep)
+        vals.append(jnp.where(keep, seg, 0.0))
+    return {"keep": jnp.concatenate(keeps, axis=-1),
+            "val": jnp.concatenate(vals, axis=-1)}
+
+
+def flat_topk_decode(payload, sizes, frac=TOPK_FRAC):
+    return payload["val"]
+
+
+def flat_topk_nbytes(sizes, frac=TOPK_FRAC):
+    return sum((4 + 4) * leaf_topk_k(n, frac) for n in sizes)
+
+
+def flat_quant8_topk_encode(flat, sizes, frac=TOPK_FRAC):
+    keeps, qs, scales = [], [], []
+    for n, seg in zip(sizes, _segments(flat, sizes)):
+        keep = topk_keep_mask(seg, leaf_topk_k(n, frac))
+        kept = jnp.where(keep, seg, 0.0)
+        # max|kept| == max|seg| (top-k always contains the row max), which
+        # is exactly the oracle's scale over the k selected values.
+        scale = jnp.maximum(jnp.max(jnp.abs(kept), axis=-1), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(kept / scale[..., None]), -127, 127
+                     ).astype(jnp.int8)
+        keeps.append(keep)
+        qs.append(q)
+        scales.append(scale.astype(jnp.float32))
+    return {"keep": jnp.concatenate(keeps, axis=-1),
+            "q": jnp.concatenate(qs, axis=-1),
+            "scale": jnp.stack(scales, axis=-1)}
+
+
+def flat_quant8_topk_decode(payload, sizes, frac=TOPK_FRAC):
+    outs = [seg.astype(jnp.float32) * payload["scale"][..., i:i + 1]
+            for i, seg in enumerate(_segments(payload["q"], sizes))]
+    return jnp.concatenate(outs, axis=-1)
+
+
+def flat_quant8_topk_nbytes(sizes, frac=TOPK_FRAC):
+    return sum((4 + 1) * leaf_topk_k(n, frac) + 4 for n in sizes)
+
+
+class FlatCodec(NamedTuple):
+    encode: Callable[..., PyTree]   # (flat, sizes, frac) -> payload
+    decode: Callable[..., jax.Array]  # (payload, sizes, frac) -> flat
+    nbytes: Callable[..., int]      # (sizes, frac) -> wire bytes (static)
+
+
+FLAT_CODECS = {
+    "identity": FlatCodec(flat_identity_encode, flat_identity_decode,
+                          flat_identity_nbytes),
+    "quant8": FlatCodec(flat_quant8_encode, flat_quant8_decode,
+                        flat_quant8_nbytes),
+    "topk": FlatCodec(flat_topk_encode, flat_topk_decode, flat_topk_nbytes),
+    "quant8_topk": FlatCodec(flat_quant8_topk_encode, flat_quant8_topk_decode,
+                             flat_quant8_topk_nbytes),
+}
+
+
+def flat_roundtrip(codec: str, flat: jax.Array, sizes: tuple[int, ...],
+                   frac: float = TOPK_FRAC) -> jax.Array:
+    """Encode->decode the raveled delta; jit/vmap-safe, fixed shapes."""
+    c = FLAT_CODECS[codec]
+    return c.decode(c.encode(flat, sizes, frac), sizes, frac)
+
+
+def flat_codec_roundtrip(codec: str, w_new: PyTree, w_ref: PyTree) -> PyTree:
+    """Tree-level roundtrip through the flat layer — the jittable twin of
+    `codec_roundtrip`, bitwise-equal to it."""
+    delta = tree_sub(w_new, w_ref)
+    flat, unravel = ravel_pytree(delta)
+    rt = flat_roundtrip(codec, flat, flat_sizes(delta))
+    return tree_add(w_ref, unravel(rt))
+
+
+def flat_codec_nbytes(codec: str, tree: PyTree) -> int:
+    """Static wire size via the flat registry — equals `codec_nbytes`."""
+    return FLAT_CODECS[codec].nbytes(flat_sizes(tree))

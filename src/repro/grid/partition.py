@@ -5,9 +5,13 @@ GTG-Shapley (and Power-of-Choice local losses) are traced and executed
 for EVERY replica whenever ANY strategy needs them, so the FedAvg/random
 cells of a benchmark table pay the full Shapley cost for values they
 discard (ROADMAP "mixed-strategy superset cost").  Here cells are grouped
-by the capability pair `(uses_shapley, uses_local_losses)`: each group
-compiles its own executable whose RoundSpec only contains what the group
-needs, and per-group results are re-interleaved into grid order.
+by the capability triple `(uses_shapley, uses_local_losses,
+upload_codec)`: each group compiles its own executable whose RoundSpec
+only contains what the group needs (the codec is jit-static inside the
+round body, so a mixed-codec grid NEEDS one executable per codec), and
+per-group results are re-interleaved into grid order.  That makes a
+selection x compression Pareto sweep a single `run_grid` call with
+at most `capability-classes x codecs` compiles (DESIGN.md §18).
 
 Cost of the "sv" partition (compiled-flops evidence in BENCH_grid.json):
 with the default streaming prefix-Shapley path (DESIGN.md §14) the SV
@@ -27,12 +31,17 @@ from repro.core.selection_jax import SelectorSpec
 class PartitionKey(NamedTuple):
     needs_sv: bool
     uses_local_losses: bool
+    upload_codec: str = "identity"
 
     @property
     def label(self) -> str:
-        if self.needs_sv:
-            return "sv"
-        return "losses" if self.uses_local_losses else "plain"
+        base = ("sv" if self.needs_sv
+                else "losses" if self.uses_local_losses else "plain")
+        # identity keeps the bare capability label (and the historical
+        # checkpoint tags); compressed partitions append their codec
+        if self.upload_codec == "identity":
+            return base
+        return f"{base}+{self.upload_codec}"
 
 
 class Partition(NamedTuple):
@@ -57,23 +66,36 @@ class PartitionReport(NamedTuple):
     # XLA memory_analysis() peak of the compiled segment step (per device
     # under sharding); None unless run_grid(compile_stats=True)
     peak_bytes: Optional[int] = None
+    upload_codec: str = "identity"   # the partition's jit-static codec
 
 
-def partition_key(spec: SelectorSpec) -> PartitionKey:
+def partition_key(spec: SelectorSpec,
+                  upload_codec: str = "identity") -> PartitionKey:
     return PartitionKey(bool(spec.uses_shapley),
-                        bool(spec.uses_local_losses))
+                        bool(spec.uses_local_losses),
+                        str(upload_codec))
 
 
-def partition_cells(specs: Sequence[SelectorSpec]) -> list:
+def partition_cells(specs: Sequence[SelectorSpec],
+                    upload_codecs: Optional[Sequence[str]] = None) -> list:
     """Group cell selector-specs into Partitions (stable order: first
     appearance of each capability class; cells keep grid order within).
 
+    `upload_codecs` gives each cell's jit-static codec (default: all
+    identity, the pre-§18 behaviour); cells only share an executable —
+    a partition — when BOTH the capability pair and the codec agree.
+
     Identical SelectorSpecs share one switch branch, so a partition of R
     seeds x one strategy dispatches statically (len(specs) == 1)."""
+    if upload_codecs is None:
+        upload_codecs = ["identity"] * len(specs)
+    if len(upload_codecs) != len(specs):
+        raise ValueError(f"got {len(upload_codecs)} upload_codecs for "
+                         f"{len(specs)} cells")
     groups: dict = {}
     order: list = []
     for i, spec in enumerate(specs):
-        k = partition_key(spec)
+        k = partition_key(spec, upload_codecs[i])
         if k not in groups:
             groups[k] = []
             order.append(k)

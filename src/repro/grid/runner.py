@@ -74,12 +74,21 @@ def _build_batch(part: Partition, cfgs, setups, sel_specs,
     )
 
 
-# Revision of the segment-snapshot layout (the SegmentCarry pytree): bump
-# whenever the carry structure changes so stale checkpoint dirs fail with
-# an actionable version-skew error instead of an opaque structure
-# mismatch from load_pytree.  1 = PR-3 (params, sel_state, key);
-# 2 = + eval_slot (DESIGN.md §13).
-CARRY_FORMAT = 2
+# Revision of the segment-snapshot layout (the SegmentCarry pytree plus
+# the stacked segment outputs saved next to it): bump whenever either
+# structure changes so stale checkpoint dirs fail with an actionable
+# version-skew error instead of an opaque structure mismatch from
+# load_pytree.  1 = PR-3 (params, sel_state, key); 2 = + eval_slot
+# (DESIGN.md §13); 3 = + per-round `granted` cohort sizes in the segment
+# outputs (DESIGN.md §18).
+CARRY_FORMAT = 3
+
+# Revision of the cell -> partition assignment rule.  Folded into the
+# checkpoint fingerprint because segment snapshots are tagged by
+# partition index ("p0-seg0000.npz"): a partitioning change re-numbers
+# the tags, so resuming across it would restore the wrong cells' state.
+# 1 = capability pair; 2 = capability pair x upload_codec (§18).
+PARTITION_REV = 2
 
 
 def _check_fingerprint(checkpoint_dir: str, spec: GridSpec,
@@ -93,7 +102,8 @@ def _check_fingerprint(checkpoint_dir: str, spec: GridSpec,
     import os
 
     fp = hashlib.sha256(repr(
-        (spec.base, spec.cells, rounds_per_segment)).encode()).hexdigest()
+        (spec.base, spec.cells, rounds_per_segment,
+         PARTITION_REV)).encode()).hexdigest()
     path = os.path.join(checkpoint_dir, "grid.json")
     if os.path.exists(path):
         with open(path) as f:
@@ -171,7 +181,10 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
     setups = [setup_run(c, d, model) for c, d in zip(cfgs, cell_data)]
     model = setups[0].model
     sel_specs = [s.sel_spec for s in setups]
-    partitions = partition_cells(sel_specs)
+    # the codec joins the partition key: it is jit-static inside the round
+    # body, so each codec group gets its own executable (DESIGN.md §18)
+    partitions = partition_cells(sel_specs,
+                                 [c.upload_codec for c in cfgs])
 
     if checkpoint_dir:
         _check_fingerprint(checkpoint_dir, spec, rounds_per_segment,
@@ -269,7 +282,8 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
                 shapley_evals=evals_total,
                 bytes_resident=report.bytes_resident,
                 flops_per_dispatch=report.flops_per_dispatch,
-                peak_bytes=report.peak_bytes))
+                peak_bytes=report.peak_bytes,
+                upload_codec=part.key.upload_codec))
 
     results = interleave(len(spec.cells), partitions, per_partition)
     wall = time.perf_counter() - t_start

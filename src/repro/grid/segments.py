@@ -101,6 +101,7 @@ def _out_like(spec: ScanSpec, n_replicas: int, k_rounds: int) -> dict:
         "sv_truncated": np.zeros((r, k), bool),
         "test_acc": np.zeros((r, k), np.float32),
         "val_loss": np.zeros((r, k), np.float32),
+        "granted": np.zeros((r, k), np.int32),
     }
 
 
@@ -128,6 +129,7 @@ def _to_out_dict(out) -> dict:
         "utility_evals": out.utility_evals,
         "sv_truncated": out.sv_truncated,
         "test_acc": out.test_acc, "val_loss": out.val_loss,
+        "granted": out.granted,
     }
 
 
@@ -263,7 +265,7 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
         sv=stacked["sv"], utility_evals=stacked["utility_evals"],
         sv_truncated=stacked["sv_truncated"],
         test_acc=stacked["test_acc"], val_loss=stacked["val_loss"],
-        eval_count=carry.eval_slot)
+        granted=stacked["granted"], eval_count=carry.eval_slot)
     report = SegmentRunReport(n_segments, dispatched, start,
                               batch_bytes(batch), flops, ctimer.seconds,
                               peak_bytes, card)

@@ -101,7 +101,7 @@ def _client_sharded_step_cached(model, ccfg, spec: ScanSpec, mesh):
                 P(REPLICA_AXIS, None, CLIENT_AXIS), rep, rep, rep)
     out_specs = SegmentOutput(carry=carry, selections=rep, epochs=rep,
                               sv=rep, utility_evals=rep, sv_truncated=rep,
-                              test_acc=rep, val_loss=rep)
+                              test_acc=rep, val_loss=rep, granted=rep)
     # check_rep=False: the round outputs ARE replicated over clients (the
     # psum-combined cohort is identical on every shard) but shard_map's
     # replication checker cannot prove it through the scan

@@ -6,9 +6,13 @@ operand* of the scan program (seed, selector, selector kwargs, Dirichlet
 alpha, straggler fraction, privacy sigma, timing schedule, and — since
 the eval-mask table of DESIGN.md §13 — the eval cadence `eval_every`);
 everything that is baked into the trace as a static — shapes, round
-budget, client config, Shapley/codec settings — must be uniform, and
+budget, client config, Shapley settings — must be uniform, and
 `validate()` rejects mixed values with a precise error before anything
-compiles.  `repro.grid.runner.run_grid` is the executor.
+compiles.  `upload_codec` is jit-static too, but instead of being
+rejected it joins the partition key (DESIGN.md §18): cells with
+different codecs land in different partitions, each compiling its own
+executable, so a selection x compression Pareto sweep is ONE run_grid
+call.  `repro.grid.runner.run_grid` is the executor.
 """
 from __future__ import annotations
 
@@ -19,11 +23,14 @@ import numpy as np
 
 # FLConfig fields that are compiled into the partition executable (shapes
 # or jit-static spec fields): every cell of a grid must agree on them.
+# `upload_codec` is deliberately absent — it is jit-static per executable
+# but partition-varying: repro.grid.partition groups cells by codec and
+# each codec group compiles its own executable.
 STATIC_FIELDS = (
     "dataset", "n_clients", "m", "rounds", "client",
     "n_train", "n_val", "n_test",
     "shapley_eps", "shapley_max_iters", "shapley_impl", "sv_chunk",
-    "upload_codec", "clients_shards",
+    "clients_shards",
 )
 
 def _freeze_overrides(ov) -> tuple:
@@ -85,6 +92,8 @@ class GridSpec:
 
     def validate(self) -> list:
         """Check grid-wide static uniformity; returns the cell FLConfigs."""
+        from repro.federated.compression import CODECS
+
         cfgs = self.cell_configs()
         for i, cfg in enumerate(cfgs):
             for f in STATIC_FIELDS:
@@ -93,6 +102,10 @@ class GridSpec:
                         f"grid cells must agree on jit-static FLConfig "
                         f"field {f!r}: cell {i} has {getattr(cfg, f)!r}, "
                         f"base has {getattr(self.base, f)!r}")
+            if cfg.upload_codec not in CODECS:
+                raise ValueError(
+                    f"cell {i} has unknown upload_codec "
+                    f"{cfg.upload_codec!r}; known: {sorted(CODECS)}")
         return cfgs
 
 

@@ -1,0 +1,14 @@
+"""Fused upload-delta codec roundtrip for the cohort stage (DESIGN.md §18).
+
+  * `kernel.py` — Pallas TPU single-pass roundtrip: per row, abs-max ->
+                  int8 quantise -> dequantise (+ exact sort-free top-k
+                  masking via MSB descent over f32 magnitude bits), one
+                  HBM read and one write total;
+  * `ref.py`    — the rowwise jnp oracle, bitwise-equal per-row semantics
+                  to `federated.compression`'s per-leaf codecs;
+  * `ops.py`    — the public pytree wrapper the engines call (kernel on
+                  TPU, fused ref elsewhere).
+"""
+from repro.kernels.delta_codec.ops import delta_codec_roundtrip
+
+__all__ = ["delta_codec_roundtrip"]

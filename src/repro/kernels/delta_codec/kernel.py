@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused single-pass delta-codec roundtrip.
+
+The scan engine's cohort stage compresses every client's update delta each
+round (round_engine.py).  The old path was a per-leaf chain of XLA kernels
+— abs-max pass, quant pass, dequant pass, full-row `lax.top_k` (a sort)
+plus a dense zeros+scatter — each materialising an (M, D) intermediate in
+HBM.  Here the whole roundtrip is ONE pass: each grid step DMAs one row
+(1, D) into VMEM, computes abs-max -> int8 quantise -> dequantise (and the
+exact top-k keep mask for the sparse codecs) entirely on-chip, and writes
+the reconstructed row back.  HBM traffic is the floor: read D, write D.
+
+Top-k without a sort: |x| >= 0, so the f32 bit pattern reinterpreted as
+int32 is monotone in the float value (sign bit clear => signed compare ==
+float compare) and bit-equality == float equality.  The k-th largest key
+is found by MSB descent — build the largest threshold t, bit by bit from
+bit 30 down, keeping a bit iff count(key >= t|bit) >= k; each step is one
+compare+sum over the VMEM-resident row.  Ties at the threshold are broken
+lowest-index-first (the `lax.top_k` contract) by a second MSB descent over
+the tied column indices.  ~2*31 vector passes over VMEM, zero HBM traffic
+beyond the single streaming read/write.
+
+Padding: rows are zero-padded to a lane multiple by the ops wrapper; a
+static `d_true` masks pad columns out of the abs-max and the top-k
+candidate pool (a pad key of -1 sorts below every valid key, so padding
+never steals a keep slot from a real element).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128  # lane-dim alignment for the (1, D) row blocks
+
+
+def _kth_largest(key: jax.Array, k: jax.Array | int, nbits: int) -> jax.Array:
+    """k-th largest entry of int32 `key` (values in [-1, 2^nbits)): the
+    largest t with count(key >= t) >= k, found by MSB descent.  Exact;
+    requires at least k entries >= 0."""
+    def body(i, t):
+        cand = t | jnp.int32(1 << (nbits - 1 - i))
+        cnt = jnp.sum((key >= cand).astype(jnp.int32))
+        return jnp.where(cnt >= k, cand, t)
+
+    return jax.lax.fori_loop(0, nbits, body, jnp.int32(0))
+
+
+def _codec_kernel(x_ref, out_ref, *, codec: str, k: int, d_true: int):
+    x = x_ref[...].astype(jnp.float32)                      # (1, d_pad)
+    d_pad = x.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    valid = col < d_true
+    absx = jnp.where(valid, jnp.abs(x), 0.0)
+    if codec in ("quant8", "quant8_topk"):
+        scale = jnp.maximum(jnp.max(absx), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127.0, 127.0) * scale
+    if codec == "quant8":
+        out = q
+    else:
+        key = jnp.where(valid,
+                        jax.lax.bitcast_convert_type(absx, jnp.int32),
+                        -1)
+        # finite f32 bit patterns are < 2^31, so 31 bits cover every key
+        thr = _kth_largest(key, k, 31)
+        above = key > thr
+        r = k - jnp.sum(above.astype(jnp.int32))            # ties to keep
+        tie = key == thr
+        # r-th smallest tied column == d_pad minus the r-th largest of
+        # (d_pad - col) over the ties
+        tkey = jnp.where(tie, d_pad - col, -1)
+        u = d_pad - _kth_largest(tkey, r, max(1, d_pad.bit_length()))
+        keep = above | (tie & (col <= u))
+        out = jnp.where(keep, x if codec == "topk" else q, 0.0)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("codec", "k", "d_true", "interpret"))
+def delta_codec_kernel(x: jax.Array, *, codec: str, k: int = 0,
+                       d_true: int | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Roundtrip each row of x (rows, d_pad) through `codec`.
+
+    d_pad % 128 == 0; columns >= d_true are padding (passed through the
+    quantiser but excluded from abs-max and top-k).  `k` is the static
+    per-row keep count for the sparse codecs.
+    """
+    rows, d_pad = x.shape
+    assert d_pad % LANES == 0, (d_pad, LANES)
+    if d_true is None:
+        d_true = d_pad
+    assert 0 < d_true <= d_pad, (d_true, d_pad)
+
+    kernel = functools.partial(_codec_kernel, codec=codec, k=k, d_true=d_true)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, d_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, d_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

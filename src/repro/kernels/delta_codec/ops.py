@@ -1,0 +1,71 @@
+"""Public wrapper: fused upload-codec roundtrip on a stacked cohort pytree.
+
+`delta_codec_roundtrip(stacked, params, codec)` replaces the engines' old
+per-client `vmap(codec_roundtrip)` chain: for each leaf, the (M, *s)
+stacked client weights minus the (*s,) reference become an (M, d) delta
+matrix, roundtripped in one fused pass, and added back.  Per-leaf k for
+the sparse codecs follows the oracle's rule (`leaf_topk_k`), so results
+match `federated.compression` bitwise up to jit fusion of the final add.
+
+Routing: the Pallas kernel keeps a whole (1, d) row resident in VMEM, so
+it serves native-TPU backends for mid-size leaves; tiny leaves, oversize
+leaves, and non-TPU backends take the rowwise jnp ref — still one XLA
+fusion per leaf instead of the old multi-kernel chain (the interpret-mode
+emulation of the in-kernel MSB-descent select would be pure overhead).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+
+from repro.kernels import default_interpret, pad_to
+from repro.kernels.delta_codec.kernel import LANES, delta_codec_kernel
+from repro.kernels.delta_codec.ref import delta_codec_ref
+
+PyTree = Any
+
+MIN_KERNEL_D = 2048     # below this the ref fusion wins
+MAX_KERNEL_D = 1 << 18  # a (1, d) f32 row + select temporaries must fit VMEM
+
+
+@partial(jax.jit, static_argnames=("codec", "frac", "use_kernel",
+                                   "interpret"))
+def delta_codec_roundtrip(stacked: PyTree, params: PyTree, codec: str, *,
+                          frac: float | None = None,
+                          use_kernel: bool | None = None,
+                          interpret: bool | None = None) -> PyTree:
+    """stacked leaves (M, *s), params leaves (*s,) -> roundtripped stack.
+
+    `frac=None` takes the oracle's `TOPK_FRAC`; `interpret=None` derives
+    from the backend; `use_kernel=None` enables the Pallas kernel exactly
+    where it compiles natively (TPU).
+    """
+    # deferred: compression sits under repro.federated, whose __init__
+    # pulls in the engines — which import this package at module scope
+    from repro.federated.compression import TOPK_FRAC, leaf_topk_k
+
+    if codec == "identity":
+        return stacked
+    if frac is None:
+        frac = TOPK_FRAC
+    if interpret is None:
+        interpret = default_interpret()
+    if use_kernel is None:
+        use_kernel = not interpret
+
+    def one(leaf: jax.Array, ref_leaf: jax.Array) -> jax.Array:
+        m = leaf.shape[0]
+        d = math.prod(leaf.shape[1:])
+        delta = leaf.reshape(m, d) - ref_leaf.reshape(1, d)
+        k = leaf_topk_k(d, frac) if codec != "quant8" else 0
+        if use_kernel and MIN_KERNEL_D <= d <= MAX_KERNEL_D:
+            rt = delta_codec_kernel(pad_to(delta, LANES), codec=codec, k=k,
+                                    d_true=d, interpret=interpret)[:, :d]
+        else:
+            rt = delta_codec_ref(delta, codec, k=k)
+        return (ref_leaf.reshape(1, d) + rt).reshape(leaf.shape)
+
+    return jax.tree.map(one, stacked, params)

@@ -1,0 +1,63 @@
+"""jnp reference: rowwise delta-codec roundtrip on a (rows, d) matrix.
+
+One fused XLA computation per codec — abs-max, quantise, dequantise and
+(for the sparse codecs) an exact top-k keep mask — with per-row semantics
+bitwise-equal to `federated.compression`'s per-leaf oracle:
+
+  * quant8:      scale = max(max|x|, 1e-12)/127 per row; the int8 cast is
+                 elided because clip(round(x/scale)) is an integer in
+                 [-127, 127], exactly representable in f32 — the product
+                 q * scale is bit-identical either way.
+  * topk:        keep the k largest |x| per row, `lax.top_k` tie order
+                 (lowest index first); dropped entries become +0.0 via
+                 `where`, matching the oracle's zeros+scatter (an `x * mask`
+                 would leak -0.0 for negative x).
+  * quant8_topk: sparsify then quantise the survivors.  The scale is the
+                 row abs-max — identical to the oracle's max over the k
+                 selected values, because the top-k set always contains
+                 the row's largest-magnitude entry.
+
+This is also the serving path off-TPU: one fused computation per leaf
+instead of the old per-leaf encode/decode chain's separate value gather
+and dense zeros+scatter dispatchs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _keep_mask(absx: jax.Array, k: int) -> jax.Array:
+    """(rows, d) |x| -> boolean keep mask of exactly k entries per row.
+
+    Scattered from `lax.top_k`'s own index set (ties lowest-index-first)
+    — the oracle's set by construction.  Consuming top_k's indices whole
+    keeps XLA's fast partial TopK; slicing out the k-th value as a
+    threshold would defeat the TopK rewrite and lower to a full sort.
+    """
+    _, idx = jax.lax.top_k(absx, k)
+    keep = jnp.zeros(absx.shape, bool)
+    return jnp.put_along_axis(keep, idx, True, axis=-1, inplace=False)
+
+
+def delta_codec_ref(x: jax.Array, codec: str, k: int = 0) -> jax.Array:
+    """Roundtrip (encode -> decode) each row of x (rows, d) through codec."""
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    absx = jnp.abs(x)
+    if codec == "quant8":
+        scale = jnp.maximum(jnp.max(absx, axis=-1, keepdims=True),
+                            1e-12) / 127.0
+        out = jnp.clip(jnp.round(x / scale), -127.0, 127.0) * scale
+    elif codec == "topk":
+        out = jnp.where(_keep_mask(absx, k), x, 0.0)
+    elif codec == "quant8_topk":
+        keep = _keep_mask(absx, k)
+        scale = jnp.maximum(jnp.max(absx, axis=-1, keepdims=True),
+                            1e-12) / 127.0
+        out = jnp.where(keep,
+                        jnp.clip(jnp.round(x / scale), -127.0, 127.0) * scale,
+                        0.0)
+    else:
+        raise ValueError(f"unknown delta codec {codec!r}")
+    return out.astype(orig)

@@ -43,14 +43,19 @@ def emit_scan_rounds(tel, out, *, uses_shapley: bool, codec_bytes: int,
     vloss = np.asarray(out.val_loss)
     emask = np.asarray(emask)
     m = int(sels.shape[1]) if sels.ndim > 1 else 0
+    # uploads are charged at the round's ACTUAL granted-cohort size —
+    # dropout strategies can grant fewer than m active clients — matching
+    # the loop engine's per-selected-client ledger (replicated.py)
+    granted = (np.asarray(out.granted) if getattr(out, "granted", None)
+               is not None else np.full((sels.shape[0],), m, np.int64))
     extra = {} if cell is None else {"cell": cell}
     for i in range(sels.shape[0]):
         t = t0 + i
         fields = dict(
             round=int(t), selections=sels[i], epochs=epochs[i],
             utility_evals=int(evals[i]), sv_truncated=bool(trunc[i]),
-            upload_bytes=codec_bytes * m, download_bytes=model_bytes * m,
-            **extra)
+            upload_bytes=codec_bytes * int(granted[i]),
+            download_bytes=model_bytes * m, **extra)
         if uses_shapley:
             fields["sv"] = sv[i]
         tel.emit("round_metrics", **fields)

@@ -1,12 +1,22 @@
 """Upload-compression codecs: roundtrip fidelity, byte accounting,
 end-to-end training, and the selection-vs-compression communication ledger."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container
+    from _hypothesis_compat import given, settings, st
+
 from repro.federated.client import ClientConfig
-from repro.federated.compression import CODECS, compress_update
+from repro.federated.compression import (
+    CODECS, FLAT_CODECS, codec_nbytes, codec_roundtrip, compress_update,
+    flat_codec_nbytes, flat_codec_roundtrip, flat_roundtrip, flat_sizes,
+)
 from repro.federated.server import FLConfig, run_federated
 
 
@@ -53,6 +63,89 @@ def test_topk_keeps_largest_magnitudes(key):
     assert np.count_nonzero(r) == 1
 
 
+# ------------------------------------------------- flat-vector layer ------
+# The §18 flat codecs (one raveled delta vector, static leaf offsets) must
+# equal the per-leaf oracle BITWISE when compared in the same lowering
+# regime — eager-vs-eager here, because XLA lowers `x / scale` to
+# reciprocal-multiply under jit but true division eagerly.
+
+def _odd_tree(key):
+    """Ragged leaf sizes (53, 7, 130) incl. injected magnitude ties and an
+    all-zero leaf — the top-k tie-break and quant8 zero-guard edge cases."""
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (53,))
+    a = a.at[3].set(a[40]).at[11].set(-a[40])      # exact |.| ties
+    return {"a": a, "z": jnp.zeros((7,)),
+            "b": {"w": jax.random.normal(k2, (10, 13))}}
+
+
+@pytest.mark.parametrize("codec", sorted(CODECS))
+def test_flat_matches_per_leaf_oracle_bitwise(codec, key):
+    w_ref = _odd_tree(key)
+    w_new = jax.tree.map(
+        lambda x: x + 0.03 * jax.random.normal(
+            jax.random.fold_in(key, x.size), x.shape), w_ref)
+    got = flat_codec_roundtrip(codec, w_new, w_ref)
+    want = codec_roundtrip(codec, w_new, w_ref)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("codec", sorted(CODECS))
+def test_flat_nbytes_matches_oracle(codec, key):
+    tree = _odd_tree(key)
+    assert flat_codec_nbytes(codec, tree) == codec_nbytes(codec, tree)
+
+
+@pytest.mark.parametrize("codec", sorted(CODECS))
+def test_flat_roundtrip_jits_and_vmaps(codec, key):
+    """The flat ops are jittable/vmappable (fixed payload shapes — the
+    reason the layer exists); jit equals its own eager run to jit-fusion
+    tolerance and vmap over a batch equals the per-row calls bitwise."""
+    tree = _odd_tree(key)
+    sizes = flat_sizes(tree)
+    flat = jnp.concatenate([jnp.ravel(l) for l in jax.tree.leaves(tree)])
+    fn = functools.partial(flat_roundtrip, codec, sizes=sizes)
+    np.testing.assert_allclose(np.asarray(jax.jit(fn)(flat)),
+                               np.asarray(fn(flat)), atol=1e-6)
+    batch = jnp.stack([flat, 2.0 * flat, jnp.zeros_like(flat)])
+    vm = jax.jit(jax.vmap(fn))(batch)
+    one = jax.jit(fn)
+    for i in range(batch.shape[0]):
+        np.testing.assert_array_equal(np.asarray(vm[i]),
+                                      np.asarray(one(batch[i])))
+
+
+@given(st.integers(min_value=1, max_value=200),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_flat_roundtrip_property(n, seed):
+    """Property sweep (runs where hypothesis is installed; skipped by
+    tests/_hypothesis_compat.py offline): for random sizes/values every
+    codec's flat roundtrip jits, vmaps, and matches the per-leaf oracle."""
+    key = jax.random.key(seed)
+    tree = {"w": jax.random.normal(key, (n,))}
+    w_new = jax.tree.map(lambda x: x * 1.7 + 0.1, tree)
+    for codec in sorted(CODECS):
+        got = flat_codec_roundtrip(codec, w_new, tree)
+        want = codec_roundtrip(codec, w_new, tree)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(want["w"]))
+        sizes = flat_sizes(tree)
+        fn = functools.partial(flat_roundtrip, codec, sizes=sizes)
+        flat = jnp.ravel(w_new["w"]) - jnp.ravel(tree["w"])
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(jax.vmap(fn))(flat[None])[0]),
+            np.asarray(jax.jit(fn)(flat)))
+
+
+def test_flat_codecs_registry_complete():
+    assert set(FLAT_CODECS) == set(CODECS)
+    for codec, fc in FLAT_CODECS.items():
+        assert callable(fc.encode) and callable(fc.decode)
+        assert callable(fc.nbytes)
+
+
 FAST = dict(n_clients=6, m=2, rounds=4, n_train=600, n_val=120, n_test=150,
             eval_every=4,
             client=ClientConfig(epochs=2, batches_per_epoch=2, batch_size=16))
@@ -68,3 +161,19 @@ def test_compressed_training_and_byte_ledger():
     assert res_q8.upload_bytes < res_id.upload_bytes / 3
     # downloads (model broadcast) identical
     assert res_q8.download_bytes == res_id.download_bytes
+
+
+@pytest.mark.parametrize("codec", ["identity", "quant8"])
+def test_scan_ledger_matches_loop_under_dropout(codec):
+    """Byte-ledger parity across engines for a dropout strategy: the scan
+    path now charges each round's ACTUAL granted-cohort size (summed from
+    the selector's active mask) instead of assuming m, so it must equal
+    the loop engine's per-selected-client ledger exactly — under
+    greedyfed_dropout AND compression."""
+    cfg = dict(FAST, selector="greedyfed_dropout", shapley_max_iters=10,
+               upload_codec=codec)
+    loop = run_federated(FLConfig(dataset="mnist", engine="loop", **cfg))
+    scan = run_federated(FLConfig(dataset="mnist", engine="scan", **cfg))
+    assert scan.upload_bytes == loop.upload_bytes
+    assert scan.download_bytes == loop.download_bytes
+    assert scan.upload_bytes > 0

@@ -1,4 +1,6 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +12,9 @@ from repro.kernels.ce_loss.ref import ce_loss_ref
 from repro.kernels.cohort_gather.kernel import cohort_gather_kernel
 from repro.kernels.cohort_gather.ops import cohort_gather, cohort_take
 from repro.kernels.cohort_gather.ref import cohort_gather_ref
+from repro.kernels.delta_codec.kernel import LANES, delta_codec_kernel
+from repro.kernels.delta_codec.ops import delta_codec_roundtrip
+from repro.kernels.delta_codec.ref import delta_codec_ref
 from repro.kernels.flash_attention.ops import flash_attention_tpu
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.prefix_avg.kernel import prefix_avg_kernel
@@ -197,6 +202,126 @@ def test_cohort_gather_tree_wrapper_ragged_leaves(key):
         assert got[name].shape == (5,) + leaf.shape[1:]
         np.testing.assert_array_equal(np.asarray(got[name]),
                                       np.asarray(leaf)[np.asarray(ids)])
+
+
+# -------------------------------------------------------- delta_codec ------
+# The fused upload-codec roundtrip (DESIGN.md §18).  Parity is BITWISE
+# against the jnp rowwise oracle — quantisation grids and the exact
+# (sort-free) top-k must agree bit for bit, so compression error in an
+# engine run is attributable to the codec's math, never to the kernel.
+# Comparisons jit the ref: XLA lowers `x / scale` to reciprocal-multiply
+# under jit but true division eagerly, so eager-vs-jit differs by design.
+_jit_ref = jax.jit(functools.partial(delta_codec_ref),
+                   static_argnames=("codec", "k"))
+
+
+def _pad_lanes(x):
+    d = x.shape[-1]
+    pad = (-d) % LANES
+    return jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+
+
+@pytest.mark.parametrize("m,d", [(3, 128), (4, 640), (2, 1000), (5, 4096),
+                                 (1, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("codec", ["quant8", "topk", "quant8_topk"])
+def test_delta_codec_kernel_matches_ref(m, d, codec, dtype, key):
+    """4+ shapes (incl. non-LANES-divisible D: 1000, 130) x 2 dtypes:
+    the single-pass kernel equals the jitted rowwise oracle bitwise."""
+    x = (jax.random.normal(key, (m, d)) * 3).astype(dtype)
+    k = max(1, d // 10)
+    got = delta_codec_kernel(_pad_lanes(x), codec=codec, k=k, d_true=d,
+                             interpret=True)[:, :d]
+    want = _jit_ref(x, codec=codec, k=k)
+    assert got.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32),
+                                  err_msg=f"{codec} {m}x{d} {dtype}")
+    # padding lanes must not leak into the kept set or the quant scale
+    np.testing.assert_array_equal(
+        np.asarray(delta_codec_kernel(_pad_lanes(x), codec=codec, k=k,
+                                      d_true=d, interpret=True)[:, d:]),
+        0.0)
+
+
+def test_delta_codec_topk_tie_semantics(key):
+    """Injected magnitude ties resolve lowest-index-first — the lax.top_k
+    contract the per-leaf oracle inherits; exact count always == k."""
+    d = 256
+    x = jnp.zeros((2, d)).at[:, [3, 7, 100, 200]].set(
+        jnp.asarray([[2.0, -2.0, 2.0, 1.0], [-5.0, 5.0, 5.0, 5.0]]))
+    for k in (1, 2, 3):
+        got = delta_codec_kernel(x, codec="topk", k=k, d_true=d,
+                                 interpret=True)
+        want = _jit_ref(x, codec="topk", k=k)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(jnp.count_nonzero(got[1])) == k
+
+
+def test_delta_codec_zero_rows(key):
+    """All-zero rows: quant8 must not divide by zero; top-k keeps k
+    (zero-valued) slots, matching lax.top_k on a constant vector."""
+    x = jnp.zeros((3, 512))
+    for codec in ("quant8", "topk", "quant8_topk"):
+        got = delta_codec_kernel(x, codec=codec, k=8, d_true=512,
+                                 interpret=True)
+        assert np.isfinite(np.asarray(got)).all()
+        np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_delta_codec_ops_matches_legacy_tree_map(key):
+    """The pytree wrapper (what round_engine now calls) reproduces the
+    legacy per-leaf chain `vmap(codec_roundtrip)` it replaced, at ragged
+    MLP-like shapes — both jitted, same lowering regime."""
+    from repro.federated.compression import codec_roundtrip
+
+    params = {"w1": jax.random.normal(key, (784, 32)) * 0.1,
+              "b1": jnp.zeros((32,)),
+              "w2": jax.random.normal(key, (32, 10)) * 0.3}
+    stacked = jax.tree.map(
+        lambda p: p[None] + 0.01 * jax.random.normal(
+            jax.random.fold_in(key, p.ndim), (4,) + p.shape), params)
+    for codec in ("quant8", "topk", "quant8_topk"):
+        got = delta_codec_roundtrip(stacked, params, codec)
+        legacy = jax.jit(lambda s, p, c=codec: jax.vmap(
+            lambda w: codec_roundtrip(c, w, p))(s))(stacked, params)
+        for name in params:
+            np.testing.assert_allclose(
+                np.asarray(got[name]), np.asarray(legacy[name]),
+                atol=1e-6, err_msg=f"{codec} {name}")
+
+
+def test_delta_codec_ops_kernel_path_matches_ref_path(key):
+    """use_kernel=True (interpret) and the fused-ref fallback agree
+    through the jitted wrapper to jit-fusion tolerance (the ref branch
+    FMA-fuses the trailing `ref + rt` add; the kernel boundary blocks
+    that fusion — one-ulp shifts, the repo-wide parity contract), and
+    the size gate keeps the small 32-wide leaf on the ref path in both:
+    that leaf must stay bitwise."""
+    params = {"big": jax.random.normal(key, (64, 48)),   # d=3072: kernel
+              "small": jax.random.normal(key, (32,))}    # d=32: ref
+    stacked = jax.tree.map(
+        lambda p: p[None] + 0.05 * jax.random.normal(
+            jax.random.fold_in(key, p.size), (3,) + p.shape), params)
+    for codec in ("quant8", "topk", "quant8_topk"):
+        a = delta_codec_roundtrip(stacked, params, codec,
+                                  use_kernel=True, interpret=True)
+        b = delta_codec_roundtrip(stacked, params, codec,
+                                  use_kernel=False, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a["small"]),
+                                      np.asarray(b["small"]),
+                                      err_msg=f"{codec} small")
+        np.testing.assert_allclose(np.asarray(a["big"]),
+                                   np.asarray(b["big"]),
+                                   atol=1e-6, err_msg=f"{codec} big")
+
+
+def test_delta_codec_identity_passthrough(key):
+    stacked = {"w": jax.random.normal(key, (2, 100, 33))}
+    out = delta_codec_roundtrip(stacked, {"w": jnp.zeros((100, 33))},
+                                "identity")
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(stacked["w"]))
 
 
 # ---------------------------------------------------- flash_attention ------
