@@ -1,4 +1,4 @@
-.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke bench-shapley telemetry-smoke client-scale-smoke bench-comm profile-smoke bench-check seed-baselines
+.PHONY: check test parity bench-kernels bench-engine bench-smoke grid-smoke bench-shapley telemetry-smoke client-scale-smoke bench-comm profile-smoke faults-smoke bench-check seed-baselines
 
 check:
 	./scripts/check.sh
@@ -62,6 +62,13 @@ bench-comm:
 # check gate with CHECK_PROFILE=1 ./scripts/check.sh
 profile-smoke:
 	PYTHONPATH=src python -m benchmarks.profile_smoke
+
+# §19 chaos smoke: convergence-under-fault-rate curves (greedyfed vs
+# random, quarantine on) plus the hardened-path overhead measurement;
+# refreshes BENCH_faults.json (deterministic quarantine counts watched by
+# regress.py).  Opt into the check gate with CHECK_FAULTS=1 ./scripts/check.sh
+faults-smoke:
+	PYTHONPATH=src python -m benchmarks.fault_bench --smoke --json BENCH_faults.json
 
 # §17 bench-regression gate: diff the repo-root BENCH_*.json against the
 # committed baselines in benchmarks/baselines/ (tolerance bands per

@@ -1,0 +1,158 @@
+"""Chaos harness: convergence under injected client faults + overhead.
+
+The §19 fault layer promises three things this bench pins as numbers:
+
+  * the pre-drawn fault table is part of the config seed, so the
+    quarantine counts of a fixed (selector, rate) cell are DETERMINISTIC
+    — regress.py watches them with a zero band;
+  * GreedyFed's accuracy degrades gracefully as the byzantine/crash rate
+    rises when quarantine is on (the convergence-under-fault-rate curve,
+    greedyfed vs random on the same tables);
+  * the hardened round program costs ~nothing extra when nothing fires:
+    quarantine-on-but-clean vs stock scan us-per-round.
+
+    PYTHONPATH=src python -m benchmarks.fault_bench --smoke --json BENCH_faults.json
+
+(opt-in: not part of the default `benchmarks.run` sweep; `make
+faults-smoke` runs the smoke shape and `CHECK_FAULTS=1 scripts/check.sh`
+gates it in CI.)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.fl_common import DIFFICULTY
+from repro.data.synth import make_dataset
+from repro.faults import FaultSpec
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_federated
+from repro.grid import GridSpec, run_grid
+from repro.telemetry import write_bench_json
+
+SELECTORS = ["greedyfed", "random"]
+RATES = (0.0, 0.2, 0.5)
+KINDS = ("nan", "sign_flip", "crash")
+
+SMOKE = dict(
+    n_clients=12, m=4, rounds=12, n_train=600, n_val=100, n_test=200,
+    eval_every=4, shapley_max_iters=10,
+    client=ClientConfig(epochs=2, batches_per_epoch=2, batch_size=16),
+)
+FULL = dict(
+    n_clients=40, m=4, rounds=35, n_train=4000, n_val=500, n_test=800,
+    eval_every=7, shapley_max_iters=20,
+    client=ClientConfig(epochs=3, batches_per_epoch=3, batch_size=32),
+)
+
+
+def _rate_key(rate: float) -> str:
+    """"rate20" for 0.2 — regress.py path keys must not contain dots."""
+    return f"rate{int(round(rate * 100)):02d}"
+
+
+def fault_rate_curves(base: FLConfig, data, seeds) -> dict:
+    """One run_grid call per fault rate: selectors x seeds under the same
+    pre-drawn tables, quarantine on.  Returns the curve rows plus the
+    deterministic per-(rate, selector) quarantine counts."""
+    import dataclasses
+
+    curves = []
+    counts: dict = {}
+    for rate in RATES:
+        faults = (FaultSpec(rate=rate, kinds=KINDS, scale=10.0)
+                  if rate > 0 else None)
+        cfg = dataclasses.replace(base, faults=faults, quarantine=True)
+        spec = GridSpec.product(cfg, selectors=SELECTORS, seeds=list(seeds))
+        grid = run_grid(spec, data=[data[s] for c in SELECTORS for s in seeds])
+        cells: dict = {}
+        for cell, res in zip(spec.cells, grid.results):
+            row = cells.setdefault(cell.selector, {
+                "final_acc": [], "quarantined_total": 0, "upload_mb": 0.0})
+            row["final_acc"].append(res.final_acc)
+            row["quarantined_total"] += int(res.quarantined_total)
+            row["upload_mb"] += res.upload_bytes / 1e6
+        for sel, row in cells.items():
+            row["final_acc"] = float(np.mean(row["final_acc"]))
+        curves.append({"rate": rate, "cells": cells})
+        if rate > 0:
+            counts[_rate_key(rate)] = {
+                sel: cells[sel]["quarantined_total"] for sel in cells}
+    return {"curves": curves, "quarantine_counts": counts}
+
+
+def quarantine_overhead(base: FLConfig, data, *, repeats: int = 3) -> dict:
+    """us-per-round of the hardened-but-clean scan vs the stock scan.
+
+    Both paths are warmed (compile excluded), timed as min-of-repeats;
+    the contract is ~0% overhead when the screen never fires."""
+    import dataclasses
+
+    timings = {}
+    for name, kw in (("off", {}), ("on", {"quarantine": True})):
+        cfg = dataclasses.replace(base, **kw)
+        run_federated(cfg, data=data)          # warm the executable
+        best = min(
+            _timed(lambda: run_federated(cfg, data=data))
+            for _ in range(repeats))
+        timings[name] = best / cfg.rounds * 1e6
+    return {
+        "us_per_round_off": timings["off"],
+        "us_per_round_on": timings["on"],
+        "overhead_pct": (timings["on"] / timings["off"] - 1.0) * 100.0,
+    }
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(*, seeds=(0,), smoke=False, json_path=None):
+    base_kw = dict(SMOKE if smoke else FULL)
+    client = base_kw.pop("client")
+    base = FLConfig(dataset="mnist", selector="greedyfed", client=client,
+                    engine="scan", **base_kw)
+    data = {seed: make_dataset(
+        "mnist", n_train=base.n_train, n_val=base.n_val, n_test=base.n_test,
+        seed=seed, difficulty=DIFFICULTY) for seed in seeds}
+
+    jax.clear_caches()
+    rate_report = fault_rate_curves(base, data, seeds)
+    print("# convergence under fault rate (quarantine on)")
+    print("rate,selector,final_acc,quarantined,upload_MB")
+    for row in rate_report["curves"]:
+        for sel, cell in sorted(row["cells"].items()):
+            print(f"{row['rate']},{sel},{cell['final_acc']:.4f},"
+                  f"{cell['quarantined_total']},{cell['upload_mb']:.2f}")
+
+    overhead = quarantine_overhead(base, data[seeds[0]])
+    print(f"# quarantine overhead: on={overhead['us_per_round_on']:.0f}us "
+          f"off={overhead['us_per_round_off']:.0f}us "
+          f"({overhead['overhead_pct']:+.1f}%)")
+
+    if json_path:
+        write_bench_json(json_path, {
+            "schema": "bench_faults/v1",
+            "seeds": list(seeds), "smoke": smoke,
+            "rates": list(RATES), "kinds": list(KINDS),
+            "curves": rate_report["curves"],
+            "quarantine_counts": rate_report["quarantine_counts"],
+            "overhead": overhead,
+        })
+        print(f"json_report,{json_path}")
+    return rate_report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI shape instead of the quick-bench shape")
+    ap.add_argument("--json", default=None,
+                    help="write the provenance-stamped BENCH_faults.json")
+    a = ap.parse_args()
+    run(smoke=a.smoke, json_path=a.json)

@@ -19,6 +19,9 @@
 #   communication-efficiency Pareto grid (one partitioned run_grid over
 #   strategies x codecs + the fused-codec microbench) and refreshes
 #   BENCH_comm.json.
+#   CHECK_FAULTS=1 scripts/check.sh  additionally runs the §19 chaos
+#   smoke (fault-rate convergence curves + quarantine overhead) and
+#   refreshes BENCH_faults.json.
 #   CHECK_BENCH_TREND=1 scripts/check.sh  additionally diffs the current
 #   BENCH_*.json against benchmarks/baselines/ and fails on regression
 #   (appends to the BENCH_trajectory.json ledger either way).
@@ -80,6 +83,12 @@ if [[ "${CHECK_BENCH_COMM:-0}" == "1" ]]; then
   echo
   echo "== comm-efficiency Pareto grid (BENCH_comm.json) =="
   make bench-comm
+fi
+
+if [[ "${CHECK_FAULTS:-0}" == "1" ]]; then
+  echo
+  echo "== fault-injection chaos smoke (BENCH_faults.json) =="
+  make faults-smoke
 fi
 
 if [[ "${CHECK_BENCH_TREND:-0}" == "1" ]]; then

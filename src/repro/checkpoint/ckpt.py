@@ -3,12 +3,25 @@
 Round-resumable FL server state = (model params, valuation state, round idx,
 rng key).  No orbax offline, so we serialise leaves to .npz and the treedef
 to a JSON path-spec; load reconstructs and validates structure.
+
+Integrity (DESIGN.md §19): writes are atomic (tmp + fsync + rename, so a
+kill mid-write leaves either the previous checkpoint or none), the manifest
+carries a sha256 digest per leaf, and `load_pytree` raises
+`CheckpointCorruptError` on any unreadable / truncated / digest-mismatched
+file — `repro.grid.segments` catches it and falls back to the previous
+segment boundary.  A *missing* checkpoint is NOT corruption
+(FileNotFoundError propagates; resume treats it as "start from scratch"),
+and a *structure* mismatch (caller handed the wrong `like`) stays a
+ValueError — that is a programming error, not bit rot.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import Any
+import zipfile
+import zlib
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +29,29 @@ import numpy as np
 
 PyTree = Any
 _SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint exists on disk but cannot be trusted: unreadable npz,
+    missing/undecodable manifest, or a per-leaf sha256 mismatch."""
+
+
+def _digest(arr: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(repr(arr.shape).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _atomic_write(path: str, writer: Callable) -> None:
+    """Write via tmp + fsync + rename so readers never see a torn file."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        writer(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
@@ -30,9 +66,12 @@ def save_pytree(path: str, tree: PyTree) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten_with_paths(tree)
     treedef = jax.tree.structure(tree)
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
-    with open(_manifest_path(path), "w") as f:
-        json.dump({"treedef": str(treedef), "keys": sorted(flat)}, f)
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    _atomic_write(npz_path, lambda f: np.savez(f, **flat))
+    manifest = {"treedef": str(treedef), "keys": sorted(flat),
+                "digests": {k: _digest(v) for k, v in flat.items()}}
+    _atomic_write(_manifest_path(path),
+                  lambda f: f.write(json.dumps(manifest).encode()))
 
 
 def _manifest_path(path: str) -> str:
@@ -40,13 +79,41 @@ def _manifest_path(path: str) -> str:
     return base + ".manifest.json"
 
 
+def _load_manifest(path: str) -> dict:
+    """The manifest dict, or {} when absent (pre-§19 checkpoints carried
+    no digests — tolerated, loads skip verification)."""
+    try:
+        with open(_manifest_path(path)) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return {}
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable checkpoint manifest {_manifest_path(path)!r}: {e!r}"
+        ) from e
+
+
 def load_pytree(path: str, like: PyTree) -> PyTree:
-    """Load into the structure of `like` (shape/dtype validated)."""
-    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Load into the structure of `like` (shape/dtype validated).
+
+    Raises FileNotFoundError when the npz is absent (missing, not corrupt),
+    CheckpointCorruptError when it is unreadable or fails digest
+    verification, and ValueError on a structure mismatch with `like`."""
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    digests = _load_manifest(path).get("digests", {})
+    try:
+        npz = np.load(npz_path)
+        files = sorted(npz.files)
+    except FileNotFoundError:
+        raise
+    except (OSError, ValueError, KeyError, zipfile.BadZipFile,
+            zlib.error) as e:
+        raise CheckpointCorruptError(
+            f"unreadable checkpoint {npz_path!r}: {e!r}") from e
     flat_like = _flatten_with_paths(like)
-    if sorted(npz.files) != sorted(flat_like):
+    if files != sorted(flat_like):
         raise ValueError(
-            f"checkpoint structure mismatch: {sorted(npz.files)[:5]}... vs "
+            f"checkpoint structure mismatch: {files[:5]}... vs "
             f"{sorted(flat_like)[:5]}...")
     leaves_like, treedef = jax.tree.flatten(like)
     paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
@@ -54,7 +121,15 @@ def load_pytree(path: str, like: PyTree) -> PyTree:
             for p in paths]
     new_leaves = []
     for key, ref in zip(keys, leaves_like):
-        arr = npz[key]
+        try:
+            arr = npz[key]
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile,
+                zlib.error) as e:
+            raise CheckpointCorruptError(
+                f"unreadable leaf {key!r} in {npz_path!r}: {e!r}") from e
+        if key in digests and _digest(arr) != digests[key]:
+            raise CheckpointCorruptError(
+                f"digest mismatch at leaf {key!r} in {npz_path!r}")
         if arr.shape != ref.shape:
             raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {ref.shape}")
         new_leaves.append(jnp.asarray(arr, dtype=ref.dtype))

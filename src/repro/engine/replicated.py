@@ -95,8 +95,11 @@ def run_replicated(cfg, seeds, data=None, model=None):
     max_iters = cfg.shapley_max_iters or 50 * cfg.m
     spec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
                      shapley_eps=cfg.shapley_eps, shapley_max_iters=max_iters,
-                     sv_chunk=cfg.sv_chunk, upload_codec=cfg.upload_codec)
+                     sv_chunk=cfg.sv_chunk, upload_codec=cfg.upload_codec,
+                     faults=cfg.faults, quarantine=cfg.quarantine,
+                     quarantine_z=cfg.quarantine_z)
     step_rep = jitted_round_step(model, cfg.client, spec, vmapped=True)
+    hardened = cfg.faults is not None or cfg.quarantine
 
     uses_losses = sel_spec.uses_local_losses
     losses_rep = jax.jit(jax.vmap(jax.vmap(
@@ -118,6 +121,7 @@ def run_replicated(cfg, seeds, data=None, model=None):
     total_evals = [0] * n_seeds
     upload_bytes = [0] * n_seeds
     download_bytes = [0] * n_seeds
+    quar_totals = [0] * n_seeds
     dispatches = 0
 
     # jit compiles during the rounds (first dispatch of each cached
@@ -125,7 +129,7 @@ def run_replicated(cfg, seeds, data=None, model=None):
     with ctimer:
         for t in range(cfg.rounds):
             # ---- per-replica host-side strategy logic ------------------------
-            sel_rows, epoch_rows, key_rows = [], [], []
+            sel_rows, epoch_rows, key_rows, code_rows = [], [], [], []
             losses_all = None
             if uses_losses:
                 losses_all = losses_rep(params, xs, ys, nv)
@@ -142,7 +146,13 @@ def run_replicated(cfg, seeds, data=None, model=None):
                 sel_rows.append(sel)
                 epoch_rows.append(round_epochs(cfg, s, sel, t))
                 key_rows.append(round_key)
-                upload_bytes[i] += codec_bytes * len(sel)
+                code_rows.append(
+                    np.asarray(s.fault_table[t][sel], np.int32)
+                    if s.fault_table is not None
+                    else np.zeros(len(sel), np.int32))
+                if not hardened:
+                    # ok-gated post-dispatch when hardened (§19)
+                    upload_bytes[i] += codec_bytes * len(sel)
                 download_bytes[i] += model_bytes * len(sel)
                 if vclocks[i] is not None:
                     vclocks[i].advance(round_duration_s(
@@ -152,9 +162,16 @@ def run_replicated(cfg, seeds, data=None, model=None):
             out = step_rep(params, xs, ys, nv, sigma, x_val, y_val,
                            jnp.asarray(np.stack(sel_rows)),
                            jnp.asarray(np.stack(epoch_rows)),
-                           jnp.stack(key_rows))
+                           jnp.stack(key_rows),
+                           jnp.asarray(np.stack(code_rows)))
             params = out.params
             dispatches += 1
+            if hardened:
+                ok_rows = np.asarray(out.ok)
+                quar_rows = np.asarray(out.quarantined)
+                for i in range(n_seeds):
+                    upload_bytes[i] += codec_bytes * int(ok_rows[i].sum())
+                    quar_totals[i] += int(quar_rows[i])
 
             sv_rows = np.asarray(out.sv) if needs_sv else None
             evals_rows = np.asarray(out.utility_evals)
@@ -194,6 +211,7 @@ def run_replicated(cfg, seeds, data=None, model=None):
             dispatches=dispatches,     # shared across the fused run
             compile_time_s=ctimer.seconds,
             execute_time_s=max(wall - ctimer.seconds, 0.0),
+            quarantined_total=quar_totals[i],
         ))
     return results
 

@@ -32,6 +32,8 @@ from repro.core.selection_jax import (
 )
 from repro.core.shapley import gtg_shapley
 from repro.engine.batch_client import cohort_update
+from repro.faults.quarantine import harden_cohort, masked_average
+from repro.faults.spec import FaultSpec
 from repro.kernels.cohort_gather import cohort_take
 from repro.kernels.delta_codec import delta_codec_roundtrip
 from repro.federated.client import ClientConfig, local_loss
@@ -68,6 +70,16 @@ class RoundSpec(NamedTuple):
     # (sparse gathers copy bits; selection runs on the gathered (N,)
     # state either way).
     client_axis: Optional[str] = None
+    # Fault injection + quarantine (DESIGN.md §19).  `faults` is the
+    # FaultSpec whose pre-drawn (T, N) code table the engines thread in
+    # as a per-round operand; `quarantine` turns on the in-round screen
+    # (finite-check + robust norm cutoff on the decoded deltas).  Both
+    # are static: fault-free traces with `faults=None, quarantine=False`
+    # contain zero hardening ops, and quarantine-on over a clean cohort
+    # is bitwise identical to off (every mask where() is an identity).
+    faults: Optional[FaultSpec] = None
+    quarantine: bool = False
+    quarantine_z: float = 8.0
 
 
 class RoundOutput(NamedTuple):
@@ -75,6 +87,8 @@ class RoundOutput(NamedTuple):
     sv: jax.Array              # (M,) this round's GTG-SV (zeros if unused)
     utility_evals: jax.Array   # scalar int32
     sv_truncated: jax.Array    # bool: between-round truncation fired
+    ok: jax.Array              # (M,) bool: survived fault mask + screen
+    quarantined: jax.Array     # () int32 quarantined cohort rows
 
 
 def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
@@ -83,16 +97,22 @@ def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
 
     Signature of the returned fn:
         (params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
-         sel, epochs_k, round_key) -> RoundOutput
+         sel, epochs_k, round_key, fault_codes) -> RoundOutput
+    where fault_codes is the (M,) int32 gather of the fault table at the
+    selected clients (zeros when faults are off — the operand keeps a
+    uniform signature and is dead-code-eliminated from clean traces).
     """
     if spec.shapley_impl not in SHAPLEY_IMPLS:
         raise ValueError(f"unknown shapley_impl {spec.shapley_impl!r}; "
                          f"options: {SHAPLEY_IMPLS}")
+    if spec.faults is not None:
+        spec.faults.validate()
+    hardened = spec.faults is not None or spec.quarantine
 
     from repro.telemetry.trace import named_stage
 
     def round_step(params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
-                   sel, epochs_k, round_key) -> RoundOutput:
+                   sel, epochs_k, round_key, fault_codes) -> RoundOutput:
         # named_stage scopes are pure HLO metadata (DESIGN.md §15): they
         # let a profile of the fused dispatch attribute time to
         # train/shapley/aggregate instead of one opaque program
@@ -111,6 +131,21 @@ def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
                                                     spec.upload_codec)
 
         m = sel.shape[0]
+        ok = jnp.ones((m,), bool)
+        quarantined = jnp.zeros((), jnp.int32)
+        n_k_sv = n_k_sel
+        if hardened:
+            # §19: inject the coded faults into the decoded cohort, run
+            # the quarantine screen, and mask failures out of everything
+            # downstream (aggregation weights, SV weights, byte ledger)
+            with named_stage("quarantine"):
+                h = harden_cohort(stacked, params, n_k_sel, fault_codes,
+                                  faults=spec.faults,
+                                  quarantine=spec.quarantine,
+                                  z=spec.quarantine_z)
+            stacked, ok, quarantined, n_k_sv = (h.stacked, h.ok,
+                                                h.quarantined, h.n_k_sv)
+
         sv = jnp.zeros((m,))
         evals = jnp.array(0, jnp.int32)
         truncated = jnp.array(False)
@@ -130,29 +165,37 @@ def make_round_step(model: ClassifierModel, ccfg: ClientConfig,
                         model, x_val, y_val)
                     if spec.shapley_impl == "streaming":
                         sv, stats = gtg_shapley_streaming(
-                            stacked, n_k_sel, params, utility_fn,
+                            stacked, n_k_sv, params, utility_fn,
                             batched_utility_fn, sv_key,
                             eps=spec.shapley_eps,
                             n_perms=spec.shapley_max_iters,
                             sv_chunk=spec.sv_chunk)
                     else:
                         sv, stats = gtg_shapley_batched(
-                            stacked, n_k_sel, params, utility_fn,
+                            stacked, n_k_sv, params, utility_fn,
                             batched_utility_fn, sv_key,
                             eps=spec.shapley_eps,
                             n_perms=spec.shapley_max_iters)
                 else:
                     sv, stats = gtg_shapley(
-                        stacked, n_k_sel, params, utility_fn, sv_key,
+                        stacked, n_k_sv, params, utility_fn, sv_key,
                         eps=spec.shapley_eps,
                         max_iters=spec.shapley_max_iters)
                 evals = stats.utility_evals
                 truncated = stats.truncated_round
+            if hardened:
+                # quarantined rows entered the walk as w_prev at weight
+                # 2^-100 (bitwise-absorbed, DESIGN.md §19): zero their SV
+                # so the valuation update never credits them
+                sv = jnp.where(ok, sv, jnp.zeros((), sv.dtype))
 
         with named_stage("aggregate"):
-            new_params = weighted_average(stacked,
-                                          normalized_weights(n_k_sel))
-        return RoundOutput(new_params, sv, evals, truncated)
+            if hardened:
+                new_params = masked_average(stacked, h.n_k_agg, ok, params)
+            else:
+                new_params = weighted_average(stacked,
+                                              normalized_weights(n_k_sel))
+        return RoundOutput(new_params, sv, evals, truncated, ok, quarantined)
 
     return round_step
 
@@ -226,6 +269,7 @@ class ScanRunOutput(NamedTuple):
     test_acc: jax.Array         # (T,) NaN on non-eval rounds
     val_loss: jax.Array         # (T,) NaN on non-eval rounds
     granted: jax.Array          # (T,) int32 active (granted) cohort size
+    quarantined: jax.Array      # (T,) int32 quarantined cohort rows (§19)
     eval_count: jax.Array       # () int32 evals THIS replica performed
 
 
@@ -255,6 +299,7 @@ class SegmentOutput(NamedTuple):
     test_acc: jax.Array         # (K,) NaN on non-eval rounds
     val_loss: jax.Array         # (K,) NaN on non-eval rounds
     granted: jax.Array          # (K,) int32 active (granted) cohort size
+    quarantined: jax.Array      # (K,) int32 quarantined cohort rows (§19)
 
 
 def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
@@ -274,7 +319,7 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
              y_test, fractions, strategy_id):
         def body(carry, per_round):
             params, sstate, key, eval_slot = carry
-            t, epochs_row, d_t, do_any, do_mine = per_round
+            t, epochs_row, fault_row, d_t, do_any, do_mine = per_round
             key, sel_key, round_key = jax.random.split(key, 3)
 
             if uses_losses:   # Power-of-Choice ranks clients by w^t loss
@@ -304,16 +349,21 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
                                               full, sel_key, ctx)
                 epochs_k = (cohort_take(epochs_row, sel, axis_name=ca)
                             if ca is not None else jnp.take(epochs_row, sel))
-                # granted cohort size: how many of the m selected clients
-                # are actually active under the strategy's availability
-                # mask (dropout strategies freeze `active` at select time)
-                # — the honest per-round upload multiplier for the byte
-                # ledger (`full` is the gathered (N,) view either way)
-                granted = jnp.sum(jnp.take(full.active, sel)
-                                  .astype(jnp.int32))
+                codes_k = (cohort_take(fault_row, sel, axis_name=ca)
+                           if ca is not None else jnp.take(fault_row, sel))
+                # active mask at select time: dropout strategies freeze
+                # `active` here (`full` is the gathered (N,) view)
+                active_sel = jnp.take(full.active, sel)
 
             out = round_step(params, xs_all, ys_all, nv_all, sigma_all,
-                             x_val, y_val, sel, epochs_k, round_key)
+                             x_val, y_val, sel, epochs_k, round_key,
+                             codes_k)
+            # granted cohort size: how many of the m selected clients are
+            # active under the strategy's availability mask AND survived
+            # the fault mask / quarantine screen — the honest per-round
+            # upload multiplier for the byte ledger.  out.ok is all-True
+            # when hardening is off, so this matches the pre-§19 value.
+            granted = jnp.sum((active_sel & out.ok).astype(jnp.int32))
             sstate = put_back(device_update_any(
                 spec.selectors, strategy_id, full, sel,
                 out.sv if spec.round.needs_sv else None))
@@ -343,7 +393,7 @@ def _make_scan_body(model: ClassifierModel, ccfg: ClientConfig,
             eval_slot = eval_slot + do_mine.astype(jnp.int32)
 
             ys = (sel, epochs_k, out.sv, out.utility_evals,
-                  out.sv_truncated, acc, vloss, granted)
+                  out.sv_truncated, acc, vloss, granted, out.quarantined)
             return (out.params, sstate, key, eval_slot), ys
 
         return body
@@ -358,10 +408,11 @@ def make_segment_step(model: ClassifierModel, ccfg: ClientConfig,
     Signature of the returned fn:
         (carry: SegmentCarry, t0, eval_any_seg, xs_all, ys_all, nv_all,
          sigma_all, x_val, y_val, x_test, y_test, fractions, epochs_seg,
-         d_seg, eval_seg, strategy_id) -> SegmentOutput
+         fault_seg, d_seg, eval_seg, strategy_id) -> SegmentOutput
     where K = spec.rounds_per_segment (or spec.rounds when 0), t0 is the
     () int32 GLOBAL index of the segment's first round, epochs_seg is
-    (K, N) int32, d_seg (K,) int32, and eval_seg (K,) bool — the
+    (K, N) int32, fault_seg (K, N) int32 fault codes (§19, zeros when
+    faults are off), d_seg (K,) int32, and eval_seg (K,) bool — the
     [t0, t0+K) slices of the whole-run tables (`schedule.eval_mask`).
     `eval_any_seg` is the (K,) bool OR of ALL replicas' eval rows and,
     like t0, stays UNBATCHED under the replica vmap so the in-scan eval
@@ -374,7 +425,7 @@ def make_segment_step(model: ClassifierModel, ccfg: ClientConfig,
 
     def segment_step(carry, t0, eval_any_seg, xs_all, ys_all, nv_all,
                      sigma_all, x_val, y_val, x_test, y_test, fractions,
-                     epochs_seg, d_seg, eval_seg,
+                     epochs_seg, fault_seg, d_seg, eval_seg,
                      strategy_id) -> SegmentOutput:
         body = bind(xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
                     x_test, y_test, fractions, strategy_id)
@@ -382,11 +433,11 @@ def make_segment_step(model: ClassifierModel, ccfg: ClientConfig,
         (params, sstate, key, eval_slot), ys = jax.lax.scan(
             body, (carry.params, carry.sel_state, carry.key,
                    carry.eval_slot),
-            (ts, epochs_seg, d_seg, eval_any_seg, eval_seg))
-        sels, epochs, sv, evals, trunc, acc, vloss, granted = ys
+            (ts, epochs_seg, fault_seg, d_seg, eval_any_seg, eval_seg))
+        sels, epochs, sv, evals, trunc, acc, vloss, granted, quar = ys
         return SegmentOutput(SegmentCarry(params, sstate, key, eval_slot),
                              sels, epochs, sv, evals, trunc, acc, vloss,
-                             granted)
+                             granted, quar)
 
     return segment_step
 
@@ -404,31 +455,33 @@ def make_run_scan(model: ClassifierModel, ccfg: ClientConfig,
 
     Signature of the returned fn:
         (params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
-         x_test, y_test, fractions, epochs_table, d_sched, eval_table,
-         strategy_id, sel_state, key) -> ScanRunOutput
+         x_test, y_test, fractions, epochs_table, fault_table, d_sched,
+         eval_table, strategy_id, sel_state, key) -> ScanRunOutput
     where epochs_table is (T, N) int32 (see engine.schedule tables),
-    d_sched is (T,) int32 Power-of-Choice candidate counts, eval_table is
-    the (T,) bool `schedule.eval_mask` row, and strategy_id picks from
-    spec.selectors (ignored when len == 1).
+    fault_table is the (T, N) int32 fault-code table (§19, zeros when
+    faults are off), d_sched is (T,) int32 Power-of-Choice candidate
+    counts, eval_table is the (T,) bool `schedule.eval_mask` row, and
+    strategy_id picks from spec.selectors (ignored when len == 1).
     """
     whole = (spec if spec.rounds_per_segment in (0, spec.rounds)
              else spec._replace(rounds_per_segment=0))
     segment = make_segment_step(model, ccfg, whole)
 
     def run_scan(params, xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
-                 x_test, y_test, fractions, epochs_table, d_sched,
-                 eval_table, strategy_id, sel_state, key) -> ScanRunOutput:
+                 x_test, y_test, fractions, epochs_table, fault_table,
+                 d_sched, eval_table, strategy_id, sel_state,
+                 key) -> ScanRunOutput:
         carry = SegmentCarry(params, sel_state, key,
                              jnp.zeros((), jnp.int32))
         out = segment(carry, jnp.asarray(0, jnp.int32), eval_table,
                       xs_all, ys_all, nv_all, sigma_all, x_val, y_val,
-                      x_test, y_test, fractions, epochs_table, d_sched,
-                      eval_table, strategy_id)
+                      x_test, y_test, fractions, epochs_table, fault_table,
+                      d_sched, eval_table, strategy_id)
         return ScanRunOutput(out.carry.params, out.carry.sel_state,
                              out.selections, out.epochs, out.sv,
                              out.utility_evals, out.sv_truncated,
                              out.test_acc, out.val_loss, out.granted,
-                             out.carry.eval_slot)
+                             out.quarantined, out.carry.eval_slot)
 
     return run_scan
 
@@ -448,7 +501,7 @@ def _jitted_segment_step_cached(model, ccfg, spec, donate, vmapped):
         # the carry and every operand are replica-stacked; only t0 (the
         # global round offset) and eval_any_seg (the OR of the replicas'
         # eval rows) are shared, keeping the eval cond unbatched
-        fn = jax.vmap(fn, in_axes=(0, None, None) + (0,) * 13)
+        fn = jax.vmap(fn, in_axes=(0, None, None) + (0,) * 14)
     return jax.jit(fn, donate_argnums=donate)
 
 
@@ -489,10 +542,14 @@ class RoundEngine:
                           jnp.asarray(nv_all), jnp.asarray(sigma_all),
                           jnp.asarray(x_val), jnp.asarray(y_val))
 
-    def step(self, params: PyTree, sel, epochs_k, round_key) -> RoundOutput:
+    def step(self, params: PyTree, sel, epochs_k, round_key,
+             fault_codes=None) -> RoundOutput:
         """Execute one full communication round as one dispatch."""
+        if fault_codes is None:
+            fault_codes = jnp.zeros((len(sel),), jnp.int32)
         return self._step(params, *self._operands, jnp.asarray(sel),
-                          jnp.asarray(epochs_k), round_key)
+                          jnp.asarray(epochs_k), round_key,
+                          jnp.asarray(fault_codes, jnp.int32))
 
     def upload_nbytes_per_client(self, params: PyTree) -> int:
         """Wire bytes of one client upload under this spec's codec."""

@@ -63,6 +63,15 @@ def build_epochs_table(cfg, s) -> np.ndarray:
     return np.full((cfg.rounds, cfg.n_clients), e, np.int32)
 
 
+def build_fault_table(cfg, s) -> np.ndarray:
+    """(T, N) int32 fault codes for a scan run (§19); zeros when faults
+    are off so the operand slot keeps one uniform signature per shape —
+    the codes are dead operands in clean traces and get DCE'd."""
+    if s.fault_table is not None:
+        return np.asarray(s.fault_table, np.int32)
+    return np.zeros((cfg.rounds, cfg.n_clients), np.int32)
+
+
 def scan_operands(cfg, s) -> tuple:
     """The positional operands of a solo run's `jitted_run_scan` call,
     everything after the leading `params`: (xs, ..., sel_state, key).
@@ -72,6 +81,7 @@ def scan_operands(cfg, s) -> tuple:
     return (s.xs, s.ys, s.n_valid, jnp.asarray(s.sigma_k_all),
             s.x_val, s.y_val, s.x_test, s.y_test, jnp.asarray(s.fractions),
             jnp.asarray(build_epochs_table(cfg, s)),
+            jnp.asarray(build_fault_table(cfg, s)),
             jnp.asarray(poc_d_schedule(s.sel_spec, cfg.rounds)),
             jnp.asarray(eval_mask(cfg.rounds, cfg.eval_every)),
             jnp.asarray(0, jnp.int32), s.sel_state, s.key)
@@ -93,7 +103,9 @@ def make_scan_spec(cfg, selector_specs: tuple, *, live_tap: bool = False,
                       shapley_max_iters=max_iters,
                       sv_chunk=cfg.sv_chunk,
                       upload_codec=cfg.upload_codec,
-                      client_axis=client_axis)
+                      client_axis=client_axis,
+                      faults=cfg.faults, quarantine=cfg.quarantine,
+                      quarantine_z=cfg.quarantine_z)
     # eval_every is NOT in the spec: the cadence is a (T,) bool operand
     # (schedule.eval_mask), so one executable serves every cadence
     return ScanSpec(round=rspec, selectors=tuple(selector_specs),
@@ -161,6 +173,7 @@ def results_from_scan(cfg, s, out, *, wall_time_s: float, seed: int,
         dispatches=dispatches,
         compile_time_s=compile_time_s,
         execute_time_s=max(wall_time_s - compile_time_s, 0.0),
+        quarantined_total=int(np.asarray(out.quarantined).sum()),
     )
 
 
@@ -211,6 +224,8 @@ def _sharded_scan_batch(cfg, s, mesh):
         fractions=jnp.asarray(s.fractions, jnp.float32)[None],
         epochs_tables=jnp.asarray(
             pad_rows(build_epochs_table(cfg, s), axis=1))[None],
+        fault_tables=jnp.asarray(
+            pad_rows(build_fault_table(cfg, s), axis=1))[None],
         d_scheds=jnp.asarray(poc_d_schedule(s.sel_spec, cfg.rounds))[None],
         eval_masks=jnp.asarray(emask_fn(cfg.rounds, cfg.eval_every))[None],
         strategy_ids=jnp.zeros((1,), jnp.int32))

@@ -1,0 +1,28 @@
+"""repro.faults — deterministic fault injection + cohort hardening.
+
+DESIGN.md §19.  A `FaultSpec` declares client-level faults (NaN/Inf
+updates, sign-flip/scaled byzantine updates, mid-round crash ⇒ dropout)
+that `setup_run` pre-draws into a (T, N) int32 code table on the frozen
+host rng stream — the same pattern as the `straggler_rev=1` epochs
+table — so loop/batched/scan engines consume identical fault streams.
+`harden_cohort` is the shared in-round stage: inject faults into the
+trained cohort, screen the decoded deltas (finite-check + robust
+median/MAD norm cutoff), and mask quarantined clients out of
+aggregation, the byte ledger, and the SV walks.
+"""
+from repro.faults.spec import (
+    CODE_CRASH, CODE_INF, CODE_NAN, CODE_NONE, CODE_SCALE, CODE_SIGN_FLIP,
+    FAULT_CODES, FAULT_KINDS, FaultSpec,
+)
+from repro.faults.table import draw_fault_table
+from repro.faults.quarantine import (
+    HardenedCohort, TINY_WEIGHT, apply_faults, harden_cohort, jitted_harden,
+    masked_average, screen_cohort,
+)
+
+__all__ = [
+    "CODE_CRASH", "CODE_INF", "CODE_NAN", "CODE_NONE", "CODE_SCALE",
+    "CODE_SIGN_FLIP", "FAULT_CODES", "FAULT_KINDS", "FaultSpec",
+    "HardenedCohort", "TINY_WEIGHT", "apply_faults", "draw_fault_table",
+    "harden_cohort", "jitted_harden", "masked_average", "screen_cohort",
+]

@@ -1,0 +1,147 @@
+"""Cohort hardening: fault injection, the quarantine screen, masked SV
+weights, and masked aggregation — one pure traceable pipeline shared by
+every engine (DESIGN.md §19).
+
+Identity contract: with `faults is None` and `quarantine False`,
+`harden_cohort` is a static passthrough (zero ops).  With the screen ON
+over a clean cohort, every mask is all-True and each `jnp.where` is an
+elementwise bitwise identity, so quarantine-on-clean == quarantine-off
+bitwise (pinned in tests/test_faults.py).
+
+SV-masking scheme: quarantined rows are substituted with the previous
+global params (delta == 0) and given the weight TINY_WEIGHT = 2^-100.
+In f32 accumulation TINY_WEIGHT is exactly absorbed by any honest
+weight >= 1, so prefix averages over honest prefixes are bitwise as if
+the quarantined row were absent, while all-masked prefixes degenerate
+to w_prev (utility == the round's v0) rather than NaN.  Post-hoc the
+quarantined SV entries are zeroed.  No prefix kernel changes needed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import normalized_weights, weighted_average
+from repro.faults.spec import (
+    CODE_CRASH, CODE_INF, CODE_NAN, CODE_NONE, CODE_SCALE, CODE_SIGN_FLIP,
+    FaultSpec,
+)
+
+# smallest "still participating" SV weight: exactly absorbed (f32) when
+# any honest weight >= 1 shares the prefix, yet keeps all-masked
+# prefixes well-defined (average == w_prev) instead of 0/0 NaN
+TINY_WEIGHT = 2.0 ** -100
+
+
+class HardenedCohort(NamedTuple):
+    stacked: Any          # cohort updates, quarantined rows := w_prev
+    n_k_agg: jax.Array    # (M,) aggregation weights, quarantined := 0
+    n_k_sv: jax.Array     # (M,) SV-walk weights, quarantined := TINY_WEIGHT
+    ok: jax.Array         # (M,) bool — survived injection + screen
+    quarantined: jax.Array  # () int32 count of masked rows
+
+
+def _per_row(a: jax.Array, like: jax.Array) -> jax.Array:
+    """Broadcast an (M,) vector against an (M, ...) stacked leaf."""
+    return a.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
+def apply_faults(stacked, params, codes: jax.Array, scale: float):
+    """Inject the coded faults into a stacked cohort of client params.
+
+    codes is the (M,) int32 gather of the fault table at the selected
+    clients.  Code-0 (and CRASH — payload intact, masked later) rows
+    pass through bitwise untouched: the guard matters because even
+    `p + (w - p) * 1.0` is not bitwise `w` in f32.
+    """
+
+    def leaf(w, p):
+        c = _per_row(codes, w)
+        d = w - p[None]
+        factor = jnp.where(c == CODE_SIGN_FLIP, -scale,
+                           jnp.where(c == CODE_SCALE, scale, 1.0)).astype(w.dtype)
+        faulty = p[None] + d * factor
+        faulty = jnp.where(c == CODE_NAN, jnp.asarray(jnp.nan, w.dtype), faulty)
+        faulty = jnp.where(c == CODE_INF, jnp.asarray(jnp.inf, w.dtype), faulty)
+        untouched = (c == CODE_NONE) | (c == CODE_CRASH)
+        return jnp.where(untouched, w, faulty)
+
+    return jax.tree.map(leaf, stacked, params)
+
+
+def screen_cohort(stacked, params, *, z: float,
+                  rel_floor: float = 0.1) -> jax.Array:
+    """(M,) bool quarantine screen over decoded cohort deltas.
+
+    Two tests per client: every leaf entry finite, and the delta L2 norm
+    under a robust cutoff `median + z * (1.4826*MAD + rel_floor*median
+    + 1e-6)` computed over the *finite* norms (nanmedian).  The MAD term
+    adapts to the cohort's spread; the rel_floor and epsilon terms keep
+    the cutoff permissive when honest norms are tightly clustered or
+    near zero.  An all-non-finite cohort yields a NaN cutoff, so every
+    client fails the comparison — all quarantined, as it should be.
+    Deterministic: no rng draws.
+    """
+    ws, ps = jax.tree.leaves(stacked), jax.tree.leaves(params)
+    m = ws[0].shape[0]
+    sq = jnp.zeros((m,), jnp.float32)
+    finite = jnp.ones((m,), bool)
+    for w, p in zip(ws, ps):
+        d = (w - p[None]).reshape(m, -1).astype(jnp.float32)
+        finite = finite & jnp.isfinite(d).all(axis=1)
+        sq = sq + jnp.sum(d * d, axis=1)
+    norm = jnp.sqrt(sq)
+    masked = jnp.where(finite, norm, jnp.nan)
+    med = jnp.nanmedian(masked)
+    mad = jnp.nanmedian(jnp.abs(masked - med))
+    cutoff = med + z * (1.4826 * mad + rel_floor * med + 1e-6)
+    return finite & (norm <= cutoff)
+
+
+def harden_cohort(stacked, params, n_k_sel: jax.Array, codes: jax.Array, *,
+                  faults: Optional[FaultSpec], quarantine: bool,
+                  z: float) -> HardenedCohort:
+    """Inject + screen + mask.  Static passthrough when both are off."""
+    m = n_k_sel.shape[0]
+    if faults is None and not quarantine:
+        return HardenedCohort(stacked, n_k_sel, n_k_sel,
+                              jnp.ones((m,), bool), jnp.zeros((), jnp.int32))
+    if faults is not None:
+        stacked = apply_faults(stacked, params, codes, faults.scale)
+        ok = codes != CODE_CRASH
+    else:
+        ok = jnp.ones((m,), bool)
+    if quarantine:
+        ok = ok & screen_cohort(stacked, params, z=z)
+    quarantined = jnp.sum(jnp.logical_not(ok).astype(jnp.int32))
+    # substitute masked rows with w_prev BEFORE aggregation/SV: a NaN row
+    # would otherwise poison `weighted_average` through 0 * NaN = NaN
+    stacked = jax.tree.map(
+        lambda w, p: jnp.where(_per_row(ok, w), w, p[None]), stacked, params)
+    n_k_agg = jnp.where(ok, n_k_sel, jnp.zeros((), n_k_sel.dtype))
+    n_k_sv = jnp.where(ok, n_k_sel, jnp.asarray(TINY_WEIGHT, n_k_sel.dtype))
+    return HardenedCohort(stacked, n_k_agg, n_k_sv, ok, quarantined)
+
+
+def masked_average(stacked, n_k_agg: jax.Array, ok: jax.Array, params):
+    """Aggregate the hardened cohort; an all-quarantined round keeps the
+    previous global params (normalized_weights would yield a zero sum)."""
+    agg = weighted_average(stacked, normalized_weights(n_k_agg))
+    any_ok = jnp.any(ok)
+    return jax.tree.map(lambda a, p: jnp.where(any_ok, a, p), agg, params)
+
+
+@functools.lru_cache(maxsize=16)
+def _jitted_harden_cached(faults: Optional[FaultSpec], quarantine: bool,
+                          z: float):
+    return jax.jit(functools.partial(
+        harden_cohort, faults=faults, quarantine=quarantine, z=z))
+
+
+def jitted_harden(faults: Optional[FaultSpec], quarantine: bool, z: float):
+    """Cached jitted `harden_cohort` for the host loop engine, so every
+    engine runs the exact same hardening ops."""
+    return _jitted_harden_cached(faults, quarantine, z)

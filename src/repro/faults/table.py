@@ -1,0 +1,32 @@
+"""Pre-drawn (T, N) fault-code tables on the frozen host rng stream.
+
+The table is drawn once in `setup_run` — strictly AFTER every existing
+draw and gated on `cfg.faults is not None`, so fault-free configs keep
+a bitwise-identical rng stream (same discipline as the straggler_rev=1
+epochs table, DESIGN.md §9).  All three engines then *read* the same
+table: the loop engine indexes it on the host, the scan engines thread
+it as a per-round operand row.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.faults.spec import FAULT_CODES, FaultSpec
+
+
+def draw_fault_table(spec: FaultSpec, rounds: int, n_clients: int,
+                     rng: np.random.Generator) -> np.ndarray:
+    """(rounds, n_clients) int32 fault codes; 0 = honest.
+
+    Two rng draws per table (fire mask, kind choice) regardless of how
+    many entries actually fire, so the stream position depends only on
+    the table shape — never on the fault outcome.
+    """
+    spec.validate()
+    codes = np.asarray([FAULT_CODES[k] for k in spec.kinds], np.int32)
+    fire = rng.random((rounds, n_clients)) < spec.rate
+    idx = rng.integers(0, len(codes), size=(rounds, n_clients))
+    table = np.where(fire, codes[idx], 0).astype(np.int32)
+    if spec.start_round > 0:
+        table[: spec.start_round] = 0
+    return table

@@ -74,6 +74,12 @@ class FLConfig:
     dirichlet_alpha: float = 1e-4
     straggler_frac: float = 0.0  # x
     privacy_sigma: float = 0.0   # sigma
+    # first-class privacy-noise grid axis (related repo's `noise_level`,
+    # ROADMAP scenario diversity): each client gets an EXTRA uniform
+    # [0, noise_level) update-noise sigma, folded into its per-client
+    # sigma on the host before the run so the on-device round body is
+    # unchanged.  0.0 (default) draws nothing — rng-stream neutral.
+    noise_level: float = 0.0
     # random-straggler E_k stream revision (DESIGN.md §12):
     #   1 (default) — all engines draw the whole (T, N) budget table up
     #     front (engine.schedule.straggler_epochs_table), so loop/batched/
@@ -105,6 +111,17 @@ class FLConfig:
     # upload compression (paper Related-Work contrast; see
     # federated/compression.py): applied to the client->PS delta
     upload_codec: str = "identity"
+    # fault injection + hardened execution (repro.faults, DESIGN.md §19):
+    # `faults` (a repro.faults.FaultSpec) pre-draws a (T, N) fault-code
+    # table in setup_run — NaN/Inf poison, sign-flip/scaled byzantine
+    # updates, mid-round crash dropout — consumed identically by all
+    # engines; `quarantine` enables the in-round screen that masks
+    # non-finite / norm-outlier updates out of aggregation, SV walks, and
+    # the byte ledger.  Quarantine-on over a clean run is bit-identical
+    # to off.  All three are grid-static (one executable per setting).
+    faults: Optional[Any] = None
+    quarantine: bool = False
+    quarantine_z: float = 8.0
     # bookkeeping
     eval_every: int = 5
     seed: int = 0
@@ -139,6 +156,9 @@ class FLResult(NamedTuple):
     # headline timing no longer silently includes first-dispatch compiles.
     compile_time_s: float = 0.0
     execute_time_s: float = 0.0
+    # total cohort rows masked by the fault/quarantine stage (§19); 0 on
+    # fault-free runs and whenever hardening is off
+    quarantined_total: int = 0
 
 
 def _pad_clients(x, y, parts):
@@ -212,6 +232,8 @@ class RunSetup(NamedTuple):
     # (T, N) pre-drawn random-straggler budgets (straggler_rev >= 1 only;
     # None under a schedule, without stragglers, or at straggler_rev=0)
     epochs_table: Any = None
+    # (T, N) pre-drawn int32 fault-code table (cfg.faults only, §19)
+    fault_table: Any = None
 
 
 def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
@@ -291,6 +313,26 @@ def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
             rng, cfg.rounds, cfg.n_clients, straggler_ids,
             cfg.client.epochs)
 
+    # ---- noise_level: extra per-client update-noise sigma (gated) -------
+    # Folded into sigma_k_all on the host so the device round body is
+    # untouched; sqrt(sigma^2 + 0^2) is NOT bitwise sigma in f32, hence
+    # the gate — noise_level=0.0 configs keep the exact legacy sigmas
+    # AND an untouched rng stream.
+    if cfg.noise_level > 0:
+        extra = rng.uniform(0.0, cfg.noise_level, cfg.n_clients)
+        sigma_k_all = np.sqrt(sigma_k_all.astype(np.float64) ** 2
+                              + extra ** 2).astype(np.float32)
+
+    # ---- faults: pre-draw the (T, N) fault-code table (gated, §19) ------
+    # Same discipline as the straggler table: drawn strictly AFTER every
+    # other consumer of `rng`, gated on cfg.faults, so fault-free configs
+    # are rng-stream (and therefore bitwise) unchanged.
+    fault_table = None
+    if cfg.faults is not None:
+        from repro.faults import draw_fault_table
+        fault_table = draw_fault_table(cfg.faults, cfg.rounds,
+                                       cfg.n_clients, rng)
+
     return RunSetup(
         data=data, model=model, rng=rng, key=key, fractions=fractions,
         xs=xs, ys=ys, n_valid=n_valid, n_k_all=n_k_all,
@@ -299,6 +341,7 @@ def setup_run(cfg: FLConfig, data: Optional[SynthDataset] = None,
         x_val=jnp.asarray(data.x_val), y_val=jnp.asarray(data.y_val),
         x_test=jnp.asarray(data.x_test), y_test=jnp.asarray(data.y_test),
         model_bytes=model_bytes, clock=clock, epochs_table=epochs_table,
+        fault_table=fault_table,
     )
 
 
@@ -328,7 +371,9 @@ def _make_round_engine(cfg: FLConfig, s: RunSetup, needs_sv: bool,
     from repro.engine.round_engine import RoundEngine, RoundSpec
     spec = RoundSpec(needs_sv=needs_sv, shapley_impl=cfg.shapley_impl,
                      shapley_eps=cfg.shapley_eps, shapley_max_iters=max_iters,
-                     sv_chunk=cfg.sv_chunk, upload_codec=cfg.upload_codec)
+                     sv_chunk=cfg.sv_chunk, upload_codec=cfg.upload_codec,
+                     faults=cfg.faults, quarantine=cfg.quarantine,
+                     quarantine_z=cfg.quarantine_z)
     return RoundEngine(s.model, cfg.client, spec, s.xs, s.ys, s.n_valid,
                        jnp.asarray(s.sigma_k_all), s.x_val, s.y_val)
 
@@ -387,6 +432,20 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
     needs_sv = sel_spec.uses_shapley
     max_iters = cfg.shapley_max_iters or 50 * cfg.m
 
+    # §19 hardening for the host engines: the loop engine runs the exact
+    # same jitted harden_cohort ops the fused/scan engines trace inline,
+    # so all engines agree on what gets quarantined
+    hardened = cfg.faults is not None or cfg.quarantine
+    harden = None
+    if hardened:
+        from repro.faults import jitted_harden
+        harden = jitted_harden(cfg.faults, cfg.quarantine, cfg.quarantine_z)
+
+    def round_codes(sel, t):
+        if s.fault_table is not None:
+            return s.fault_table[t][np.asarray(sel)]
+        return np.zeros(len(sel), np.int32)
+
     engine = None
     codec_bytes = s.model_bytes
     if cfg.engine == "batched":
@@ -407,6 +466,7 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
     test_acc, val_loss_hist, selections = [], [], []
     total_evals = 0
     upload_bytes = download_bytes = 0
+    quarantined_total = 0
     dispatches = 0
     sv_rounds = trunc_rounds = 0   # telemetry-only truncation counters
     vclock = VirtualClock() if s.clock is not None else None
@@ -434,22 +494,32 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
             evals_round = 0
             trunc_round = None         # device bool; read only with telemetry
             round_upload = 0
+            q_round = 0
             if engine is not None:
                 # ---- fused round: ONE dispatch for train+codec+SV+average ----
-                out = engine.step(params, sel, epochs_k, round_key)
+                codes = round_codes(sel, t) if hardened else None
+                out = engine.step(params, sel, epochs_k, round_key,
+                                  fault_codes=codes)
                 params = out.params
                 if needs_sv:
                     sv_round = out.sv
                     evals_round = int(out.utility_evals)
                     total_evals += evals_round
                     trunc_round = out.sv_truncated
-                round_upload = codec_bytes * len(sel)
+                if hardened:
+                    # charge only survivors: quarantined uploads never
+                    # reach the PS (crash) or are discarded at ingest
+                    q_round = int(out.quarantined)
+                    quarantined_total += q_round
+                    round_upload = codec_bytes * int(np.asarray(out.ok).sum())
+                else:
+                    round_upload = codec_bytes * len(sel)
                 upload_bytes += round_upload
                 dispatches += 1
             else:
                 # ---- legacy loop: ClientUpdate at each selected client -------
                 ckeys = jax.random.split(round_key, len(sel) + 1)
-                updates = []
+                updates, nbytes_list = [], []
                 for i, k_id in enumerate(sel):
                     upd = client_update(
                         model, cfg.client, params, s.xs[k_id], s.ys[k_id],
@@ -460,13 +530,28 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
                                                       params)
                     else:
                         nbytes = s.model_bytes
-                    round_upload += nbytes
+                    nbytes_list.append(nbytes)
                     updates.append(upd)
-                upload_bytes += round_upload
                 dispatches += len(sel)
 
                 stacked = tree_stack(updates)
                 n_k_sel = s.n_k_all[jnp.asarray(sel)]
+
+                # ---- §19 hardening: inject + screen + mask -------------------
+                h = None
+                n_k_sv = n_k_sel
+                if hardened:
+                    codes = jnp.asarray(round_codes(sel, t), jnp.int32)
+                    h = harden(stacked, params, n_k_sel, codes)
+                    stacked, n_k_sv = h.stacked, h.n_k_sv
+                    ok_np = np.asarray(h.ok)
+                    q_round = int(h.quarantined)
+                    quarantined_total += q_round
+                    round_upload = int(sum(
+                        nb for nb, good in zip(nbytes_list, ok_np) if good))
+                    dispatches += 1
+                else:
+                    round_upload = int(sum(nbytes_list))
 
                 # ---- GTG-Shapley at the PS (Alg. 2 / device variants) --------
                 if needs_sv:
@@ -475,27 +560,36 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
                             gtg_shapley_streaming,
                         )
                         sv_round, stats = gtg_shapley_streaming(
-                            stacked, n_k_sel, params, utility_fn,
+                            stacked, n_k_sv, params, utility_fn,
                             batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
                             n_perms=max_iters, sv_chunk=cfg.sv_chunk)
                     elif cfg.shapley_impl == "batched":
                         from repro.core.shapley_batched import gtg_shapley_batched
                         sv_round, stats = gtg_shapley_batched(
-                            stacked, n_k_sel, params, utility_fn,
+                            stacked, n_k_sv, params, utility_fn,
                             batched_utility_fn, ckeys[-1], eps=cfg.shapley_eps,
                             n_perms=max_iters)
                     else:
                         sv_round, stats = gtg_shapley(
-                            stacked, n_k_sel, params, utility_fn, ckeys[-1],
+                            stacked, n_k_sv, params, utility_fn, ckeys[-1],
                             eps=cfg.shapley_eps, max_iters=max_iters)
                     evals_round = int(stats.utility_evals)
                     total_evals += evals_round
                     trunc_round = stats.truncated_round
                     dispatches += 1
+                    if h is not None:
+                        sv_round = jnp.where(h.ok, sv_round,
+                                             jnp.zeros((), sv_round.dtype))
 
                 # ---- ModelAverage (Alg. 1 line 9) ----------------------------
-                params = weighted_average(stacked, normalized_weights(n_k_sel))
+                if h is not None:
+                    from repro.faults import masked_average
+                    params = masked_average(stacked, h.n_k_agg, h.ok, params)
+                else:
+                    params = weighted_average(stacked,
+                                              normalized_weights(n_k_sel))
                 dispatches += 1
+                upload_bytes += round_upload
 
             download_bytes += s.model_bytes * len(sel)  # w^t broadcast
             if vclock is not None:
@@ -522,6 +616,8 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
                               utility_evals=evals_round, sv_truncated=truncated,
                               upload_bytes=round_upload,
                               download_bytes=s.model_bytes * len(sel))
+                if hardened:
+                    fields["quarantined"] = q_round
                 if sv_round is not None:
                     fields["sv"] = np.asarray(sv_round)
                 telemetry.emit("round_metrics", **fields)
@@ -559,6 +655,7 @@ def run_federated(cfg: FLConfig, data: Optional[SynthDataset] = None,
         dispatches=dispatches,
         compile_time_s=compile_s,
         execute_time_s=max(wall - compile_s, 0.0),
+        quarantined_total=quarantined_total,
     )
 
 

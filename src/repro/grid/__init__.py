@@ -18,6 +18,6 @@ benchmark trick into the production execution path for such grids
   * `runner`    — `run_grid`, the single entry point.
 """
 from repro.grid.runner import run_grid
-from repro.grid.spec import GridCell, GridResult, GridSpec
+from repro.grid.spec import CellFailure, GridCell, GridResult, GridSpec
 
-__all__ = ["GridCell", "GridResult", "GridSpec", "run_grid"]
+__all__ = ["CellFailure", "GridCell", "GridResult", "GridSpec", "run_grid"]

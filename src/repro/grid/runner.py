@@ -23,7 +23,7 @@ from repro.grid.partition import (
     Partition, PartitionReport, interleave, partition_cells,
 )
 from repro.grid.segments import ReplicaBatch, run_segments, segment_plan
-from repro.grid.spec import GridResult, GridSpec
+from repro.grid.spec import CellFailure, GridResult, GridSpec
 
 
 def _pad_cap(arr: np.ndarray, cap: int) -> np.ndarray:
@@ -40,7 +40,7 @@ def _build_batch(part: Partition, cfgs, setups, sel_specs,
     may have different per-client capacities (each seed re-partitions its
     data); stacks pad to the partition max — padding is never read because
     minibatch indices are sampled below each client's n_valid."""
-    from repro.engine.scan_engine import build_epochs_table
+    from repro.engine.scan_engine import build_epochs_table, build_fault_table
 
     idxs = part.cell_indices
     sub = [setups[i] for i in idxs]
@@ -66,6 +66,8 @@ def _build_batch(part: Partition, cfgs, setups, sel_specs,
                                      for s in sub])),
         epochs_tables=jnp.asarray(stack([
             build_epochs_table(cfgs[i], setups[i]) for i in idxs])),
+        fault_tables=jnp.asarray(stack([
+            build_fault_table(cfgs[i], setups[i]) for i in idxs])),
         d_scheds=jnp.asarray(stack([
             poc_d_schedule(sel_specs[i], rounds) for i in idxs])),
         eval_masks=jnp.asarray(stack([
@@ -80,8 +82,9 @@ def _build_batch(part: Partition, cfgs, setups, sel_specs,
 # version-skew error instead of an opaque structure mismatch from
 # load_pytree.  1 = PR-3 (params, sel_state, key); 2 = + eval_slot
 # (DESIGN.md §13); 3 = + per-round `granted` cohort sizes in the segment
-# outputs (DESIGN.md §18).
-CARRY_FORMAT = 3
+# outputs (DESIGN.md §18); 4 = + per-round `quarantined` counts in the
+# segment outputs (DESIGN.md §19).
+CARRY_FORMAT = 4
 
 # Revision of the cell -> partition assignment rule.  Folded into the
 # checkpoint fingerprint because segment snapshots are tagged by
@@ -130,10 +133,21 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
              rounds_per_segment: int = 0,
              checkpoint_dir: Optional[str] = None, resume: bool = True,
              shard: bool = True, max_segments: Optional[int] = None,
-             compile_stats: bool = False,
-             telemetry=None) -> Optional[GridResult]:
+             compile_stats: bool = False, telemetry=None,
+             isolate_cells: bool = True, retries: int = 0,
+             retry_backoff_s: float = 0.05) -> Optional[GridResult]:
     """Execute a grid.  Returns None if `max_segments` stopped the run
     before completion (the checkpoints on disk are the resume point).
+
+    Graceful degradation (§19): with `isolate_cells=True` (default) a
+    partition whose dispatch raises no longer kills the sweep — its
+    cells come back as `CellFailure` entries (error + traceback payload,
+    one `cell_failed` telemetry event per cell) in `GridResult.results`
+    while every other partition completes normally.  Spec validation,
+    the segment plan, and checkpoint fingerprint checks still raise
+    up-front: those are caller errors, not cell failures.  `retries` /
+    `retry_backoff_s` pass through to `run_segments` for transient
+    per-segment retry before a partition is declared failed.
 
     * `rounds_per_segment=K` chains T/K dispatches of one compiled
       K-round segment per partition instead of a single whole-run scan —
@@ -210,80 +224,121 @@ def run_grid(spec: GridSpec, *, data=None, model=None,
     with trace_capture(telemetry, label="grid"):
         for pi, part in enumerate(partitions):
             t_part = time.perf_counter()
-            live = bool(telemetry is not None and telemetry.live_tap)
-            mesh = (make_run_mesh(len(part.cell_indices),
-                                  spec.base.clients_shards)
-                    if shard else None)
-            client_sharded = (mesh is not None
-                              and CLIENT_AXIS in mesh.axis_names)
-            scan_spec = make_scan_spec(
-                cfgs[part.cell_indices[0]], part.specs, live_tap=live,
-                client_axis=CLIENT_AXIS if client_sharded else None)._replace(
-                    rounds_per_segment=rounds_per_segment)
-            batch = _build_batch(part, cfgs, setups, sel_specs,
-                                 spec.base.rounds)
-            if client_sharded:
-                batch = pad_batch_clients(batch, spec.base.clients_shards)
-            if telemetry is not None:
-                telemetry.heartbeat(
-                    f"partition {pi + 1}/{len(partitions)} "
-                    f"({part.key.label}, {len(part.cell_indices)} cells)",
-                    force=True)
-            out, report = run_segments(
-                model, cfgs[part.cell_indices[0]].client, scan_spec, batch,
-                checkpoint_dir=checkpoint_dir, tag=f"p{pi}-", resume=resume,
-                max_segments=max_segments, mesh=mesh,
-                compile_stats=compile_stats, telemetry=telemetry)
-            compile_s += report.compile_time_s
-            peaks.append(report.peak_bytes)
-            cards.append(report.cost_card)
-            if out is None:
+            try:
+                live = bool(telemetry is not None and telemetry.live_tap)
+                mesh = (make_run_mesh(len(part.cell_indices),
+                                      spec.base.clients_shards)
+                        if shard else None)
+                client_sharded = (mesh is not None
+                                  and CLIENT_AXIS in mesh.axis_names)
+                scan_spec = make_scan_spec(
+                    cfgs[part.cell_indices[0]], part.specs, live_tap=live,
+                    client_axis=CLIENT_AXIS if client_sharded
+                    else None)._replace(
+                        rounds_per_segment=rounds_per_segment)
+                batch = _build_batch(part, cfgs, setups, sel_specs,
+                                     spec.base.rounds)
+                if client_sharded:
+                    batch = pad_batch_clients(batch,
+                                              spec.base.clients_shards)
                 if telemetry is not None:
                     telemetry.heartbeat(
-                        f"partition {pi + 1}: stopped at max_segments="
-                        f"{max_segments} ({report.dispatches} dispatched); "
-                        "checkpoints are the resume point", force=True)
-                return None
-            if client_sharded:
-                out = unpad_scan_output(out, spec.base.n_clients)
-            n_segments = report.n_segments
-            # the partition's cells ran fused: they share ITS duration (not
-            # the grid's running total, which would bill later partitions
-            # for earlier ones' work)
-            wall = time.perf_counter() - t_part
-            results = []
-            evals_total = 0
-            for j, idx in enumerate(part.cell_indices):
-                out_j = jax.tree.map(lambda x: x[j], out)
-                res = results_from_scan(
-                    cfgs[idx], setups[idx], out_j, wall_time_s=wall,
-                    seed=cfgs[idx].seed, dispatches=report.n_segments,
-                    uses_shapley=part.key.needs_sv,
-                    compile_time_s=report.compile_time_s)
-                evals_total += res.shapley_evals
-                results.append(res)
+                        f"partition {pi + 1}/{len(partitions)} "
+                        f"({part.key.label}, "
+                        f"{len(part.cell_indices)} cells)", force=True)
+                out, report = run_segments(
+                    model, cfgs[part.cell_indices[0]].client, scan_spec,
+                    batch, checkpoint_dir=checkpoint_dir, tag=f"p{pi}-",
+                    resume=resume, max_segments=max_segments, mesh=mesh,
+                    compile_stats=compile_stats, telemetry=telemetry,
+                    retries=retries, retry_backoff_s=retry_backoff_s)
+                compile_s += report.compile_time_s
+                peaks.append(report.peak_bytes)
+                cards.append(report.cost_card)
+                if out is None:
+                    if telemetry is not None:
+                        telemetry.heartbeat(
+                            f"partition {pi + 1}: stopped at max_segments="
+                            f"{max_segments} ({report.dispatches} "
+                            "dispatched); checkpoints are the resume "
+                            "point", force=True)
+                    return None
+                if client_sharded:
+                    out = unpad_scan_output(out, spec.base.n_clients)
+                n_segments = report.n_segments
+                # the partition's cells ran fused: they share ITS duration
+                # (not the grid's running total, which would bill later
+                # partitions for earlier ones' work)
+                wall = time.perf_counter() - t_part
+                results = []
+                evals_total = 0
+                for j, idx in enumerate(part.cell_indices):
+                    out_j = jax.tree.map(lambda x: x[j], out)
+                    res = results_from_scan(
+                        cfgs[idx], setups[idx], out_j, wall_time_s=wall,
+                        seed=cfgs[idx].seed, dispatches=report.n_segments,
+                        uses_shapley=part.key.needs_sv,
+                        compile_time_s=report.compile_time_s)
+                    evals_total += res.shapley_evals
+                    results.append(res)
+                    if telemetry is not None:
+                        from repro.engine.schedule import eval_mask as _emask
+                        from repro.federated.compression import codec_nbytes
+                        from repro.telemetry.metrics import emit_scan_rounds
+                        emit_scan_rounds(
+                            telemetry, out_j,
+                            uses_shapley=part.key.needs_sv,
+                            codec_bytes=codec_nbytes(
+                                cfgs[idx].upload_codec, setups[idx].params),
+                            model_bytes=setups[idx].model_bytes,
+                            emask=_emask(spec.base.rounds,
+                                         cfgs[idx].eval_every),
+                            cell=idx)
+                per_partition.append(results)
+                reports.append(PartitionReport(
+                    label=part.key.label, cell_indices=part.cell_indices,
+                    needs_sv=part.key.needs_sv,
+                    uses_local_losses=part.key.uses_local_losses,
+                    n_strategies=len(part.specs),
+                    dispatches=report.dispatches,
+                    shapley_evals=evals_total,
+                    bytes_resident=report.bytes_resident,
+                    flops_per_dispatch=report.flops_per_dispatch,
+                    peak_bytes=report.peak_bytes,
+                    upload_codec=part.key.upload_codec))
+            except Exception as e:
+                # cell isolation (§19): a raising partition degrades to
+                # per-cell CellFailure entries instead of killing the
+                # sweep.  KeyboardInterrupt (BaseException) still aborts.
+                if not isolate_cells:
+                    raise
+                import traceback as _tb
+                tb = _tb.format_exc()
+                failures = []
+                for idx in part.cell_indices:
+                    if telemetry is not None:
+                        telemetry.emit(
+                            "cell_failed", cell=idx, error=repr(e),
+                            selector=cfgs[idx].selector,
+                            seed=cfgs[idx].seed, partition=part.key.label)
+                    failures.append(CellFailure(
+                        cell=idx, selector=cfgs[idx].selector,
+                        seed=cfgs[idx].seed, partition=part.key.label,
+                        error=repr(e), traceback=tb))
+                per_partition.append(failures)
+                reports.append(PartitionReport(
+                    label=part.key.label, cell_indices=part.cell_indices,
+                    needs_sv=part.key.needs_sv,
+                    uses_local_losses=part.key.uses_local_losses,
+                    n_strategies=len(part.specs), dispatches=0,
+                    shapley_evals=0, bytes_resident=0,
+                    upload_codec=part.key.upload_codec))
                 if telemetry is not None:
-                    from repro.engine.schedule import eval_mask as _emask
-                    from repro.federated.compression import codec_nbytes
-                    from repro.telemetry.metrics import emit_scan_rounds
-                    emit_scan_rounds(
-                        telemetry, out_j, uses_shapley=part.key.needs_sv,
-                        codec_bytes=codec_nbytes(cfgs[idx].upload_codec,
-                                                 setups[idx].params),
-                        model_bytes=setups[idx].model_bytes,
-                        emask=_emask(spec.base.rounds, cfgs[idx].eval_every),
-                        cell=idx)
-            per_partition.append(results)
-            reports.append(PartitionReport(
-                label=part.key.label, cell_indices=part.cell_indices,
-                needs_sv=part.key.needs_sv,
-                uses_local_losses=part.key.uses_local_losses,
-                n_strategies=len(part.specs), dispatches=report.dispatches,
-                shapley_evals=evals_total,
-                bytes_resident=report.bytes_resident,
-                flops_per_dispatch=report.flops_per_dispatch,
-                peak_bytes=report.peak_bytes,
-                upload_codec=part.key.upload_codec))
+                    telemetry.heartbeat(
+                        f"partition {pi + 1}/{len(partitions)} FAILED "
+                        f"({part.key.label}): {e!r} — "
+                        f"{len(part.cell_indices)} cells degraded",
+                        force=True)
 
     results = interleave(len(spec.cells), partitions, per_partition)
     wall = time.perf_counter() - t_start

@@ -29,7 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.ckpt import load_carry, save_carry
+from repro.checkpoint.ckpt import (
+    CheckpointCorruptError, load_carry, save_carry,
+)
 from repro.engine.round_engine import (
     ScanRunOutput, ScanSpec, SegmentCarry, jitted_segment_step,
 )
@@ -50,6 +52,7 @@ class ReplicaBatch(NamedTuple):
     y_test: jax.Array
     fractions: jax.Array
     epochs_tables: jax.Array     # (R, T, N) int32
+    fault_tables: jax.Array      # (R, T, N) int32 fault codes (§19)
     d_scheds: jax.Array          # (R, T) int32
     eval_masks: jax.Array        # (R, T) bool per-replica eval cadences
     strategy_ids: jax.Array      # (R,) int32 index into the partition specs
@@ -102,6 +105,7 @@ def _out_like(spec: ScanSpec, n_replicas: int, k_rounds: int) -> dict:
         "test_acc": np.zeros((r, k), np.float32),
         "val_loss": np.zeros((r, k), np.float32),
         "granted": np.zeros((r, k), np.int32),
+        "quarantined": np.zeros((r, k), np.int32),
     }
 
 
@@ -129,14 +133,15 @@ def _to_out_dict(out) -> dict:
         "utility_evals": out.utility_evals,
         "sv_truncated": out.sv_truncated,
         "test_acc": out.test_acc, "val_loss": out.val_loss,
-        "granted": out.granted,
+        "granted": out.granted, "quarantined": out.quarantined,
     }
 
 
 def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
                  checkpoint_dir: Optional[str] = None, tag: str = "",
                  resume: bool = True, max_segments: Optional[int] = None,
-                 mesh=None, compile_stats: bool = False, telemetry=None
+                 mesh=None, compile_stats: bool = False, telemetry=None,
+                 retries: int = 0, retry_backoff_s: float = 0.05
                  ) -> tuple[Optional[ScanRunOutput], SegmentRunReport]:
     """Drive one partition's replica batch through all T/K segments.
 
@@ -144,6 +149,16 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
     `max_segments` stopped the run early (the checkpoint prefix on disk
     is then the resume point — used by the kill/restart tests and by any
     externally killed run).
+
+    Hardened resume (§19): a checkpoint that fails integrity checks
+    (truncated write, digest mismatch) is treated as absent — the run
+    falls back to the last intact segment boundary, emits a
+    `checkpoint_corrupt` event, and recomputes forward (overwriting the
+    bad file at the next boundary).  `retries` > 0 additionally retries
+    a raising segment dispatch up to that many times with exponential
+    backoff (`retry_backoff_s` doubling per attempt), emitting a
+    `segment_retry` event per attempt — transient executor failures
+    (preempted device, flaky interconnect) stop killing 400-round runs.
 
     `telemetry` (default None: zero extra dispatches, async dispatch
     chain untouched) emits `segment_start`/`segment_end` events with the
@@ -190,11 +205,22 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
     start = 0
     out_like = _out_like(seg_spec, n_replicas, k_rounds)
     if checkpoint_dir and resume:
-        start = min(saved_segments(checkpoint_dir, tag), n_segments)
-        for seg in range(start):
-            snap = load_carry(_seg_path(checkpoint_dir, tag, seg),
-                              {"carry": carry, "out": out_like},
-                              telemetry=telemetry)
+        limit = min(saved_segments(checkpoint_dir, tag), n_segments)
+        start = limit
+        for seg in range(limit):
+            path = _seg_path(checkpoint_dir, tag, seg)
+            try:
+                snap = load_carry(path, {"carry": carry, "out": out_like},
+                                  telemetry=telemetry)
+            except CheckpointCorruptError as e:
+                # fall back to the last intact boundary; the rounds from
+                # here on are recomputed (bit-identical — same carry,
+                # same tables) and the bad file overwritten on the way
+                if telemetry is not None:
+                    telemetry.emit("checkpoint_corrupt", path=path,
+                                   segment=seg, tag=tag, error=str(e))
+                start = seg
+                break
             outs.append(snap["out"])
             carry = snap["carry"]
 
@@ -211,20 +237,35 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
         t0 = jnp.asarray(seg * k_rounds, jnp.int32)
         sl = slice(seg * k_rounds, (seg + 1) * k_rounds)
         args = (carry, t0, eval_any[sl], *operands,
-                batch.epochs_tables[:, sl], batch.d_scheds[:, sl],
-                batch.eval_masks[:, sl], batch.strategy_ids)
+                batch.epochs_tables[:, sl], batch.fault_tables[:, sl],
+                batch.d_scheds[:, sl], batch.eval_masks[:, sl],
+                batch.strategy_ids)
         if telemetry is not None:
             t_seg = time.perf_counter()
             telemetry.emit("segment_start", segment=seg,
                            t0=seg * k_rounds, rounds=k_rounds, tag=tag,
                            replicas=n_replicas)
-        with ctimer, live_sink(telemetry if live else None), \
-                stage("segment"):
-            out = step(*args)
-            if telemetry is not None:
-                # taps must land (and the segment be timed) before the
-                # next dispatch is enqueued
-                jax.block_until_ready(out.carry.params)
+        attempt = 0
+        while True:
+            try:
+                with ctimer, live_sink(telemetry if live else None), \
+                        stage("segment"):
+                    out = step(*args)
+                    if telemetry is not None or attempt > 0:
+                        # taps must land (and the segment be timed) before
+                        # the next dispatch is enqueued; under retry, force
+                        # async dispatch errors to surface HERE
+                        jax.block_until_ready(out.carry.params)
+                break
+            except Exception:
+                # KeyboardInterrupt is BaseException — never swallowed
+                if attempt >= retries:
+                    raise
+                attempt += 1
+                if telemetry is not None:
+                    telemetry.emit("segment_retry", segment=seg,
+                                   attempt=attempt, tag=tag)
+                time.sleep(retry_backoff_s * (2 ** (attempt - 1)))
         if (compile_stats or telemetry is not None) and seg == start:
             # the step's cost card (one cached AOT probe, §17): flops,
             # bytes, per-device peak memory, roofline terms
@@ -265,7 +306,8 @@ def run_segments(model, ccfg, spec: ScanSpec, batch: ReplicaBatch, *,
         sv=stacked["sv"], utility_evals=stacked["utility_evals"],
         sv_truncated=stacked["sv_truncated"],
         test_acc=stacked["test_acc"], val_loss=stacked["val_loss"],
-        granted=stacked["granted"], eval_count=carry.eval_slot)
+        granted=stacked["granted"], quarantined=stacked["quarantined"],
+        eval_count=carry.eval_slot)
     report = SegmentRunReport(n_segments, dispatched, start,
                               batch_bytes(batch), flops, ctimer.seconds,
                               peak_bytes, card)

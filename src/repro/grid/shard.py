@@ -58,12 +58,12 @@ __all__ = ["CLIENT_AXIS", "REPLICA_AXIS", "make_replica_mesh",
 @functools.lru_cache(maxsize=8)
 def _sharded_segment_step_cached(model, ccfg, spec: ScanSpec, mesh):
     fn = jax.vmap(make_segment_step(model, ccfg, spec),
-                  in_axes=(0, None, None) + (0,) * 13)
+                  in_axes=(0, None, None) + (0,) * 14)
     rep = NamedSharding(mesh, P(REPLICA_AXIS))   # leading-axis shard …
     full = NamedSharding(mesh, P())              # … t0 / eval_any replicated
     # pytree-prefix shardings: one leaf sharding covers a whole operand
     # subtree (carry pytree included)
-    in_shardings = (rep, full, full) + (rep,) * 13
+    in_shardings = (rep, full, full) + (rep,) * 14
     return jax.jit(fn, in_shardings=in_shardings, out_shardings=rep)
 
 
@@ -88,20 +88,22 @@ def _client_sharded_step_cached(model, ccfg, spec: ScanSpec, mesh):
     # names the client axis — a mismatch would deadlock or miscompute
     assert spec.round.client_axis == CLIENT_AXIS, spec.round.client_axis
     fn = jax.vmap(make_segment_step(model, ccfg, spec),
-                  in_axes=(0, None, None) + (0,) * 13)
+                  in_axes=(0, None, None) + (0,) * 14)
     rep = P(REPLICA_AXIS)
     rc = P(REPLICA_AXIS, CLIENT_AXIS)
     carry = _carry_specs()
     # operands after carry: t0, eval_any_seg, xs, ys, nv, sigma, x_val,
-    # y_val, x_test, y_test, fractions, epochs_tables, d_scheds,
-    # eval_masks, strategy_ids.  fractions stays replicated (exact (N,)
-    # vector, read whole by selection); epochs tables shard their
-    # trailing client axis.
+    # y_val, x_test, y_test, fractions, epochs_tables, fault_tables,
+    # d_scheds, eval_masks, strategy_ids.  fractions stays replicated
+    # (exact (N,) vector, read whole by selection); the epochs and fault
+    # tables shard their trailing client axis.
     in_specs = (carry, P(), P(), rc, rc, rc, rc, rep, rep, rep, rep, rep,
+                P(REPLICA_AXIS, None, CLIENT_AXIS),
                 P(REPLICA_AXIS, None, CLIENT_AXIS), rep, rep, rep)
     out_specs = SegmentOutput(carry=carry, selections=rep, epochs=rep,
                               sv=rep, utility_evals=rep, sv_truncated=rep,
-                              test_acc=rep, val_loss=rep, granted=rep)
+                              test_acc=rep, val_loss=rep, granted=rep,
+                              quarantined=rep)
     # check_rep=False: the round outputs ARE replicated over clients (the
     # psum-combined cohort is identical on every shard) but shard_map's
     # replication checker cannot prove it through the scan
@@ -146,9 +148,9 @@ def _pad_axis(x, axis: int, target: int):
 
 def pad_batch_clients(batch, shards: int):
     """Zero-pad every client-axis array of a ReplicaBatch to a multiple of
-    `shards`: data stacks (xs/ys/nv/sigma, axis 1), the epochs tables
-    (axis 2), and the (R, N) selector-state vectors.  Fractions and params
-    are untouched (replicated, exact-N)."""
+    `shards`: data stacks (xs/ys/nv/sigma, axis 1), the epochs and fault
+    tables (axis 2), and the (R, N) selector-state vectors.  Fractions
+    and params are untouched (replicated, exact-N)."""
     n = batch.xs.shape[1]
     n_pad = clients_padded(n, shards)
     if n_pad == n:
@@ -162,7 +164,8 @@ def pad_batch_clients(batch, shards: int):
         ys=_pad_axis(batch.ys, 1, n_pad),
         nv=_pad_axis(batch.nv, 1, n_pad),
         sigma=_pad_axis(batch.sigma, 1, n_pad),
-        epochs_tables=_pad_axis(batch.epochs_tables, 2, n_pad))
+        epochs_tables=_pad_axis(batch.epochs_tables, 2, n_pad),
+        fault_tables=_pad_axis(batch.fault_tables, 2, n_pad))
 
 
 def unpad_scan_output(out, n_clients: int):

@@ -31,6 +31,7 @@ STATIC_FIELDS = (
     "n_train", "n_val", "n_test",
     "shapley_eps", "shapley_max_iters", "shapley_impl", "sv_chunk",
     "clients_shards",
+    "faults", "quarantine", "quarantine_z",
 )
 
 def _freeze_overrides(ov) -> tuple:
@@ -109,6 +110,25 @@ class GridSpec:
         return cfgs
 
 
+@dataclasses.dataclass(frozen=True)
+class CellFailure:
+    """Degraded grid entry (§19): the cell's partition raised instead of
+    producing an FLResult.  Carries the error payload for triage; the
+    numeric class attributes keep naive aggregations (mean accuracy,
+    byte totals) well-defined without special-casing — NaN accuracy
+    drops out of mean/filters, zero bytes add nothing."""
+    cell: int                    # index into GridSpec.cells
+    selector: str
+    seed: int
+    partition: str               # PartitionKey.label of the failed dispatch
+    error: str                   # repr() of the raised exception
+    traceback: str
+    final_acc: float = float("nan")
+    shapley_evals: int = 0
+    upload_bytes: int = 0
+    download_bytes: int = 0
+
+
 @dataclasses.dataclass
 class GridResult:
     """Grid outputs in cell order, plus execution-shape bookkeeping."""
@@ -131,12 +151,21 @@ class GridResult:
                 if c.selector == selector]
 
     def acc_summary(self) -> dict:
-        """selector -> (mean, std) of final accuracy across its cells."""
+        """selector -> (mean, std) of final accuracy across its SURVIVING
+        cells (CellFailure entries are excluded; a selector whose cells
+        all failed is absent from the summary)."""
         out: dict = {}
         for c, r in zip(self.spec.cells, self.results):
+            if isinstance(r, CellFailure):
+                continue
             out.setdefault(c.selector, []).append(r.final_acc)
         return {k: (float(np.mean(v)), float(np.std(v)))
                 for k, v in out.items()}
+
+    @property
+    def failures(self) -> list:
+        """The grid's CellFailure entries (empty on a clean run)."""
+        return [r for r in self.results if isinstance(r, CellFailure)]
 
     @property
     def dispatches(self) -> int:

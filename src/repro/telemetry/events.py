@@ -59,6 +59,11 @@ REQUIRED_FIELDS: dict[str, tuple] = {
     "eval": ("round", "test_acc", "val_loss"),
     "checkpoint_save": ("path", "nbytes"),
     "checkpoint_load": ("path",),
+    # §19 fault/robustness stream: corrupted checkpoints detected at
+    # resume, bounded segment retries, and isolated grid-cell failures
+    "checkpoint_corrupt": ("path",),
+    "segment_retry": ("segment", "attempt"),
+    "cell_failed": ("cell", "error"),
     "run_end": ("wall_time_s",),
 }
 

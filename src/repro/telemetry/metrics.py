@@ -48,6 +48,9 @@ def emit_scan_rounds(tel, out, *, uses_shapley: bool, codec_bytes: int,
     # the loop engine's per-selected-client ledger (replicated.py)
     granted = (np.asarray(out.granted) if getattr(out, "granted", None)
                is not None else np.full((sels.shape[0],), m, np.int64))
+    # per-round quarantine counts (§19) — absent on pre-fault outputs
+    quar = getattr(out, "quarantined", None)
+    quar = np.asarray(quar) if quar is not None else None
     extra = {} if cell is None else {"cell": cell}
     for i in range(sels.shape[0]):
         t = t0 + i
@@ -58,6 +61,8 @@ def emit_scan_rounds(tel, out, *, uses_shapley: bool, codec_bytes: int,
             download_bytes=model_bytes * m, **extra)
         if uses_shapley:
             fields["sv"] = sv[i]
+        if quar is not None and quar[i]:
+            fields["quarantined"] = int(quar[i])
         tel.emit("round_metrics", **fields)
         if emask[t]:
             tel.emit("eval", round=int(t), test_acc=float(acc[i]),
@@ -70,7 +75,7 @@ def segment_counters(out, seconds: float) -> dict:
     trunc = np.asarray(out.sv_truncated)
     k_rounds = int(evals.shape[-1])
     n_replicas = int(evals.shape[0]) if evals.ndim > 1 else 1
-    return {
+    counters = {
         "rounds": k_rounds,
         "replicas": n_replicas,
         "seconds": seconds,
@@ -78,6 +83,10 @@ def segment_counters(out, seconds: float) -> dict:
         "utility_evals": int(evals.sum()),
         "sv_truncated_rounds": int(trunc.sum()),
     }
+    quar = getattr(out, "quarantined", None)
+    if quar is not None:
+        counters["quarantined"] = int(np.asarray(quar).sum())
+    return counters
 
 
 def run_end_payload(*, rounds: int, wall_time_s: float,

@@ -110,6 +110,20 @@ WATCHED: dict[str, tuple] = {
         Metric("grid.dispatches", "lower", rel_tol=0.0),
         Metric("pareto[0].acc_mean", "higher", abs_tol=0.10),
     ),
+    "bench_faults/v1": (
+        # quarantine counts under a fixed fault table are deterministic
+        # (the table is pre-drawn from the config seed): pin them EXACTLY
+        # by pairing a zero-band "lower" with a zero-band "higher" — any
+        # drift in either direction is a screen-semantics change, not
+        # noise.  Keys use "rate20"/"rate50" (no dots: the path grammar
+        # splits on ".").
+        Metric("quarantine_counts.rate20.greedyfed", "lower", rel_tol=0.0),
+        Metric("quarantine_counts.rate20.greedyfed", "higher", rel_tol=0.0),
+        Metric("quarantine_counts.rate50.greedyfed", "lower", rel_tol=0.0),
+        Metric("quarantine_counts.rate50.greedyfed", "higher", rel_tol=0.0),
+        # hardened-path overhead: wide latency band (CPU smoke timing)
+        Metric("overhead.us_per_round_on", "lower", rel_tol=0.75),
+    ),
 }
 
 _PATH_TOKEN = re.compile(r"([^.\[\]]+)|\[(\d+)\]")

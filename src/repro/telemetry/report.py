@@ -60,9 +60,11 @@ def summarize(events) -> list[dict]:
                 "sv_truncated_rounds": c["sv_truncated_rounds"],
                 "upload_mb": c["upload_bytes"] / 1e6,
                 "download_mb": c["download_bytes"] / 1e6,
+                "quarantined": c["quarantined"],
                 "taps": c["taps"],
                 "checkpoints": run.get("checkpoints", 0),
                 "segments": run.get("segments", 0),
+                "fault_events": run.get("fault_events", 0),
                 "wall_s": run.get("wall_time_s"),
                 "compile_s": run.get("compile_time_s"),
                 "execute_s": run.get("execute_time_s"),
@@ -73,7 +75,8 @@ def summarize(events) -> list[dict]:
     def _new_cell() -> dict:
         return {"rounds": 0, "final_acc": None, "utility_evals": 0,
                 "sv_truncated_rounds": 0, "upload_bytes": 0,
-                "download_bytes": 0, "taps": 0, "selector": None}
+                "download_bytes": 0, "quarantined": 0, "taps": 0,
+                "selector": None}
 
     for ev in events:
         kind = ev["event"]
@@ -81,10 +84,10 @@ def summarize(events) -> list[dict]:
             _flush()
             run = {"run_id": ev.get("run_id"), "kind": ev.get("kind"),
                    "selector": ev.get("selector"), "checkpoints": 0,
-                   "segments": 0}
+                   "segments": 0, "fault_events": 0}
         elif run is None:       # stream fragment without a run_start
             run = {"run_id": None, "kind": None, "selector": None,
-                   "checkpoints": 0, "segments": 0}
+                   "checkpoints": 0, "segments": 0, "fault_events": 0}
         if kind in ("round_metrics", "eval", "round_tap"):
             c = cells.setdefault(ev.get("cell"), _new_cell())
             if kind == "round_metrics":
@@ -93,6 +96,7 @@ def summarize(events) -> list[dict]:
                 c["sv_truncated_rounds"] += bool(ev.get("sv_truncated"))
                 c["upload_bytes"] += ev.get("upload_bytes", 0)
                 c["download_bytes"] += ev.get("download_bytes", 0)
+                c["quarantined"] += ev.get("quarantined", 0)
             elif kind == "eval":
                 c["final_acc"] = ev.get("test_acc")
             else:
@@ -101,6 +105,8 @@ def summarize(events) -> list[dict]:
             run["segments"] += 1
         elif kind == "checkpoint_save":
             run["checkpoints"] += 1
+        elif kind in ("checkpoint_corrupt", "segment_retry", "cell_failed"):
+            run["fault_events"] += 1
         elif kind == "run_end":
             for f in ("wall_time_s", "compile_time_s", "execute_time_s",
                       "rounds_per_sec"):
@@ -119,6 +125,7 @@ _COLUMNS = (
     ("cell", "cell"), ("rounds", "rounds"), ("final_acc", "acc"),
     ("utility_evals", "sv_evals"), ("sv_truncated_rounds", "sv_trunc"),
     ("upload_mb", "up_mb"), ("download_mb", "down_mb"),
+    ("quarantined", "quar"), ("fault_events", "faults"),
     ("segments", "segs"), ("checkpoints", "ckpts"),
     ("wall_s", "wall_s"), ("compile_s", "compile_s"),
     ("rounds_per_sec", "rounds/s"),

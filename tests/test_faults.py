@@ -1,0 +1,260 @@
+"""repro.faults (DESIGN.md §19): deterministic fault injection, the
+in-round quarantine screen, masked SV/aggregation, and the noise_level
+lift — identity off, containment on, stream parity across engines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import normalized_weights, weighted_average
+from repro.faults import (
+    CODE_CRASH, CODE_NAN, CODE_NONE, CODE_SIGN_FLIP, TINY_WEIGHT, FaultSpec,
+    apply_faults, draw_fault_table, harden_cohort,
+)
+from repro.federated.client import ClientConfig
+from repro.federated.server import FLConfig, run_federated, setup_run
+
+TINY = dict(n_clients=8, m=3, rounds=6, n_train=600, n_val=100, n_test=100,
+            eval_every=3,
+            client=ClientConfig(epochs=2, batches_per_epoch=2, batch_size=16))
+
+FAULTS = FaultSpec(rate=0.4, kinds=("nan", "sign_flip", "crash"), scale=10.0)
+
+
+def _base(**kw):
+    kw = dict(selector="greedyfed", engine="scan", shapley_max_iters=10,
+              **TINY) | kw
+    return FLConfig(**kw)
+
+
+def _flat(params):
+    return np.concatenate([np.ravel(np.asarray(l))
+                           for l in jax.tree.leaves(params)])
+
+
+def _assert_bitwise(a, b):
+    assert len(a.selections) == len(b.selections)
+    for t, (sa, sb) in enumerate(zip(a.selections, b.selections)):
+        np.testing.assert_array_equal(sa, sb, err_msg=f"round {t}")
+    np.testing.assert_array_equal(_flat(a.params), _flat(b.params))
+    np.testing.assert_array_equal(np.asarray(a.sv_final),
+                                  np.asarray(b.sv_final))
+
+
+# ------------------------------------------------------------- the table --
+def test_fault_table_deterministic_gated_and_bounded():
+    spec = FaultSpec(rate=0.5, kinds=("nan", "crash"), start_round=3)
+    t1 = draw_fault_table(spec, 10, 16, np.random.default_rng(7))
+    t2 = draw_fault_table(spec, 10, 16, np.random.default_rng(7))
+    np.testing.assert_array_equal(t1, t2)
+    assert t1.shape == (10, 16) and t1.dtype == np.int32
+    # start_round zeroes the prefix; codes only from the declared kinds
+    assert (t1[:3] == CODE_NONE).all()
+    assert set(np.unique(t1)) <= {CODE_NONE, CODE_NAN, CODE_CRASH}
+    assert (t1[3:] != CODE_NONE).any()
+    # rate 0 never fires, but consumes the same two rng draws
+    rng_a, rng_b = np.random.default_rng(7), np.random.default_rng(7)
+    zero = draw_fault_table(FaultSpec(rate=0.0), 10, 16, rng_a)
+    draw_fault_table(spec, 10, 16, rng_b)
+    assert (zero == CODE_NONE).all()
+    assert rng_a.random() == rng_b.random()   # stream position identical
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(kinds=("gremlin",)).validate()
+    with pytest.raises(ValueError):
+        FaultSpec(kinds=()).validate()
+    with pytest.raises(ValueError):
+        FaultSpec(rate=1.5).validate()
+    with pytest.raises(ValueError):
+        FaultSpec(start_round=-1).validate()
+
+
+def test_rng_stream_unchanged_by_fault_gating():
+    """The fault-table draw sits strictly after every existing draw and is
+    gated on `faults is not None`: a faulty config reproduces the exact
+    host stream (fractions/sigma/epochs) of its fault-free twin."""
+    plain = setup_run(_base())
+    faulty = setup_run(_base(faults=FAULTS))
+    np.testing.assert_array_equal(plain.fractions, faulty.fractions)
+    np.testing.assert_array_equal(plain.sigma_k_all, faulty.sigma_k_all)
+    assert plain.fault_table is None
+    assert faulty.fault_table.shape == (TINY["rounds"], TINY["n_clients"])
+
+
+# ------------------------------------------------- hardening (unit level) --
+def test_apply_faults_untouched_rows_bitwise():
+    key = jax.random.key(0)
+    p = {"w": jax.random.normal(key, (4, 3))}
+    w = {"w": p["w"][None] + 0.1 * jax.random.normal(key, (5, 4, 3))}
+    codes = jnp.asarray([CODE_NONE, CODE_NAN, CODE_SIGN_FLIP, CODE_CRASH,
+                         CODE_NONE], jnp.int32)
+    out = apply_faults(w, p, codes, 10.0)["w"]
+    # code-0 and CRASH rows pass through bitwise; NaN rows are poisoned;
+    # sign-flip rows are the scaled mirror delta
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(w["w"][0]))
+    np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(w["w"][3]))
+    np.testing.assert_array_equal(np.asarray(out[4]), np.asarray(w["w"][4]))
+    assert np.isnan(np.asarray(out[1])).all()
+    np.testing.assert_allclose(
+        np.asarray(out[2]),
+        np.asarray(p["w"] - 10.0 * (w["w"][2] - p["w"])), rtol=1e-6)
+
+
+def test_harden_cohort_masks_and_tiny_weight_absorbs():
+    key = jax.random.key(1)
+    p = {"w": jax.random.normal(key, (4,))}
+    w = {"w": p["w"][None] + 0.05 * jax.random.normal(key, (3, 4))}
+    n_k = jnp.asarray([10.0, 20.0, 30.0])
+    codes = jnp.asarray([CODE_NONE, CODE_NAN, CODE_NONE], jnp.int32)
+    h = harden_cohort(w, p, n_k, codes,
+                      faults=FaultSpec(kinds=("nan",)), quarantine=True,
+                      z=8.0)
+    np.testing.assert_array_equal(np.asarray(h.ok), [True, False, True])
+    assert int(h.quarantined) == 1
+    # quarantined row substituted by w_prev, weights masked
+    np.testing.assert_array_equal(np.asarray(h.stacked["w"][1]),
+                                  np.asarray(p["w"]))
+    np.testing.assert_array_equal(np.asarray(h.n_k_agg), [10.0, 0.0, 30.0])
+    assert float(h.n_k_sv[1]) == TINY_WEIGHT
+    # the SV-weight scheme: a TINY_WEIGHT row sharing a prefix with any
+    # honest weight >= 1 is absorbed exactly in f32 — the prefix average
+    # is bitwise as if the quarantined row were absent
+    two = {"w": jnp.stack([w["w"][0], p["w"]])}
+    with_tiny = weighted_average(
+        two, normalized_weights(jnp.asarray([10.0, TINY_WEIGHT])))
+    alone = weighted_average(
+        {"w": w["w"][:1]}, normalized_weights(jnp.asarray([10.0])))
+    np.testing.assert_array_equal(np.asarray(with_tiny["w"]),
+                                  np.asarray(alone["w"]))
+
+
+def test_harden_cohort_static_passthrough():
+    w = {"w": jnp.ones((2, 3))}
+    p = {"w": jnp.zeros((3,))}
+    n_k = jnp.asarray([1.0, 2.0])
+    h = harden_cohort(w, p, n_k, jnp.zeros((2,), jnp.int32),
+                      faults=None, quarantine=False, z=8.0)
+    assert h.stacked["w"] is w["w"] and h.n_k_agg is n_k and h.n_k_sv is n_k
+
+
+# ------------------------------------------------------ e2e: identity off --
+@pytest.mark.parametrize("engine", ["loop", "batched", "scan"])
+def test_quarantine_on_clean_run_bitwise_identical(engine):
+    """The §19 identity contract: compiling the hardened path in but never
+    firing it leaves selections/params/sv/eval curves bit-identical."""
+    plain = run_federated(_base(engine=engine))
+    hard = run_federated(_base(engine=engine, quarantine=True))
+    _assert_bitwise(plain, hard)
+    assert hard.quarantined_total == 0
+    assert [a for _, a in plain.test_acc] == [a for _, a in hard.test_acc]
+    assert plain.upload_bytes == hard.upload_bytes
+
+
+# --------------------------------------------------- e2e: containment on --
+def test_nan_storm_poisons_unscreened_and_is_quarantined_screened():
+    """rate=1.0 nan faults: without the screen the model is destroyed;
+    with it every faulty row is masked, every round degenerates to
+    w_prev, and the params stay bitwise at their init."""
+    storm = FaultSpec(rate=1.0, kinds=("nan",))
+    poisoned = run_federated(_base(faults=storm, quarantine=False))
+    assert not np.isfinite(_flat(poisoned.params)).all()
+    clean = run_federated(_base(faults=storm, quarantine=True))
+    assert np.isfinite(_flat(clean.params)).all()
+    assert clean.quarantined_total == TINY["rounds"] * TINY["m"]
+    np.testing.assert_array_equal(_flat(clean.params),
+                                  _flat(setup_run(_base()).params))
+    # quarantined clients never enter the byte ledger
+    assert clean.upload_bytes == 0
+    # and never reach the SV walks: the masked rounds contribute zero
+    np.testing.assert_array_equal(np.asarray(clean.sv_final),
+                                  np.zeros(TINY["n_clients"], np.float32))
+
+
+def test_crash_faults_mask_without_screen():
+    """CRASH rows (mid-round dropout) are masked by the fault code alone —
+    no quarantine screen needed, payloads never aggregated."""
+    crash = FaultSpec(rate=1.0, kinds=("crash",))
+    res = run_federated(_base(faults=crash, quarantine=False))
+    assert res.quarantined_total == TINY["rounds"] * TINY["m"]
+    assert res.upload_bytes == 0
+    np.testing.assert_array_equal(_flat(res.params),
+                                  _flat(setup_run(_base()).params))
+
+
+def test_byzantine_sign_flip_screened():
+    """Scaled sign-flip updates are finite, so only the norm screen can
+    catch them.  A median screen is only sound against a cohort MINORITY
+    (a byzantine majority owns the median — m=3 can hide 2 fired rows),
+    so the guarantee under test is: every fired row in a minority-fired
+    round is quarantined."""
+    byz = FaultSpec(rate=0.3, kinds=("sign_flip",), scale=10.0)
+    cfg = _base(faults=byz, quarantine=True)
+    res = run_federated(cfg)
+    table = setup_run(cfg).fault_table
+    fired = [int((table[t][np.asarray(sel)] != CODE_NONE).sum())
+             for t, sel in enumerate(res.selections)]
+    minority = sum(f for f in fired if f <= (TINY["m"] - 1) // 2)
+    assert minority > 0
+    assert res.quarantined_total >= minority
+    assert np.isfinite(_flat(res.params)).all()
+
+
+@pytest.mark.parametrize("engine", ["loop", "batched"])
+def test_engine_parity_under_faults(engine):
+    """All engines read the same pre-drawn table and run the same
+    hardening ops: streams and ledgers identical under injected faults."""
+    scan = run_federated(_base(faults=FAULTS, quarantine=True))
+    other = run_federated(_base(engine=engine, faults=FAULTS,
+                                quarantine=True))
+    _assert_bitwise(scan, other)
+    assert scan.quarantined_total == other.quarantined_total
+    assert scan.upload_bytes == other.upload_bytes
+
+
+def test_grid_with_faults_matches_solo_and_telemetry_counts():
+    from repro.grid import GridSpec, run_grid
+    from repro.telemetry import Telemetry, validate_events
+
+    cfg = _base(faults=FAULTS, quarantine=True)
+    solo = run_federated(cfg)
+    tel = Telemetry()
+    grid = run_grid(GridSpec.product(cfg, selectors=["greedyfed", "random"],
+                                     seeds=[0]), telemetry=tel)
+    cell = grid.cell("greedyfed", 0)
+    _assert_bitwise(solo, cell)
+    assert cell.quarantined_total == solo.quarantined_total
+    validate_events(tel.events)
+    # the authoritative round_metrics stream carries the per-round counts
+    emitted = sum(ev.get("quarantined", 0) for ev in tel.events
+                  if ev["event"] == "round_metrics")
+    assert emitted == solo.quarantined_total + \
+        grid.cell("random", 0).quarantined_total
+
+
+# ------------------------------------------------- satellite: noise_level --
+def test_noise_level_zero_is_bitwise_default():
+    """noise_level=0 is gated out of the rng stream entirely."""
+    _assert_bitwise(run_federated(_base()),
+                    run_federated(_base(noise_level=0.0)))
+
+
+def test_noise_level_perturbs_and_grid_axis_matches_solo():
+    from repro.grid import GridCell, GridSpec, run_grid
+
+    cfg = _base(selector="fedavg", noise_level=0.2)
+    noisy = run_federated(cfg)
+    plain = run_federated(_base(selector="fedavg"))
+    assert not np.array_equal(_flat(noisy.params), _flat(plain.params))
+    # sigma fold is on the host table: per-client noise is heterogeneous
+    s = setup_run(cfg)
+    assert len(np.unique(s.sigma_k_all)) > 1
+    # noise_level is a grid axis (per-cell sigma operand, not jit-static)
+    grid = run_grid(GridSpec(_base(selector="fedavg"), (
+        GridCell("fedavg", 0),
+        GridCell("fedavg", 0, overrides={"noise_level": 0.2}))))
+    _assert_bitwise(plain, grid.results[0])
+    _assert_bitwise(noisy, grid.results[1])

@@ -330,3 +330,65 @@ def test_grid_result_accessors():
     assert 0.0 <= mean <= 1.0 and std >= 0.0
     with pytest.raises(KeyError):
         grid.cell("ucb", 0)
+
+
+# -------------------------------------------------- §19 cell isolation --
+def test_failing_partition_degrades_not_kills(monkeypatch):
+    """A raising partition becomes per-cell CellFailure entries; the
+    OTHER partitions' cells still run and stay bit-identical to solo."""
+    import repro.grid.runner as runner
+    from repro.grid import CellFailure
+    from repro.telemetry import Telemetry, validate_events
+
+    real = runner.run_segments
+
+    def sabotage(model, ccfg, scan_spec, batch, **kw):
+        if kw.get("tag") == "p0-":           # first partition only
+            raise RuntimeError("injected partition failure")
+        return real(model, ccfg, scan_spec, batch, **kw)
+
+    monkeypatch.setattr(runner, "run_segments", sabotage)
+    base = _base()
+    # greedyfed (needs_sv) and fedavg land in different partitions
+    spec = GridSpec(base, (GridCell("greedyfed", 0), GridCell("fedavg", 0)))
+    tel = Telemetry()
+    grid = run_grid(spec, telemetry=tel)
+    assert len(grid.failures) == 1
+    fail = grid.failures[0]
+    assert isinstance(fail, CellFailure)
+    assert "injected partition failure" in fail.error
+    assert "RuntimeError" in fail.traceback
+    assert np.isnan(fail.final_acc) and fail.upload_bytes == 0
+    # the surviving cell is untouched by its neighbour's failure
+    survivor = [r for r in grid.results
+                if not isinstance(r, CellFailure)]
+    assert len(survivor) == 1
+    solo = run_federated(dataclasses.replace(base, selector="fedavg"))
+    _assert_bitwise(solo, survivor[0])
+    # acc_summary skips failures; cell_failed is on the event stream
+    assert set(grid.acc_summary()) == {"fedavg"}
+    validate_events(tel.events)
+    failed_evs = [ev for ev in tel.events if ev["event"] == "cell_failed"]
+    assert len(failed_evs) == 1 and failed_evs[0]["cell"] == fail.cell
+
+
+def test_isolation_opt_out_raises(monkeypatch):
+    import repro.grid.runner as runner
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected partition failure")
+
+    monkeypatch.setattr(runner, "run_segments", boom)
+    spec = GridSpec.product(_base(selector="fedavg"), seeds=(0,))
+    with pytest.raises(RuntimeError, match="injected"):
+        run_grid(spec, isolate_cells=False)
+
+
+def test_invalid_grid_still_raises_before_isolation():
+    """Pre-dispatch validation (static-field mismatch) is a programming
+    error, not a cell fault: it must raise even with isolation on."""
+    spec = GridSpec(_base(selector="fedavg"), (
+        GridCell("fedavg", 0),
+        GridCell("fedavg", 1, overrides={"n_clients": 16})))
+    with pytest.raises(ValueError, match="jit-static"):
+        run_grid(spec, isolate_cells=True)
